@@ -1,0 +1,65 @@
+//! Live-mode demo (paper Fig. 6): start the central controller with
+//! simulated A100s on a TCP port, submit a burst of jobs from a client
+//! connection, and watch the cluster profile, partition, and drain — in
+//! accelerated wall-clock time.
+//!
+//! Run: `cargo run --release --example live_serve`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn send(addr: std::net::SocketAddr, cmd: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    writeln!(stream, "{cmd}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(line.trim().to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    // 2 simulated GPUs, virtual time at 120x wall-clock.
+    let server = miso::server::start(0, 2, 120.0)?;
+    let addr = server.addr();
+    println!("MISO live controller listening on {addr} (2 GPUs, time x120)\n");
+
+    // Submit a burst: heavy CNN training + light models that co-locate well.
+    let submissions = [
+        "SUBMIT ResNet50 1 240",
+        "SUBMIT Embedding 0 180",
+        "SUBMIT MobileNet 0 120",
+        "SUBMIT GraphNN 1 200",
+        "SUBMIT BERT 0 240",
+    ];
+    for s in &submissions {
+        let reply = send(addr, s)?;
+        println!("> {s}\n  {reply}");
+    }
+
+    // Poll the cluster until everything drains.
+    println!("\npolling cluster state:");
+    loop {
+        std::thread::sleep(Duration::from_millis(500));
+        let status = send(addr, "STATUS")?;
+        let parsed = miso::util::json::parse(&status)?;
+        let now = parsed.req_f64("now_s")?;
+        let live = parsed.req_f64("live_jobs")?;
+        let stp = parsed.req_f64("instant_stp")?;
+        println!("  t={now:>6.0}s  live={live}  instant STP={stp:.2}");
+        if live == 0.0 {
+            break;
+        }
+    }
+
+    println!("\nfinal job states:");
+    let jobs = send(addr, "JOBS")?;
+    println!("  {jobs}");
+    let metrics = send(addr, "METRICS")?;
+    println!("\nmetrics: {metrics}");
+
+    server.shutdown();
+    println!("\nserver shut down cleanly");
+    Ok(())
+}

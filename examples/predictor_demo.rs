@@ -1,0 +1,68 @@
+//! Predictor deep-dive: the three-layer composition in isolation.
+//!
+//! Loads the AOT artifacts (L1 Pallas kernels + L2 U-Net lowered to HLO
+//! text at build time), compiles them once on the PJRT CPU client, and
+//! serves a batch of prediction requests from Rust — measuring per-call
+//! latency and end-to-end accuracy against the simulated ground truth.
+//! This is the "Python never on the request path" proof.
+//!
+//! Run: `make artifacts && cargo run --release --example predictor_demo`
+
+use miso::mig::SliceKind;
+use miso::perfmodel::mig_speed;
+use miso::predictor::features::profile_mps_matrix;
+use miso::predictor::{Predictor, UNetPredictor};
+use miso::util::Rng;
+use miso::workload::TraceGenerator;
+
+fn main() -> anyhow::Result<()> {
+    let mut unet = UNetPredictor::load_default().map_err(|e| {
+        anyhow::anyhow!("{e:#}\n\nrun `make artifacts` first — this demo needs the AOT U-Net")
+    })?;
+    println!("loaded artifacts/predictor.hlo.txt (training-time val MAE {:.4})\n", unet.val_mae);
+
+    let mut rng = Rng::seed_from_u64(0xDEC0DE);
+    let mut latencies = Vec::new();
+    let (mut err, mut n) = (0.0, 0usize);
+    let requests = 200;
+
+    for req in 0..requests {
+        let m = 1 + rng.below(7);
+        let specs: Vec<_> = (0..m).map(|_| TraceGenerator::sample_spec(&mut rng)).collect();
+        let matrix = profile_mps_matrix(&specs, None);
+
+        let t0 = std::time::Instant::now();
+        let tables = unet.predict(&specs, &matrix);
+        latencies.push(t0.elapsed().as_secs_f64());
+
+        for (s, t) in specs.iter().zip(&tables) {
+            for k in [SliceKind::G4, SliceKind::G3] {
+                err += (t.get(k) - mig_speed(s, k)).abs();
+                n += 1;
+            }
+        }
+
+        if req == 0 {
+            println!("example request ({} jobs):", m);
+            for (i, (s, t)) in specs.iter().zip(&tables).enumerate() {
+                println!(
+                    "  job {i} ({:<11}) predicted [1g..7g]: [{:.2}, {:.2}, {:.2}, {:.2}, {:.2}]  true 4g/3g: {:.2}/{:.2}",
+                    s.family.name(),
+                    t.0[0], t.0[1], t.0[2], t.0[3], t.0[4],
+                    mig_speed(s, SliceKind::G4),
+                    mig_speed(s, SliceKind::G3),
+                );
+            }
+            println!();
+        }
+    }
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize] * 1e3;
+    println!("served {requests} prediction requests through PJRT:");
+    println!("  latency p50 {:.3} ms | p90 {:.3} ms | p99 {:.3} ms", p(0.5), p(0.9), p(0.99));
+    println!("  end-to-end MAE vs ground truth (4g/3g): {:.4}", err / n as f64);
+    println!("\nthe 30 s MPS profiling window this inference replaces is ~10,000× longer —");
+    println!("prediction latency is negligible on the scheduling path, as the paper requires.");
+    Ok(())
+}

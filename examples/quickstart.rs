@@ -1,0 +1,89 @@
+//! Quickstart: the MISO pipeline on one GPU, one job mix.
+//!
+//! Walks the exact runtime flow of the paper's Fig. 6/7/9 for a 3-job mix:
+//!   1. profile the co-located mix under MPS (3 active-thread levels),
+//!   2. translate the MPS matrix into per-job MIG speedup tables
+//!      (the trained U-Net via PJRT if `make artifacts` has run,
+//!      otherwise the paper-accuracy noise model),
+//!   3. run Algorithm 1 to pick the optimal MIG partition,
+//!   4. compare the chosen partition's STP against the alternatives.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use miso::optimizer::optimize;
+use miso::perfmodel::{mig_speed, system_throughput};
+use miso::predictor::features::profile_mps_matrix;
+use miso::predictor::{mask_infeasible, NoisyPredictor, Predictor, UNetPredictor};
+use miso::workload::{Job, ModelFamily, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    // --- a job mix: a CNN, a word-embedding model, and a small MLP ---
+    let specs = [
+        WorkloadSpec::new(ModelFamily::ResNet50, 1, (0.0, 0.0)),
+        WorkloadSpec::new(ModelFamily::Embedding, 1, (0.0, 0.0)),
+        WorkloadSpec::mlp(),
+    ];
+    let jobs: Vec<Job> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Job::new(i as u64, s, 0.0, 600.0))
+        .collect();
+    println!("job mix:");
+    for j in &jobs {
+        println!(
+            "  {}: {} (batch {}, {:.1} GB footprint)",
+            j.id,
+            j.spec.family.name(),
+            j.spec.batch_size,
+            j.spec.mem_mb / 1000.0
+        );
+    }
+
+    // --- 1. MPS profiling: the 3x7 matrix (paper Fig. 8) ---
+    let matrix = profile_mps_matrix(&specs, None);
+    println!("\nMPS profile matrix (rows = 100/50/14% active threads):");
+    for (r, label) in ["100%", " 50%", " 14%"].iter().enumerate() {
+        let row: Vec<String> = (0..7).map(|c| format!("{:.2}", matrix.data[r][c])).collect();
+        println!("  {label}  [{}]", row.join(", "));
+    }
+
+    // --- 2. MPS -> MIG translation ---
+    let mut predictor: Box<dyn Predictor> = match UNetPredictor::load_default() {
+        Ok(p) => {
+            println!("\npredictor: trained U-Net via PJRT (val MAE {:.4})", p.val_mae);
+            Box::new(p)
+        }
+        Err(_) => {
+            println!("\npredictor: paper-accuracy noise model (run `make artifacts` for the U-Net)");
+            Box::new(NoisyPredictor::paper_accuracy(7))
+        }
+    };
+    let mut tables = predictor.predict(&specs, &matrix);
+    for (t, j) in tables.iter_mut().zip(&jobs) {
+        mask_infeasible(t, j);
+    }
+    println!("predicted MIG speedup tables (1g/2g/3g/4g/7g; 0 = does not fit):");
+    for (j, t) in jobs.iter().zip(&tables) {
+        println!(
+            "  {}: [{:.2}, {:.2}, {:.2}, {:.2}, {:.2}]",
+            j.id, t.0[0], t.0[1], t.0[2], t.0[3], t.0[4]
+        );
+    }
+
+    // --- 3. Algorithm 1 ---
+    let plan = optimize(&tables).expect("a feasible partition exists");
+    println!("\nAlgorithm 1 chose partition {} (predicted STP {:.3}):", plan.config, plan.objective);
+    for (i, j) in jobs.iter().enumerate() {
+        println!("  {} -> {}", j.id, plan.slice_for(i));
+    }
+
+    // --- 4. ground-truth check against alternatives ---
+    let achieved: Vec<f64> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| mig_speed(&j.spec, plan.slice_for(i)))
+        .collect();
+    println!("\nachieved STP on the simulated A100: {:.3}", system_throughput(&achieved));
+    println!("(sequential execution = 1.0; the gain is the co-location win)");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+"""AOT export: lower the trained U-Net (Pallas path) to HLO **text** for
+the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser on the Rust
+side reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Pipeline (invoked by `make artifacts`):
+  1. `repro gen-data`  -> data/mixes.jsonl      (Rust ground-truth model)
+  2. `compile.train`   -> weights.bin, manifest.json
+  3. this module       -> predictor.hlo.txt     (jit(infer).lower -> stablehlo
+                                                 -> XlaComputation -> text)
+  4. self-check: execute the lowered graph via jax and compare against the
+     pure-jnp reference path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_predictor(params):
+    """Lower `model.infer` (input + weights as runtime args) to HLO text."""
+    x_spec = jax.ShapeDtypeStruct((1, model.ROWS, model.COLS, 1), jnp.float32)
+    param_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in model.PARAM_SPECS
+    ]
+    assert len(param_specs) == len(params)
+    lowered = jax.jit(model.infer).lower(x_spec, *param_specs)
+    return to_hlo_text(lowered)
+
+
+def self_check(params, n=16, tol=2e-5):
+    """Pallas inference path vs the pure-jnp training path on random inputs."""
+    rng = np.random.default_rng(7)
+    worst = 0.0
+    for _ in range(n):
+        x = rng.uniform(0.05, 1.0, size=(model.ROWS, model.COLS)).astype(np.float32)
+        got = model.infer(jnp.asarray(x).reshape(1, model.ROWS, model.COLS, 1), *params)[0]
+        want = model.apply_single(params, jnp.asarray(x), use_kernels=False)
+        worst = max(worst, float(jnp.max(jnp.abs(got.reshape(3, 7) - want))))
+    if worst > tol:
+        raise AssertionError(f"Pallas/ref parity check failed: max abs diff {worst}")
+    return worst
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--data", default="../data/mixes.jsonl")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"[aot] training predictor on {args.data} ...")
+    params, val_mae, linreg = train.train(
+        args.data, epochs=args.epochs, seed=args.seed
+    )
+    print(f"[aot] validation MAE {val_mae:.4f} (paper: 0.017)")
+    train.export(params, val_mae, linreg, args.out_dir)
+
+    print("[aot] lowering Pallas inference graph to HLO text ...")
+    hlo = lower_predictor(params)
+    out_path = os.path.join(args.out_dir, "predictor.hlo.txt")
+    with open(out_path, "w") as f:
+        f.write(hlo)
+    print(f"[aot] wrote {len(hlo)} chars to {out_path}")
+
+    diff = self_check(params)
+    print(f"[aot] Pallas/ref parity OK (max abs diff {diff:.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas convolution kernels for the U-Net predictor.
+
+All three convolution shapes the model needs are expressed as im2col /
+col2im reshapes around the single fused-matmul kernel (`matmul.matmul`),
+so the entire network lowers into MXU matmul tiles:
+
+* `conv2x2s2`  — the encoder's 2x2 stride-(2,2) convolution. With kernel
+  == stride the patches are disjoint, so im2col is a pure reshape (no
+  duplication) and the HBM->VMEM traffic is exactly one read of the input.
+* `tconv2x2s2` — the decoder's transpose convolution. Kernel == stride
+  means no output overlap: one matmul then a scatter-free reshape.
+* `conv1x1`    — the center/output projections: a plain matmul over the
+  flattened spatial grid.
+
+The reshapes happen at the JAX level (XLA fuses them into the kernel's
+operand layouts); the arithmetic — and the fused bias + activation
+epilogue — all run inside the Pallas kernel.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def conv2x2s2(x, w, b, *, activation="relu"):
+    """2x2 stride-2 'valid' conv: (H, W, C) -> (H/2, W/2, F)."""
+    h, wd, c = x.shape
+    assert h % 2 == 0 and wd % 2 == 0, "conv2x2s2 needs even spatial dims"
+    patches = x.reshape(h // 2, 2, wd // 2, 2, c).transpose(0, 2, 1, 3, 4)
+    cols = patches.reshape(h // 2 * (wd // 2), 4 * c)
+    wcol = w.reshape(4 * c, -1)
+    out = matmul(cols, wcol, b, activation=activation)
+    return out.reshape(h // 2, wd // 2, -1)
+
+
+def tconv2x2s2(x, w, b, *, activation="relu"):
+    """2x2 stride-2 transpose conv: (H, W, C) -> (2H, 2W, F)."""
+    h, wd, c = x.shape
+    f = w.shape[-1]
+    wcol = w.transpose(2, 0, 1, 3).reshape(c, 4 * f)
+    out = matmul(x.reshape(h * wd, c), wcol, jnp.tile(b, 4), activation=activation)
+    out = out.reshape(h, wd, 2, 2, f).transpose(0, 2, 1, 3, 4)
+    return out.reshape(2 * h, 2 * wd, f)
+
+
+def conv1x1(x, w, b, *, activation="none"):
+    """1x1 conv / pointwise projection: (H, W, C) -> (H, W, F)."""
+    h, wd, c = x.shape
+    out = matmul(x.reshape(h * wd, c), w, b, activation=activation)
+    return out.reshape(h, wd, -1)

@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: tiled matmul with a fused bias + activation epilogue.
+
+This is the compute hot-spot of the MISO performance predictor: every layer
+of the U-Net (2x2/stride-2 convolutions, their transposes, and the 1x1
+projections) is expressed as im2col followed by this kernel, so the whole
+network lowers into a handful of MXU-shaped matmul tiles.
+
+TPU mental model (DESIGN.md §Hardware-Adaptation): the grid walks
+(M, N, K) tiles; each program multiplies a VMEM-resident (bm, bk) x (bk, bn)
+block pair on the MXU, accumulates in f32 into the revisited output tile,
+and applies the bias + activation epilogue in-register on the last K step —
+the fusion a CUDA version would hand-schedule across a threadblock's
+shared-memory tiles. BlockSpec expresses the HBM<->VMEM schedule.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO (see /opt/xla-example/README.md). Correctness is pinned against
+the pure-jnp oracle in `ref.py` by `python/tests/test_kernel.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes. 128 matches the MXU systolic-array edge; the
+# predictor's matrices are far smaller, so a single tile usually covers the
+# whole problem and the grid degenerates to (1, 1, 1) — the fused epilogue
+# is the win there, not the tiling.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+ACTIVATIONS = ("none", "relu", "sigmoid")
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, *, activation, n_k):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk).
+
+    The output tile is revisited across the K grid dimension (its index map
+    ignores k), so it doubles as the f32 accumulator — no scratch needed.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped partial product, accumulated in f32.
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "sigmoid":
+            acc = jax.nn.sigmoid(acc)
+        o_ref[...] = acc
+
+
+def _pad_to(x, multiple, axis):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block"))
+def matmul(x, y, bias=None, *, activation="none", block=(BLOCK_M, BLOCK_N, BLOCK_K)):
+    """`activation(x @ y + bias)` as a Pallas kernel.
+
+    x: (M, K), y: (K, N), bias: (N,) or None. Operands are zero-padded up
+    to tile multiples and the result is sliced back to (M, N).
+    Accumulation is in f32; the result is f32.
+    """
+    assert x.ndim == 2 and y.ndim == 2, "matmul expects rank-2 operands"
+    assert x.shape[1] == y.shape[0], f"inner dims differ: {x.shape} @ {y.shape}"
+    assert activation in ACTIVATIONS, f"unknown activation '{activation}'"
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(block[0], _tile(m))
+    bn = min(block[1], _tile(n))
+    bk = min(block[2], _tile(k))
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.float32), bk, 0), bn, 1)
+    b = bias if bias is not None else jnp.zeros((n,), jnp.float32)
+    bp = _pad_to(b.astype(jnp.float32), bn, 0)
+
+    grid = (xp.shape[0] // bm, yp.shape[1] // bn, xp.shape[1] // bk)
+    kernel = functools.partial(_matmul_kernel, activation=activation, n_k=grid[2])
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[1]), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp, bp)
+
+    return out[:m, :n]
+
+
+def _tile(v):
+    """Round tiny dims up to 8 so padded tiles stay sublane-aligned."""
+    return max(8, v)
+
+
+def vmem_footprint_bytes(m, k, n, block=(BLOCK_M, BLOCK_N, BLOCK_K)):
+    """Estimated VMEM bytes resident per grid step (DESIGN.md §Perf):
+    one x tile + one y tile + the f32 output/accumulator tile + bias."""
+    bm = min(block[0], _tile(m))
+    bn = min(block[1], _tile(n))
+    bk = min(block[2], _tile(k))
+    return 4 * (bm * bk + bk * bn + bm * bn + bn)

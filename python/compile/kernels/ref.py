@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: `python/tests/test_kernel.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these to float tolerance. They are also the *training-time* compute path
+(`model.apply(..., use_kernels=False)`) — autodiff runs through these,
+while the AOT-exported inference graph runs through the Pallas kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, bias=None, *, activation="none"):
+    """`activation(x @ y + bias)` — oracle for `matmul.matmul`."""
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    return out
+
+
+def conv2x2s2_ref(x, w, b, *, activation="relu"):
+    """2x2 stride-2 'valid' convolution — oracle for `conv.conv2x2s2`.
+
+    x: (H, W, C) with H, W even; w: (2, 2, C, F); b: (F,).
+    Returns (H/2, W/2, F).
+    """
+    h, wd, c = x.shape
+    assert h % 2 == 0 and wd % 2 == 0, "conv2x2s2 needs even spatial dims"
+    patches = x.reshape(h // 2, 2, wd // 2, 2, c).transpose(0, 2, 1, 3, 4)
+    cols = patches.reshape(h // 2 * (wd // 2), 4 * c)  # im2col
+    wcol = w.reshape(4 * c, -1)
+    out = matmul_ref(cols, wcol, b, activation=activation)
+    return out.reshape(h // 2, wd // 2, -1)
+
+
+def tconv2x2s2_ref(x, w, b, *, activation="relu"):
+    """2x2 stride-2 transpose convolution — oracle for `conv.tconv2x2s2`.
+
+    With kernel == stride there is no overlap: each input pixel expands to
+    an independent 2x2 output patch. x: (H, W, C); w: (2, 2, C, F);
+    returns (2H, 2W, F).
+    """
+    h, wd, c = x.shape
+    f = w.shape[-1]
+    wcol = w.transpose(2, 0, 1, 3).reshape(c, 4 * f)
+    out = matmul_ref(x.reshape(h * wd, c), wcol, jnp.tile(b, 4), activation=activation)
+    out = out.reshape(h, wd, 2, 2, f).transpose(0, 2, 1, 3, 4)
+    return out.reshape(2 * h, 2 * wd, f)
+
+
+def conv1x1_ref(x, w, b, *, activation="none"):
+    """1x1 convolution (pointwise projection) — oracle for `conv.conv1x1`.
+
+    x: (H, W, C); w: (C, F); b: (F,). Returns (H, W, F).
+    """
+    h, wd, c = x.shape
+    out = matmul_ref(x.reshape(h * wd, c), w, b, activation=activation)
+    return out.reshape(h, wd, -1)

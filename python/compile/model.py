@@ -1,0 +1,114 @@
+"""Layer-2: the MISO MPS->MIG performance predictor in JAX (paper Sec. 4.1).
+
+A lightweight U-Net-style convolutional autoencoder (paper Fig. 7):
+
+    input  1x3x7x1  (3 MPS levels x 7 job columns, dummy-padded, (0,1])
+      pad -> 4x8x1                       (stride-2 downsampling well-defined)
+    enc1:  conv 2x2 s2, 32 filters, relu   -> 2x4x32   (skip)
+    enc2:  conv 2x2 s2, 64 filters, relu   -> 1x2x64
+    center: conv 1x1, 256 filters, relu    -> 1x2x256
+    dec1:  tconv 2x2 s2, 64 filters, relu  -> 2x4x64  ++ skip enc1 -> 2x4x96
+    dec2:  tconv 2x2 s2, 32 filters, relu  -> 4x8x32  ++ skip input -> 4x8x33
+    out:   conv 1x1, 1 filter, sigmoid     -> 4x8x1
+      crop -> 3x7  (speeds on {7g, 4g, 3g} per job column, in (0,1))
+
+Two equivalent compute paths:
+
+* `use_kernels=True`  — every conv runs through the Layer-1 Pallas kernels
+  (`kernels.conv`), so the AOT export lowers the whole model into fused
+  matmul tiles. This is the graph `aot.py` ships to the Rust runtime.
+* `use_kernels=False` — the pure-jnp oracles (`kernels.ref`); used for
+  training (autodiff) and as the parity reference in tests.
+
+`python/tests/test_model.py` asserts the two paths agree to float
+tolerance, which transitively validates the exported HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import ref as kref
+
+ROWS, COLS = 3, 7
+PAD_H, PAD_W = 4, 8
+
+# (name, shape) of every parameter, in argument order — the manifest order
+# shared with the Rust runtime (weights.bin is concatenated in this order).
+PARAM_SPECS = [
+    ("enc1_w", (2, 2, 1, 32)),
+    ("enc1_b", (32,)),
+    ("enc2_w", (2, 2, 32, 64)),
+    ("enc2_b", (64,)),
+    ("center_w", (64, 256)),
+    ("center_b", (256,)),
+    ("dec1_w", (2, 2, 256, 64)),
+    ("dec1_b", (64,)),
+    ("dec2_w", (2, 2, 96, 32)),
+    ("dec2_b", (32,)),
+    ("out_w", (33, 1)),
+    ("out_b", (1,)),
+]
+
+
+def init_params(key):
+    """He-initialized parameter list (same order as PARAM_SPECS)."""
+    params = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _ops(use_kernels):
+    if use_kernels:
+        return kconv.conv2x2s2, kconv.tconv2x2s2, kconv.conv1x1
+    return kref.conv2x2s2_ref, kref.tconv2x2s2_ref, kref.conv1x1_ref
+
+
+def apply_single(params, x, *, use_kernels=False):
+    """Forward pass for one 3x7 matrix -> 3x7 prediction."""
+    conv, tconv, conv1 = _ops(use_kernels)
+    (e1w, e1b, e2w, e2b, cw, cb, d1w, d1b, d2w, d2b, ow, ob) = params
+
+    x = x.reshape(ROWS, COLS, 1)
+    xp = jnp.pad(x, ((0, PAD_H - ROWS), (0, PAD_W - COLS), (0, 0)))
+
+    e1 = conv(xp, e1w, e1b, activation="relu")          # 2x4x32
+    e2 = conv(e1, e2w, e2b, activation="relu")          # 1x2x64
+    c = conv1(e2, cw, cb, activation="relu")            # 1x2x256
+    d1 = tconv(c, d1w, d1b, activation="relu")          # 2x4x64
+    d1 = jnp.concatenate([d1, e1], axis=-1)             # 2x4x96 (skip)
+    d2 = tconv(d1, d2w, d2b, activation="relu")         # 4x8x32
+    d2 = jnp.concatenate([d2, xp], axis=-1)             # 4x8x33 (skip)
+    out = conv1(d2, ow, ob, activation="sigmoid")       # 4x8x1
+    return out[:ROWS, :COLS, 0]
+
+
+def apply_batch(params, xs, *, use_kernels=False):
+    """vmapped forward for a (B, 3, 7) batch (training path)."""
+    return jax.vmap(lambda x: apply_single(params, x, use_kernels=use_kernels))(xs)
+
+
+def infer(x, *params):
+    """The AOT-export entrypoint: (1, 3, 7, 1) input + flat params ->
+    a 1-tuple with the (1, 3, 7, 1) prediction. Runs the Pallas path."""
+    out = apply_single(list(params), x.reshape(ROWS, COLS), use_kernels=True)
+    return (out.reshape(1, ROWS, COLS, 1),)
+
+
+def mae_loss(params, xs, ys, *, use_kernels=False):
+    """Mean absolute error over the 3x7 region (the paper's training loss)."""
+    preds = apply_batch(params, xs, use_kernels=use_kernels)
+    return jnp.mean(jnp.abs(preds - ys))
+
+
+def num_params():
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in PARAM_SPECS)

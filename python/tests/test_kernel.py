@@ -1,0 +1,167 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin the exact layer shapes
+the U-Net uses. This is the core correctness signal for the exported HLO:
+the AOT graph is built from exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+from compile.kernels.matmul import matmul, vmem_footprint_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIM = st.integers(min_value=1, max_value=40)
+ACT = st.sampled_from(["none", "relu", "sigmoid"])
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.uniform(-2.0, 2.0, size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, act=ACT, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, y, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = matmul(x, y, b, activation=act)
+    want = ref.matmul_ref(x, y, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_matmul_no_bias(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16_inputs(seed):
+    """bf16 operands accumulate in f32 (the MXU mixed-precision contract)."""
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 9, 17).astype(jnp.bfloat16)
+    y = rand(rng, 17, 5).astype(jnp.bfloat16)
+    got = matmul(x, y)
+    want = ref.matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_multi_tile():
+    """Shapes spanning several (128, 128, 128) tiles exercise the K-loop
+    accumulation and the output-tile revisiting."""
+    rng = np.random.default_rng(0)
+    x, y, b = rand(rng, 200, 300), rand(rng, 300, 150), rand(rng, 150)
+    got = matmul(x, y, b, activation="relu")
+    want = ref.matmul_ref(x, y, b, activation="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_small_blocks():
+    """Explicit tiny blocks force a non-degenerate grid on small shapes."""
+    rng = np.random.default_rng(1)
+    x, y, b = rand(rng, 20, 24), rand(rng, 24, 12), rand(rng, 12)
+    got = matmul(x, y, b, activation="sigmoid", block=(8, 8, 8))
+    want = ref.matmul_ref(x, y, b, activation="sigmoid")
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    rng = np.random.default_rng(2)
+    with pytest.raises(AssertionError):
+        matmul(rand(rng, 3, 4), rand(rng, 5, 6))
+    with pytest.raises(AssertionError):
+        matmul(rand(rng, 3, 4), rand(rng, 4, 6), activation="tanh")
+
+
+def test_vmem_footprint_within_budget():
+    """The default tiling must stay far inside a TPU core's ~16 MiB VMEM
+    (DESIGN.md §Perf): 3 f32 tiles of 128x128 + bias = 192 KiB."""
+    assert vmem_footprint_bytes(4096, 4096, 4096) <= 256 * 1024
+    # and the actual model layers are tiny
+    assert vmem_footprint_bytes(8, 132, 128) <= 256 * 1024
+
+
+# ---------------------------------------------------------------- convs
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    w=st.integers(1, 6),
+    c=st.integers(1, 16),
+    f=st.integers(1, 16),
+    act=ACT,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2x2s2_matches_ref(h, w, c, f, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 2 * h, 2 * w, c)
+    wk, b = rand(rng, 2, 2, c, f), rand(rng, f)
+    got = conv.conv2x2s2(x, wk, b, activation=act)
+    want = ref.conv2x2s2_ref(x, wk, b, activation=act)
+    assert got.shape == (h, w, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    w=st.integers(1, 6),
+    c=st.integers(1, 16),
+    f=st.integers(1, 16),
+    act=ACT,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tconv2x2s2_matches_ref(h, w, c, f, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    wk, b = rand(rng, 2, 2, c, f), rand(rng, f)
+    got = conv.tconv2x2s2(x, wk, b, activation=act)
+    want = ref.tconv2x2s2_ref(x, wk, b, activation=act)
+    assert got.shape == (2 * h, 2 * w, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 8),
+    w=st.integers(1, 8),
+    c=st.integers(1, 32),
+    f=st.integers(1, 32),
+    act=ACT,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1x1_matches_ref(h, w, c, f, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    wk, b = rand(rng, c, f), rand(rng, f)
+    got = conv.conv1x1(x, wk, b, activation=act)
+    want = ref.conv1x1_ref(x, wk, b, activation=act)
+    assert got.shape == (h, w, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_requires_even_dims():
+    rng = np.random.default_rng(3)
+    with pytest.raises(AssertionError):
+        conv.conv2x2s2(rand(rng, 3, 4, 1), rand(rng, 2, 2, 1, 4), rand(rng, 4))
+
+
+def test_tconv_then_conv_roundtrip_shapes():
+    """Encoder/decoder shape inverses: conv(tconv(x)) preserves spatial dims."""
+    rng = np.random.default_rng(4)
+    x = rand(rng, 2, 4, 8)
+    up = conv.tconv2x2s2(x, rand(rng, 2, 2, 8, 4), rand(rng, 4))
+    down = conv.conv2x2s2(up, rand(rng, 2, 2, 4, 8), rand(rng, 8))
+    assert down.shape == x.shape

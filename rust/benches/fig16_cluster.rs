@@ -1,0 +1,48 @@
+//! Bench/regeneration: the Fig. 16 cluster-scale repetition study (40 GPUs,
+//! 1000 jobs, λ=10 s), timing one full trial per policy and printing a
+//! small-N violin summary. The full paper-scale run (1000 trials) is
+//! `repro experiment --id fig16 --trials 1000`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use miso::scheduler::{MisoPolicy, NoPartPolicy, OptStaPolicy};
+use miso::sim::run;
+use miso::util::Summary;
+use miso::workload::{TraceConfig, TraceGenerator};
+use miso::SystemConfig;
+
+fn main() {
+    let cfg = SystemConfig::cluster();
+    let ideal = SystemConfig { mig_reconfig_s: 0.0, checkpoint_s: 0.0, ..cfg.clone() };
+    let trace = TraceGenerator::new(TraceConfig::cluster(42)).generate();
+
+    section("single-trial cost at cluster scale (40 GPUs, 1000 jobs)");
+    bench("NoPart cluster trial", || run(&mut NoPartPolicy::new(), &trace, cfg.clone()));
+    bench("OptSta cluster trial", || {
+        run(&mut OptStaPolicy::abacus(), &trace, ideal.clone())
+    });
+    bench("MISO cluster trial", || run(&mut MisoPolicy::paper(42), &trace, cfg.clone()));
+    bench("Oracle cluster trial", || {
+        run(&mut MisoPolicy::oracle(), &trace, ideal.clone())
+    });
+
+    section("mini Fig. 16 (6 randomized trials, JCT normalized to NoPart)");
+    let t0 = std::time::Instant::now();
+    let mut miso_norm = Vec::new();
+    let mut oracle_norm = Vec::new();
+    for trial in 0..6u64 {
+        let tr = TraceGenerator::new(TraceConfig::cluster(500 + trial)).generate();
+        let nopart = run(&mut NoPartPolicy::new(), &tr, cfg.clone());
+        let miso_m = run(&mut MisoPolicy::paper(trial), &tr, cfg.clone());
+        let oracle = run(&mut MisoPolicy::oracle(), &tr, ideal.clone());
+        miso_norm.push(miso_m.avg_jct() / nopart.avg_jct());
+        oracle_norm.push(oracle.avg_jct() / nopart.avg_jct());
+    }
+    let sm = Summary::of(&miso_norm);
+    let so = Summary::of(&oracle_norm);
+    println!("MISO   normalized JCT: min {:.2} / median {:.2} / max {:.2}", sm.min, sm.median, sm.max);
+    println!("Oracle normalized JCT: min {:.2} / median {:.2} / max {:.2}", so.min, so.median, so.max);
+    println!("6 trials in {:.1} s (paper runs 1000)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,52 @@
+//! Minimal in-repo bench harness (criterion is unavailable offline).
+//!
+//! Adaptive iteration count targeting ~0.7 s per benchmark, reporting
+//! min / p50 / mean per-iteration time. All benches use
+//! `harness = false` in Cargo.toml and call [`bench`] directly.
+
+use std::time::Instant;
+
+/// Measure `f`, printing a one-line summary. Returns median seconds/iter.
+pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> f64 {
+    // Warm up + calibrate.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.7 / once) as usize).clamp(1, 100_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!(
+        "{name:<44} {iters:>7} iters   min {:>10}   p50 {:>10}   mean {:>10}",
+        fmt(min),
+        fmt(p50),
+        fmt(mean)
+    );
+    p50
+}
+
+/// Format seconds human-readably.
+pub fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

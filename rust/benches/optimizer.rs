@@ -1,0 +1,50 @@
+//! Bench: Algorithm 1 (paper Sec. 4.2 "maximum optimizer runtime 0.5 ms"
+//! and Sec. 8 "80 ms at 10× combinations, <1 s at 100×").
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use miso::mig::MigConfig;
+use miso::optimizer::{optimize, optimize_bruteforce, optimize_over, SpeedupTable};
+use miso::util::Rng;
+use miso::workload::TraceGenerator;
+
+fn tables(rng: &mut Rng, m: usize) -> Vec<SpeedupTable> {
+    (0..m)
+        .map(|_| {
+            let s = TraceGenerator::sample_spec(rng);
+            SpeedupTable::from_fn(|k| miso::perfmodel::mig_speed(&s, k))
+        })
+        .collect()
+}
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0xBE7C);
+
+    section("Algorithm 1 over the 18 A100 configurations (paper bound: 0.5 ms)");
+    for m in 1..=7usize {
+        let t = tables(&mut rng, m);
+        let p50 = bench(&format!("optimize m={m}"), || optimize(&t));
+        assert!(p50 < 0.5e-3, "exceeds the paper's 0.5 ms bound: {p50}");
+    }
+
+    section("scaled configuration universes (paper: 80 ms at 10x, <1 s at 100x)");
+    let base: Vec<MigConfig> = miso::mig::ALL_CONFIGS.iter().cloned().collect();
+    let t7 = tables(&mut rng, 7);
+    for mult in [10usize, 100] {
+        let universe: Vec<MigConfig> = (0..mult).flat_map(|_| base.iter().cloned()).collect();
+        let p50 = bench(&format!("optimize m=7 over {} configs", universe.len()), || {
+            optimize_over(&t7, universe.iter())
+        });
+        let bound = if mult == 10 { 80e-3 } else { 1.0 };
+        assert!(p50 < bound, "exceeds the paper's bound: {p50}");
+    }
+
+    section("exact DP matching vs the literal m!-permutation formulation");
+    for m in [3usize, 5] {
+        let t = tables(&mut rng, m);
+        bench(&format!("bitmask-DP matching m={m}"), || optimize(&t));
+        bench(&format!("bruteforce permutations m={m}"), || optimize_bruteforce(&t));
+    }
+}

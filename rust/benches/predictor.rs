@@ -1,0 +1,56 @@
+//! Bench: the prediction path — MPS matrix construction, the noise-model
+//! predictor, the linear 2g/1g head, and (with artifacts) the AOT U-Net on
+//! PJRT. DESIGN.md §Perf target: ≤ 1 ms per U-Net call, i.e. negligible
+//! against the 30 s MPS window it replaces.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use miso::predictor::features::profile_mps_matrix;
+use miso::predictor::{LinRegHead, NoisyPredictor, Predictor, UNetPredictor};
+use miso::util::Rng;
+use miso::workload::TraceGenerator;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(0xFEED);
+    let specs: Vec<_> = (0..7).map(|_| TraceGenerator::sample_spec(&mut rng)).collect();
+
+    section("feature construction");
+    bench("profile_mps_matrix (7 jobs, noise-free)", || {
+        profile_mps_matrix(&specs, None)
+    });
+    let mut noise_rng = Rng::seed_from_u64(1);
+    bench("profile_mps_matrix (7 jobs, noisy)", || {
+        profile_mps_matrix(&specs, Some((&mut noise_rng, 10.0)))
+    });
+
+    let matrix = profile_mps_matrix(&specs, None);
+
+    section("predictors");
+    let mut noisy = NoisyPredictor::paper_accuracy(3);
+    bench("NoisyPredictor::predict (7 jobs)", || noisy.predict(&specs, &matrix));
+
+    let head = LinRegHead::fit_from_ground_truth(5);
+    bench("LinRegHead::predict", || head.predict([1.0, 0.8, 0.7, 0.9, 0.6, 0.3]));
+    bench("LinRegHead::fit_from_ground_truth (400 mixes)", || {
+        LinRegHead::fit_from_ground_truth(6)
+    });
+
+    match UNetPredictor::load_default() {
+        Ok(mut unet) => {
+            section("AOT U-Net over PJRT (the production path)");
+            let p50 = bench("UNetPredictor::infer_matrix", || unet.infer_matrix(&matrix).unwrap());
+            bench("UNetPredictor::predict (incl. linreg head)", || {
+                unet.predict(&specs, &matrix)
+            });
+            println!(
+                "\nU-Net inference p50 = {}; the 30 s MPS window it replaces is {:.0}x longer",
+                harness::fmt(p50),
+                30.0 / p50
+            );
+            assert!(p50 < 1e-3, "DESIGN.md §Perf target: ≤ 1 ms per call");
+        }
+        Err(e) => println!("\n(skipping U-Net bench — run `make artifacts`: {e:#})"),
+    }
+}

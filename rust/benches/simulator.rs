@@ -1,0 +1,43 @@
+//! Bench: discrete-event simulator throughput. DESIGN.md §Perf target:
+//! the cluster-scale configuration (40 GPUs, 1000 jobs) must simulate fast
+//! enough that the Fig. 16 repetition study (paper: 1000 trials) is
+//! practical — i.e. thousands of simulated jobs per wall-second.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, OptStaPolicy};
+use miso::sim::run;
+use miso::workload::{TraceConfig, TraceGenerator};
+use miso::SystemConfig;
+
+fn main() {
+    section("trace generation");
+    bench("generate 1000-job cluster trace", || {
+        TraceGenerator::new(TraceConfig::cluster(1)).generate()
+    });
+
+    section("testbed scale: 8 GPUs, 100 jobs");
+    let trace = TraceGenerator::new(TraceConfig::testbed(42)).generate();
+    let cfg = SystemConfig::testbed();
+    bench("NoPart", || run(&mut NoPartPolicy::new(), &trace, cfg.clone()));
+    bench("OptSta (abacus static)", || {
+        run(&mut OptStaPolicy::abacus(), &trace, cfg.clone())
+    });
+    bench("MPS-only", || run(&mut MpsOnlyPolicy::new(), &trace, cfg.clone()));
+    bench("MISO", || run(&mut MisoPolicy::paper(7), &trace, cfg.clone()));
+    bench("Oracle", || run(&mut MisoPolicy::oracle(), &trace, cfg.clone()));
+
+    section("cluster scale: 40 GPUs, 1000 jobs (Fig. 16 unit of work)");
+    let big = TraceGenerator::new(TraceConfig::cluster(42)).generate();
+    let big_cfg = SystemConfig::cluster();
+    let p50 = bench("MISO cluster trial", || {
+        run(&mut MisoPolicy::paper(7), &big, big_cfg.clone())
+    });
+    println!(
+        "\n=> {:.0} simulated jobs/s — a 1000-trial Fig. 16 study costs ~{:.1} min/policy",
+        1000.0 / p50,
+        1000.0 * p50 / 60.0
+    );
+}

@@ -1,0 +1,75 @@
+//! System-wide configuration: cluster size, overhead constants, profiling
+//! windows — every knob the paper sweeps lives here so experiments can
+//! perturb one field at a time.
+
+
+
+/// Cluster + overhead configuration (defaults = the paper's testbed values).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Number of MIG-enabled A100 GPUs in the cluster (paper: 8 testbed,
+    /// 40 simulation).
+    pub num_gpus: usize,
+    /// Wall time of one MIG reconfiguration / GPU reset (paper: ~4 s).
+    pub mig_reconfig_s: f64,
+    /// Checkpoint + restart overhead per job when it must be stopped
+    /// (paper: "seconds to minutes"; default 10 s, swept in Fig. 17).
+    pub checkpoint_s: f64,
+    /// MPS profiling time per MPS level (paper: 10 s per level, 3 levels;
+    /// swept in Fig. 14).
+    pub mps_profile_per_level_s: f64,
+    /// Number of MPS levels profiled (paper: 3 — 100%, 50%, 14%).
+    pub mps_levels: usize,
+    /// Multiplier on the predictor's output noise (0 = oracle-accurate;
+    /// 1 = the trained model's measured error; swept in Fig. 18).
+    pub prediction_noise: f64,
+    /// Relative speed-change threshold that re-triggers MPS profiling for a
+    /// running job (phase-change detection, Sec. 4.3).
+    pub phase_change_threshold: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            num_gpus: 8,
+            mig_reconfig_s: 4.0,
+            checkpoint_s: 10.0,
+            mps_profile_per_level_s: 10.0,
+            mps_levels: 3,
+            prediction_noise: 0.0,
+            phase_change_threshold: 0.25,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// The paper's real-system testbed: 8 A100s.
+    pub fn testbed() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    /// The paper's simulated cluster: 40 A100s.
+    pub fn cluster() -> SystemConfig {
+        SystemConfig { num_gpus: 40, ..Default::default() }
+    }
+
+    /// Total MPS profiling window (all levels).
+    pub fn mps_profile_total_s(&self) -> f64 {
+        self.mps_profile_per_level_s * self.mps_levels as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = SystemConfig::testbed();
+        assert_eq!(c.num_gpus, 8);
+        assert_eq!(c.mig_reconfig_s, 4.0);
+        assert_eq!(c.mps_levels, 3);
+        assert_eq!(c.mps_profile_total_s(), 30.0);
+        assert_eq!(SystemConfig::cluster().num_gpus, 40);
+    }
+}

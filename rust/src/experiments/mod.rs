@@ -1,0 +1,76 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §3).
+//! Each prints the paper's reported values next to the measured ones.
+
+pub mod figures;
+pub mod motivation;
+pub mod sweeps;
+
+use anyhow::{bail, Result};
+
+/// (id, description) of every reproducible experiment.
+pub fn catalog() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("table1", "MIG slice profiles + the 18 configurations"),
+        ("table2", "Workload zoo with simulated characteristics"),
+        ("fig2", "SM utilization traces (embedding + GNN)"),
+        ("fig3", "STP: MPS vs MIG sharing for a 3-job mix"),
+        ("fig4", "Partition performance ordering inverts across job mixes"),
+        ("fig5", "Heuristic partitioning vs optimal (memory/power/SM)"),
+        ("predictor", "Predictor quality: U-Net MAE + linreg R²"),
+        ("fig10", "Testbed: JCT/makespan/STP across policies (8 GPUs, 100 jobs)"),
+        ("fig11", "CDF of relative JCT per job"),
+        ("fig12", "Lifecycle breakdown incl. MIG-profiling ablation"),
+        ("fig13", "Single GPU, 1..10 jobs: all metrics"),
+        ("fig14", "Prediction error vs MPS profiling time"),
+        ("fig15", "MISO vs MPS-only baseline"),
+        ("fig16", "Violin: N trials at 40 GPUs / 1000 jobs"),
+        ("fig17", "Sensitivity: checkpoint overhead"),
+        ("fig18", "Sensitivity: prediction error"),
+        ("fig19", "Sensitivity: job inter-arrival rate"),
+        ("profiling-cost", "MPS vs sequential-MIG profiling cost vs #jobs"),
+        ("optimizer-scaling", "Algorithm 1 runtime vs #combinations (Sec. 8)"),
+        ("adaptivity", "Phase-change detection + multi-instance jobs (Sec. 4.3)"),
+    ]
+}
+
+/// Run one experiment by id (or `all` for the whole catalog — the
+/// paper-reproduction regression suite). `trials` overrides the default
+/// repetition count where applicable (0 = default). `out` optionally saves
+/// the raw series as JSON.
+pub fn run_experiment(id: &str, trials: usize, out: Option<&str>) -> Result<()> {
+    if id == "all" {
+        for (eid, _) in catalog() {
+            println!("\n################ {eid} ################");
+            run_experiment(eid, trials, None)?;
+        }
+        return Ok(());
+    }
+    let result = match id {
+        "table1" => motivation::table1(),
+        "table2" => motivation::table2(),
+        "fig2" => motivation::fig2(),
+        "fig3" => motivation::fig3(),
+        "fig4" => motivation::fig4(),
+        "fig5" => motivation::fig5(),
+        "predictor" => motivation::predictor_quality(),
+        "fig10" => figures::fig10(),
+        "fig11" => figures::fig11(),
+        "fig12" => figures::fig12(),
+        "fig13" => figures::fig13(),
+        "fig14" => sweeps::fig14(),
+        "fig15" => figures::fig15(),
+        "fig16" => figures::fig16(if trials == 0 { 40 } else { trials }),
+        "fig17" => sweeps::fig17(),
+        "fig18" => sweeps::fig18(),
+        "fig19" => sweeps::fig19(),
+        "profiling-cost" => sweeps::profiling_cost(),
+        "optimizer-scaling" => sweeps::optimizer_scaling(),
+        "adaptivity" => sweeps::adaptivity(),
+        _ => bail!("unknown experiment '{id}' (see `repro list`)"),
+    }?;
+    if let Some(path) = out {
+        std::fs::write(path, result.to_string())?;
+        println!("\nraw series saved to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,489 @@
+//! Sensitivity sweeps (paper Sec. 6.2 + Sec. 8): Figs. 14, 17, 18, 19, the
+//! MPS-vs-MIG profiling-cost comparison, and the optimizer scaling study.
+
+use crate::predictor::NoisyPredictor;
+use crate::scheduler::{MisoPolicy, NoPartPolicy, ProfilingMode};
+use crate::sim;
+use crate::util::json::Value;
+use crate::workload::{TraceConfig, TraceGenerator, WorkloadSpec};
+use crate::SystemConfig;
+use anyhow::Result;
+
+/// Convert an MAE to the σ of the zero-mean Gaussian with that MAE.
+fn sigma_for_mae(mae: f64) -> f64 {
+    mae * (std::f64::consts::PI / 2.0).sqrt()
+}
+
+/// A small quadratic per-column regressor mapping the three measured MPS
+/// speeds of one job column to its (4g, 3g) MIG speedups (7g ≡ 1 after
+/// normalization). This is the *matrix-sensitive* translator used by the
+/// Fig. 14 sweep, so prediction error genuinely responds to profiling-window
+/// measurement noise — the mechanism the paper's Fig. 14 probes. (The
+/// production path uses the U-Net; this stays artifact-free.)
+struct ColumnPredictor {
+    w4: Vec<f64>,
+    w3: Vec<f64>,
+}
+
+/// Features for one job column: its own three MPS-level speeds plus the
+/// mix-wide row means (the context the U-Net's receptive field sees),
+/// with quadratic and cross terms.
+fn column_features(m: [f64; 3], ctx: [f64; 3]) -> Vec<f64> {
+    let (a, b, c) = (m[0], m[1], m[2]);
+    let (x, y, z) = (ctx[0], ctx[1], ctx[2]);
+    vec![
+        1.0,
+        a, b, c,
+        a * a, b * b, c * c,
+        a * b, b * c, a * c,
+        x, y, z,
+        a * x, b * y, c * z,
+        b / a.max(1e-3), c / b.max(1e-3),
+    ]
+}
+
+/// Row means over the real (non-dummy) columns of a profile matrix.
+fn row_context(mat: &crate::predictor::features::MpsMatrix) -> [f64; 3] {
+    let n = mat.num_real.max(1);
+    let mut ctx = [0.0; 3];
+    for (r, c) in ctx.iter_mut().enumerate() {
+        *c = (0..n).map(|j| mat.data[r][j]).sum::<f64>() / n as f64;
+    }
+    ctx
+}
+
+impl ColumnPredictor {
+    /// Fit by ridge least squares on clean profiles of random mixes.
+    fn fit(seed: u64, n_mixes: usize) -> ColumnPredictor {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut y4 = Vec::new();
+        let mut y3 = Vec::new();
+        for _ in 0..n_mixes {
+            let m = 1 + rng.below(7);
+            let specs: Vec<WorkloadSpec> = (0..m)
+                .map(|_| TraceGenerator::sample_spec(&mut rng))
+                .collect();
+            let mat = crate::predictor::features::profile_mps_matrix(&specs, None);
+            let ctx = row_context(&mat);
+            for (c, s) in specs.iter().enumerate() {
+                let t = crate::predictor::features::mig_target(s);
+                xs.push(column_features([mat.data[0][c], mat.data[1][c], mat.data[2][c]], ctx));
+                y4.push(t[1]);
+                y3.push(t[2]);
+            }
+        }
+        let d = xs[0].len();
+        let fit_one = |ys: &[f64]| -> Vec<f64> {
+            let mut xtx = vec![vec![0.0; d]; d];
+            let mut xty = vec![0.0; d];
+            for (x, &y) in xs.iter().zip(ys) {
+                for i in 0..d {
+                    for j in 0..d {
+                        xtx[i][j] += x[i] * x[j];
+                    }
+                    xty[i] += x[i] * y;
+                }
+            }
+            for (i, r) in xtx.iter_mut().enumerate() {
+                r[i] += 1e-6;
+            }
+            gauss_solve(xtx, xty)
+        };
+        ColumnPredictor { w4: fit_one(&y4), w3: fit_one(&y3) }
+    }
+
+    fn predict(&self, m: [f64; 3], ctx: [f64; 3]) -> (f64, f64) {
+        let f = column_features(m, ctx);
+        let dot = |w: &[f64]| w.iter().zip(&f).map(|(a, b)| a * b).sum::<f64>().clamp(0.01, 1.0);
+        (dot(&self.w4), dot(&self.w3))
+    }
+}
+
+fn gauss_solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for row in 0..n {
+            if row == col {
+                continue;
+            }
+            let f = a[row][col] / d;
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    (0..n).map(|i| b[i] / a[i][i]).collect()
+}
+
+/// Fig. 14: prediction error (and resulting JCT) as the MPS profiling window
+/// is scaled 0.5×–2× of the default 10 s per level.
+pub fn fig14() -> Result<Value> {
+    println!("== Fig. 14: sensitivity to MPS profiling time ==\n");
+    let translator = ColumnPredictor::fit(0x14A, 400);
+
+    // Measure prediction MAE at each window length: the translator sees
+    // matrices perturbed by finite-window measurement noise (CV ∝ 1/√t).
+    let scales = [0.5, 1.0, 1.5, 2.0];
+    let mut maes = Vec::new();
+    for &scale in &scales {
+        let window = 10.0 * scale;
+        let mut rng = crate::util::Rng::seed_from_u64(0x14B);
+        let (mut err, mut n) = (0.0, 0usize);
+        for _ in 0..300 {
+            let m = 1 + rng.below(7);
+            let specs: Vec<WorkloadSpec> = (0..m)
+                .map(|_| TraceGenerator::sample_spec(&mut rng))
+                .collect();
+            let mat = crate::predictor::features::profile_mps_matrix(&specs, Some((&mut rng, window)));
+            let ctx = row_context(&mat);
+            for (c, s) in specs.iter().enumerate() {
+                let t = crate::predictor::features::mig_target(s);
+                let (k4, k3) =
+                    translator.predict([mat.data[0][c], mat.data[1][c], mat.data[2][c]], ctx);
+                err += (k4 - t[1]).abs() + (k3 - t[2]).abs();
+                n += 2;
+            }
+        }
+        maes.push(err / n as f64);
+    }
+
+    // Run MISO end-to-end at each window with the measured error level.
+    let trace = TraceGenerator::new(TraceConfig::testbed(42)).generate();
+    let base_cfg = SystemConfig::testbed();
+    let mut jcts = Vec::new();
+    for (&scale, &mae) in scales.iter().zip(&maes) {
+        let cfg = SystemConfig {
+            mps_profile_per_level_s: 10.0 * scale,
+            ..base_cfg.clone()
+        };
+        let mut policy = MisoPolicy::new(
+            Box::new(NoisyPredictor::new(sigma_for_mae(mae), 42)),
+            ProfilingMode::Mps,
+        );
+        let m = sim::run(&mut policy, &trace, cfg);
+        jcts.push(m.avg_jct());
+    }
+
+    println!("{:>6} {:>12} {:>12} {:>12}", "scale", "window (s)", "pred MAE", "avg JCT (s)");
+    for i in 0..scales.len() {
+        println!(
+            "{:>5.1}× {:>12.1} {:>12.4} {:>12.0}",
+            scales[i],
+            10.0 * scales[i],
+            maes[i],
+            jcts[i]
+        );
+    }
+    println!("\npaper: halving the window sharply raises prediction error; lengthening");
+    println!("       beyond 1× gives diminishing accuracy but hurts JCT (≈4% at 1.5×)");
+    let base_idx = 1; // 1.0×
+    anyhow::ensure!(maes[0] > maes[base_idx] * 1.2, "0.5× window must be clearly noisier");
+    anyhow::ensure!(
+        maes[base_idx] - maes[3] < maes[0] - maes[base_idx],
+        "accuracy gains past 1× must diminish"
+    );
+    anyhow::ensure!(
+        jcts[3] > jcts[base_idx] * 0.99,
+        "longer profiling should not improve JCT (inefficient MPS time dominates)"
+    );
+    Ok(Value::obj([
+        ("scales", Value::arr_f64(scales)),
+        ("pred_mae", Value::arr_f64(maes)),
+        ("avg_jct_s", Value::arr_f64(jcts)),
+    ]))
+}
+
+/// Run NoPart + MISO on the testbed trace under `cfg`, returning
+/// (jct_norm, makespan_norm, stp_norm) of MISO vs NoPart.
+fn miso_vs_nopart(cfg: &SystemConfig, sigma: f64, seed: u64) -> (f64, f64, f64) {
+    let trace = TraceGenerator::new(TraceConfig::testbed(seed)).generate();
+    let nopart = sim::run(&mut NoPartPolicy::new(), &trace, cfg.clone());
+    let mut policy = MisoPolicy::new(Box::new(NoisyPredictor::new(sigma, seed)), ProfilingMode::Mps);
+    let miso = sim::run(&mut policy, &trace, cfg.clone());
+    (
+        miso.avg_jct() / nopart.avg_jct(),
+        miso.makespan() / nopart.makespan(),
+        miso.avg_stp() / nopart.avg_stp(),
+    )
+}
+
+/// Fig. 17: sensitivity to checkpointing overhead (×0.5, ×1, ×2).
+pub fn fig17() -> Result<Value> {
+    println!("== Fig. 17: sensitivity to checkpointing overhead ==\n");
+    let factors = [0.5, 1.0, 2.0];
+    let base = SystemConfig::testbed();
+    let sigma = sigma_for_mae(0.017);
+    println!(
+        "{:>7} {:>10} {:>14} {:>10}   (MISO normalized to NoPart)",
+        "factor", "JCT", "makespan", "STP"
+    );
+    let mut rows = Vec::new();
+    let mut jcts = Vec::new();
+    for &f in &factors {
+        let cfg = SystemConfig {
+            checkpoint_s: base.checkpoint_s * f,
+            mig_reconfig_s: base.mig_reconfig_s * f,
+            ..base.clone()
+        };
+        let (jct, mk, stp) = miso_vs_nopart(&cfg, sigma, 42);
+        println!("{:>6.1}× {:>10.2} {:>14.2} {:>10.2}", f, jct, mk, stp);
+        jcts.push(jct);
+        rows.push(Value::obj([
+            ("factor", Value::num(f)),
+            ("jct_norm", Value::num(jct)),
+            ("makespan_norm", Value::num(mk)),
+            ("stp_norm", Value::num(stp)),
+        ]));
+    }
+    println!("\npaper: MISO's benefit persists even when checkpointing overhead doubles");
+    anyhow::ensure!(
+        jcts.iter().all(|&j| j < 0.8),
+        "MISO must keep a clear JCT advantage across the sweep: {jcts:?}"
+    );
+    Ok(Value::arr(rows))
+}
+
+/// Fig. 18: sensitivity to prediction error (MAE 1.7% → 9%).
+pub fn fig18() -> Result<Value> {
+    println!("== Fig. 18: sensitivity to performance-prediction error ==\n");
+    let maes = [0.017, 0.05, 0.09];
+    let cfg = SystemConfig::testbed();
+    println!(
+        "{:>8} {:>10} {:>14} {:>10}   (MISO normalized to NoPart)",
+        "MAE", "JCT", "makespan", "STP"
+    );
+    let mut rows = Vec::new();
+    let mut jcts = Vec::new();
+    for &mae in &maes {
+        let (jct, mk, stp) = miso_vs_nopart(&cfg, sigma_for_mae(mae), 42);
+        println!("{:>7.1}% {:>10.2} {:>14.2} {:>10.2}", 100.0 * mae, jct, mk, stp);
+        jcts.push(jct);
+        rows.push(Value::obj([
+            ("mae", Value::num(mae)),
+            ("jct_norm", Value::num(jct)),
+            ("makespan_norm", Value::num(mk)),
+            ("stp_norm", Value::num(stp)),
+        ]));
+    }
+    println!("\npaper: even a barely-trained model (9% error) retains most of the benefit");
+    anyhow::ensure!(
+        jcts.iter().all(|&j| j < 0.85),
+        "MISO must beat NoPart across the error sweep: {jcts:?}"
+    );
+    Ok(Value::arr(rows))
+}
+
+/// Fig. 19: sensitivity to the job inter-arrival rate λ (cluster scale).
+pub fn fig19() -> Result<Value> {
+    println!("== Fig. 19: sensitivity to arrival rate (40 GPUs, 1000 jobs) ==\n");
+    // Sweep spans 6× in offered load while keeping the cluster in the
+    // paper's oversubscribed regime (offered load ≥ NoPart capacity);
+    // beyond λ≈25 s the 40-GPU cluster is under-subscribed and *no*
+    // policy queues, so sharing buys nothing for JCT.
+    let lambdas = [4.0, 7.0, 10.0, 14.0, 18.0];
+    let base = SystemConfig::cluster();
+    let sigma = sigma_for_mae(0.017);
+    println!(
+        "{:>7} {:>10} {:>14} {:>10}   (MISO normalized to NoPart)",
+        "λ (s)", "JCT", "makespan", "STP"
+    );
+    let mut rows = Vec::new();
+    for &lam in &lambdas {
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 1000,
+            mean_interarrival_s: lam,
+            seed: 7,
+            ..Default::default()
+        })
+        .generate();
+        let nopart = sim::run(&mut NoPartPolicy::new(), &trace, base.clone());
+        let mut policy = MisoPolicy::new(Box::new(NoisyPredictor::new(sigma, 7)), ProfilingMode::Mps);
+        let miso = sim::run(&mut policy, &trace, base.clone());
+        let (jct, mk, stp) = (
+            miso.avg_jct() / nopart.avg_jct(),
+            miso.makespan() / nopart.makespan(),
+            miso.avg_stp() / nopart.avg_stp(),
+        );
+        println!("{:>7.0} {:>10.2} {:>14.2} {:>10.2}", lam, jct, mk, stp);
+        rows.push(Value::obj([
+            ("lambda_s", Value::num(lam)),
+            ("jct_norm", Value::num(jct)),
+            ("makespan_norm", Value::num(mk)),
+            ("stp_norm", Value::num(stp)),
+        ]));
+        // Paper: 30–50% JCT improvement, >15% makespan, >25% STP across λ.
+        // (At the lightest load the busy-interval STP gain compresses as
+        // both systems drain promptly; JCT is the robust signal.)
+        anyhow::ensure!(jct < 0.75, "λ={lam}: JCT improvement must persist ({jct:.2})");
+        anyhow::ensure!(stp > 1.05, "λ={lam}: STP improvement must persist ({stp:.2})");
+    }
+    println!("\npaper: JCT gain 30–50%, makespan >15%, STP >25% across arrival rates;");
+    println!("       relative JCT degrades at very low λ (oversubscription) but stays ahead");
+    Ok(Value::arr(rows))
+}
+
+/// Sec. 4.1's profiling-cost comparison: total profiling time to
+/// characterize an m-job mix via concurrent MPS vs sequential per-job MIG
+/// runs (paper: up to 8× more overhead, growing with m).
+pub fn profiling_cost() -> Result<Value> {
+    println!("== Profiling cost: MPS (MISO) vs sequential MIG (Sec. 4.1) ==\n");
+    let cfg = SystemConfig::testbed();
+    println!("{:>5} {:>12} {:>12} {:>8}", "jobs", "MPS (s)", "MIG-seq (s)", "ratio");
+    let mut rows = Vec::new();
+    let mut last_ratio = 0.0;
+    for m in 1..=7usize {
+        // MPS: one reset + one checkpoint round, then all three levels run
+        // concurrently for every job in the mix.
+        let mps = cfg.mig_reconfig_s + cfg.checkpoint_s + cfg.mps_profile_total_s();
+        // Sequential MIG: each job is measured alone on {7g, 4g, 3g}, a GPU
+        // reset per slice change plus a checkpoint swap per job.
+        let mig = m as f64
+            * (3.0 * cfg.mps_profile_per_level_s + 3.0 * cfg.mig_reconfig_s + cfg.checkpoint_s);
+        let ratio = mig / mps;
+        println!("{:>5} {:>12.0} {:>12.0} {:>7.1}×", m, mps, mig, ratio);
+        rows.push(Value::obj([
+            ("m", Value::num(m as f64)),
+            ("mps_s", Value::num(mps)),
+            ("mig_seq_s", Value::num(mig)),
+            ("ratio", Value::num(ratio)),
+        ]));
+        last_ratio = ratio;
+    }
+    println!("\npaper: MIG-based profiling incurs up to 8× the overhead of MPS profiling");
+    println!("measured at 7 jobs: {last_ratio:.1}× (MPS cost is near-constant in m)");
+    anyhow::ensure!(last_ratio > 5.0, "sequential MIG profiling must be several× costlier");
+    Ok(Value::arr(rows))
+}
+
+/// Sec. 8's optimizer scaling study: Algorithm 1 runtime vs the size of the
+/// configuration universe (18 → 180 → 1800 by replication).
+pub fn optimizer_scaling() -> Result<Value> {
+    use crate::optimizer::{optimize_over, SpeedupTable};
+
+    println!("== Optimizer scaling (Sec. 4.2 + Sec. 8) ==\n");
+    let mut rng = crate::util::Rng::seed_from_u64(0x0707);
+    let tables: Vec<SpeedupTable> = (0..7)
+        .map(|_| {
+            let s = TraceGenerator::sample_spec(&mut rng);
+            SpeedupTable::from_fn(|k| crate::perfmodel::mig_speed(&s, k))
+        })
+        .collect();
+
+    let base: Vec<crate::mig::MigConfig> =
+        crate::mig::ALL_CONFIGS.iter().cloned().collect();
+    println!("{:>8} {:>14} {:>14}", "configs", "runtime", "paper bound");
+    let mut rows = Vec::new();
+    for (mult, bound) in [(1usize, "0.5 ms"), (10, "80 ms"), (100, "1 s")] {
+        let universe: Vec<crate::mig::MigConfig> = (0..mult).flat_map(|_| base.iter().cloned()).collect();
+        // Warm up once, then time the median of repeated runs.
+        let reps = 20;
+        let mut times = Vec::new();
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let plan = optimize_over(&tables, universe.iter());
+            std::hint::black_box(&plan);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = times[reps / 2];
+        println!("{:>8} {:>11.3} ms {:>14}", universe.len(), med * 1e3, bound);
+        rows.push(Value::obj([
+            ("configs", Value::num(universe.len() as f64)),
+            ("runtime_s", Value::num(med)),
+        ]));
+        let bound_s = match mult {
+            1 => 0.5e-3,
+            10 => 80e-3,
+            _ => 1.0,
+        };
+        anyhow::ensure!(
+            med < bound_s,
+            "optimizer at {} configs took {:.3} ms (paper bound {bound})",
+            universe.len(),
+            med * 1e3
+        );
+    }
+    println!("\npaper: 0.5 ms at 18 configs; 80 ms at 10×; <1 s at 100× — runtime linear in |P|");
+    Ok(Value::arr(rows))
+}
+
+/// Extension experiment (Sec. 4.3 features): phase-change detection and
+/// multi-instance job handling on a trace that exercises both.
+pub fn adaptivity() -> Result<Value> {
+
+    println!("== Adaptivity: phase-change detection + multi-instance jobs (Sec. 4.3) ==\n");
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 100,
+        mean_interarrival_s: 60.0,
+        seed: 0xADA,
+        phase_change_prob: 0.40,
+        multi_instance_prob: 0.15,
+        ..Default::default()
+    })
+    .generate();
+    let phased = trace.iter().filter(|j| j.phase.is_some()).count();
+    let grouped = trace.iter().filter(|j| j.group.is_some()).count();
+    println!("trace: {} jobs — {phased} with phase changes, {grouped} in multi-instance groups\n", trace.len());
+
+    let cfg = SystemConfig::testbed();
+    let sigma = sigma_for_mae(0.017);
+
+    // MISO with phase detection ON (default threshold 0.25).
+    let mut with_det =
+        MisoPolicy::new(Box::new(NoisyPredictor::new(sigma, 1)), ProfilingMode::Mps);
+    let m_on = sim::run(&mut with_det, &trace, cfg.clone());
+
+    // MISO with detection OFF (infinite threshold: stale tables persist).
+    let mut no_det = MisoPolicy::new(Box::new(NoisyPredictor::new(sigma, 1)), ProfilingMode::Mps);
+    let cfg_off = SystemConfig { phase_change_threshold: f64::INFINITY, ..cfg.clone() };
+    let m_off = sim::run(&mut no_det, &trace, cfg_off);
+
+    let nopart = sim::run(&mut crate::scheduler::NoPartPolicy::new(), &trace, cfg.clone());
+
+    println!("{:<28} {:>10} {:>8} {:>12}", "policy", "avg JCT", "STP", "reprofiles");
+    println!(
+        "{:<28} {:>8.0} s {:>8.3} {:>12}",
+        "MISO + phase detection",
+        m_on.avg_jct(),
+        m_on.avg_stp(),
+        with_det.phase_reprofiles
+    );
+    println!(
+        "{:<28} {:>8.0} s {:>8.3} {:>12}",
+        "MISO, detection disabled",
+        m_off.avg_jct(),
+        m_off.avg_stp(),
+        no_det.phase_reprofiles
+    );
+    println!("{:<28} {:>8.0} s {:>8.3} {:>12}", "NoPart", nopart.avg_jct(), nopart.avg_stp(), 0);
+    println!(
+        "\nmulti-instance siblings skipping MPS profiling via the shared profile: {}",
+        with_det.group_fastpath
+    );
+
+    anyhow::ensure!(with_det.phase_reprofiles > 0, "phase detection must trigger on this trace");
+    anyhow::ensure!(no_det.phase_reprofiles == 0, "disabled detection must never re-profile");
+    anyhow::ensure!(with_det.group_fastpath > 0, "group fast path must engage");
+    anyhow::ensure!(
+        m_on.avg_jct() <= m_off.avg_jct() * 1.02,
+        "re-profiling after phase changes must not hurt JCT: {} vs {}",
+        m_on.avg_jct(),
+        m_off.avg_jct()
+    );
+    Ok(Value::obj([
+        ("jct_with_detection", Value::num(m_on.avg_jct())),
+        ("jct_without_detection", Value::num(m_off.avg_jct())),
+        ("stp_with_detection", Value::num(m_on.avg_stp())),
+        ("stp_without_detection", Value::num(m_off.avg_stp())),
+        ("phase_reprofiles", Value::num(with_det.phase_reprofiles as f64)),
+        ("group_fastpath", Value::num(with_det.group_fastpath as f64)),
+    ]))
+}

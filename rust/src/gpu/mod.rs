@@ -1,0 +1,222 @@
+//! Simulated MIG-enabled A100 GPU device.
+//!
+//! Models the state the real system exposes through the MIG/MPS APIs
+//! (paper Sec. 4.4): the current partition, which job occupies which slice,
+//! whether the GPU is in MPS-profiling mode (MPS runs on top of a 7g.40gb
+//! slice), and the overhead events a reconfiguration incurs (GPU reset
+//! ≈ 4 s + per-job checkpoint/restart).
+//!
+//! The device is a pure state machine — the simulator/live server advances
+//! time and applies the returned overhead.
+
+use crate::config::SystemConfig;
+use crate::mig::{MigConfig, SliceKind};
+use crate::workload::JobId;
+
+use std::collections::HashMap;
+
+/// GPU operating mode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GpuMode {
+    /// Partitioned into MIG slices; `assignment` maps slice index → job.
+    Mig { config: MigConfig, assignment: HashMap<usize, JobId> },
+    /// MPS profiling on top of 7g.40gb: all resident jobs run concurrently.
+    Mps { since: f64, jobs: Vec<JobId> },
+}
+
+/// Overhead incurred by a mode/partition transition.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransitionCost {
+    /// GPU-wide reset time (all resident jobs stopped).
+    pub reconfig_s: f64,
+    /// Per-job checkpoint+restart time (applied to each disrupted job).
+    pub checkpoint_s: f64,
+}
+
+/// A simulated MIG-enabled GPU.
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub id: usize,
+    pub mode: GpuMode,
+}
+
+impl Gpu {
+    /// A fresh GPU: unpartitioned (single 7g slice), no jobs.
+    pub fn new(id: usize) -> Gpu {
+        let full = crate::mig::ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![7])
+            .expect("7g config exists")
+            .clone();
+        Gpu { id, mode: GpuMode::Mig { config: full, assignment: HashMap::new() } }
+    }
+
+    /// Jobs currently resident on this GPU (any mode).
+    pub fn resident_jobs(&self) -> Vec<JobId> {
+        match &self.mode {
+            GpuMode::Mig { assignment, .. } => assignment.values().copied().collect(),
+            GpuMode::Mps { jobs, .. } => jobs.clone(),
+        }
+    }
+
+    pub fn job_count(&self) -> usize {
+        match &self.mode {
+            GpuMode::Mig { assignment, .. } => assignment.len(),
+            GpuMode::Mps { jobs, .. } => jobs.len(),
+        }
+    }
+
+    /// The slice a job currently runs on (None in MPS mode).
+    pub fn slice_of(&self, job: JobId) -> Option<SliceKind> {
+        match &self.mode {
+            GpuMode::Mig { config, assignment } => assignment
+                .iter()
+                .find(|(_, &j)| j == job)
+                .map(|(&s, _)| config.slices[s].kind),
+            GpuMode::Mps { .. } => None,
+        }
+    }
+
+    /// Whether the GPU is in MPS-profiling mode.
+    pub fn is_profiling(&self) -> bool {
+        matches!(self.mode, GpuMode::Mps { .. })
+    }
+
+    /// Largest slice this GPU could spare for a *new* job if repartitioned,
+    /// while still hosting its current jobs — the controller's "maximum
+    /// spare slice" record (Sec. 4.3). Computed from the partition
+    /// universe: the largest slice kind `k` such that some valid config has
+    /// `job_count + 1` slices with one slice ≥ k... conservatively, the
+    /// largest slice in any (m+1)-way config (m = current job count).
+    pub fn max_spare_slice(&self) -> Option<SliceKind> {
+        let m = self.job_count();
+        if m >= 7 {
+            return None;
+        }
+        crate::mig::ALL_CONFIGS
+            .with_len(m + 1)
+            .flat_map(|c| c.slices.iter().map(|p| p.kind))
+            .max_by_key(|k| k.gpcs())
+    }
+
+    /// Switch to MPS-profiling mode (all jobs repartitioned onto 7g + MPS).
+    /// Every resident job is checkpoint-restarted; the GPU resets once.
+    pub fn enter_mps(&mut self, now: f64, new_job: Option<JobId>, cfg: &SystemConfig) -> TransitionCost {
+        let mut jobs = self.resident_jobs();
+        if let Some(j) = new_job {
+            jobs.push(j);
+        }
+        assert!(jobs.len() <= 7, "GPU hosts at most 7 jobs");
+        let cost = TransitionCost {
+            reconfig_s: cfg.mig_reconfig_s,
+            checkpoint_s: cfg.checkpoint_s,
+        };
+        self.mode = GpuMode::Mps { since: now, jobs };
+        cost
+    }
+
+    /// Apply a new MIG partition + assignment (leaving MPS mode or
+    /// repartitioning in place). Jobs in `assignment` must be resident or
+    /// newly added; all are checkpoint-restarted.
+    pub fn apply_partition(
+        &mut self,
+        config: MigConfig,
+        assignment: HashMap<usize, JobId>,
+        cfg: &SystemConfig,
+    ) -> TransitionCost {
+        assert!(assignment.len() <= config.len());
+        for &s in assignment.keys() {
+            assert!(s < config.len(), "slice index out of range");
+        }
+        let cost = TransitionCost {
+            reconfig_s: cfg.mig_reconfig_s,
+            checkpoint_s: cfg.checkpoint_s,
+        };
+        self.mode = GpuMode::Mig { config, assignment };
+        cost
+    }
+
+    /// Remove a completed/evicted job. No reconfiguration happens here —
+    /// the scheduler decides whether to repartition afterwards.
+    pub fn remove_job(&mut self, job: JobId) {
+        match &mut self.mode {
+            GpuMode::Mig { assignment, .. } => {
+                assignment.retain(|_, &mut j| j != job);
+            }
+            GpuMode::Mps { jobs, .. } => jobs.retain(|&j| j != job),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::testbed()
+    }
+
+    #[test]
+    fn fresh_gpu_is_full_slice_empty() {
+        let g = Gpu::new(0);
+        assert_eq!(g.job_count(), 0);
+        assert!(!g.is_profiling());
+        match &g.mode {
+            GpuMode::Mig { config, .. } => assert_eq!(config.gpc_multiset(), vec![7]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn mps_roundtrip_accumulates_costs() {
+        let mut g = Gpu::new(0);
+        let c1 = g.enter_mps(0.0, Some(JobId(1)), &cfg());
+        assert_eq!(c1.reconfig_s, 4.0);
+        assert!(g.is_profiling());
+        assert_eq!(g.job_count(), 1);
+
+        // leave MPS into a (7) partition hosting the job
+        let full = crate::mig::ALL_CONFIGS.iter().find(|c| c.len() == 1).unwrap().clone();
+        let mut asg = HashMap::new();
+        asg.insert(0usize, JobId(1));
+        let c2 = g.apply_partition(full, asg, &cfg());
+        assert_eq!(c2.checkpoint_s, cfg().checkpoint_s);
+        assert!(!g.is_profiling());
+        assert_eq!(g.slice_of(JobId(1)), Some(SliceKind::G7));
+    }
+
+    #[test]
+    fn max_spare_slice_shrinks_with_occupancy() {
+        let mut g = Gpu::new(0);
+        // empty: can spare the full 7g
+        assert_eq!(g.max_spare_slice(), Some(SliceKind::G7));
+        // host 1 job → best 2-way config is (3,3) (4g+3g invalid, so 4g
+        // pairs only with 2g/1g... largest slice in any 2-way cfg)
+        g.enter_mps(0.0, Some(JobId(1)), &cfg());
+        let spare = g.max_spare_slice().unwrap();
+        assert!(spare.gpcs() >= 3, "{spare}");
+        // fill to 7 jobs → nothing to spare
+        for i in 2..=7 {
+            g.enter_mps(0.0, Some(JobId(i)), &cfg());
+        }
+        assert_eq!(g.job_count(), 7);
+        assert_eq!(g.max_spare_slice(), None);
+    }
+
+    #[test]
+    fn remove_job_frees_slice() {
+        let mut g = Gpu::new(0);
+        g.enter_mps(0.0, Some(JobId(1)), &cfg());
+        g.remove_job(JobId(1));
+        assert_eq!(g.job_count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at most 7")]
+    fn eighth_job_panics() {
+        let mut g = Gpu::new(0);
+        for i in 1..=8 {
+            g.enter_mps(0.0, Some(JobId(i)), &cfg());
+        }
+    }
+}

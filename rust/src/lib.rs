@@ -1,0 +1,39 @@
+//! # MISO — Multi-Instance GPU scheduling for multi-tenant ML (SoCC'22 reproduction)
+//!
+//! This crate implements the complete MISO system from Li et al., *"MISO:
+//! Exploiting Multi-Instance GPU Capability on Multi-Tenant Systems for
+//! Machine Learning"* (ACM SoCC 2022), as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the cluster coordinator: MIG partition
+//!   model, simulated A100 substrate, MPS profiling, the Algorithm-1
+//!   partition optimizer, scheduling policies (MISO / NoPart / OptSta /
+//!   Oracle / MPS-only), a discrete-event cluster simulator, and a live
+//!   TCP controller/server mode.
+//! * **Layer 2 (python/compile, build time only)** — the U-Net autoencoder
+//!   performance predictor in JAX, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels, build time only)** — Pallas kernels
+//!   for the predictor's conv/matmul hot path.
+//!
+//! At runtime the learned MPS→MIG predictor executes *inside Rust* via the
+//! PJRT CPU client ([`runtime`]); Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod experiments;
+pub mod gpu;
+pub mod metrics;
+pub mod mig;
+pub mod optimizer;
+pub mod perfmodel;
+pub mod predictor;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::SystemConfig;

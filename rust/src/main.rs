@@ -1,0 +1,252 @@
+//! `repro` — the MISO reproduction CLI.
+//!
+//! Subcommands:
+//! * `gen-data`    — emit MPS→MIG training data (JSONL) from the simulated
+//!   hardware for `python/compile/train.py` (paper Sec. 4.1: 400 mixes per
+//!   job count 1..=7, i.e. 2800 mixes).
+//! * `simulate`    — run one cluster simulation with a chosen policy.
+//! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3).
+//! * `serve`       — run the live controller + per-GPU server APIs (Fig. 6)
+//!   on a TCP port with simulated GPUs in scaled wall-clock time.
+//! * `list`        — list available experiments.
+//!
+//! No external CLI crate is available offline; parsing is by hand.
+
+use anyhow::{bail, Context, Result};
+use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, ProfilingMode};
+use miso::sim::Policy;
+use miso::workload::{TraceConfig, TraceGenerator};
+use miso::SystemConfig;
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [flags]\n\
+         \n\
+         commands:\n\
+           gen-data    --out FILE [--mixes-per-count N] [--seed S] [--clean]\n\
+           simulate    --policy P [--gpus N] [--jobs N] [--lambda S] [--seed S]\n\
+                       (P = miso | miso-unet | nopart | optsta | oracle | mps-only | miso-migprof)\n\
+           experiment  --id ID [--trials N] [--out FILE]\n\
+           serve       [--port P] [--gpus N] [--time-scale X]\n\
+           list"
+    );
+    std::process::exit(2);
+}
+
+/// Tiny flag parser: `--key value` and boolean `--key`.
+pub struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if !a.starts_with("--") {
+                bail!("unexpected argument '{a}'");
+            }
+            let key = a[2..].to_string();
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key, args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key, "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Flags(map))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("invalid --{key} '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "gen-data" => gen_data(&flags),
+        "simulate" => simulate(&flags),
+        "experiment" => miso::experiments::run_experiment(
+            flags.get("id").context("--id required")?,
+            flags.num("trials", 0usize)?,
+            flags.get("out"),
+        ),
+        "serve" => miso::server::serve(
+            flags.num("port", 7100u16)?,
+            flags.num("gpus", 4usize)?,
+            flags.num("time-scale", 60.0f64)?,
+        ),
+        "list" => {
+            for (id, desc) in miso::experiments::catalog() {
+                println!("{id:<16} {desc}");
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+/// Build a policy by name. `miso` uses the paper-accuracy noisy predictor;
+/// `miso-unet` loads the trained U-Net artifacts (requires `make artifacts`).
+fn make_policy(name: &str, seed: u64) -> Result<Box<dyn Policy>> {
+    Ok(match name {
+        "miso" => Box::new(MisoPolicy::paper(seed)),
+        "miso-unet" => Box::new(MisoPolicy::new(
+            Box::new(miso::predictor::UNetPredictor::load_default()?),
+            ProfilingMode::Mps,
+        )),
+        "miso-migprof" => Box::new(MisoPolicy::new(
+            Box::new(miso::predictor::OraclePredictor),
+            ProfilingMode::MigSequential,
+        )),
+        "nopart" => Box::new(NoPartPolicy::new()),
+        "oracle" => Box::new(MisoPolicy::oracle()),
+        "mps-only" => Box::new(MpsOnlyPolicy::new()),
+        "optsta" => bail!("optsta needs offline search; use `repro experiment --id fig10`"),
+        other => bail!("unknown policy '{other}'"),
+    })
+}
+
+fn simulate(flags: &Flags) -> Result<()> {
+    let policy_name = flags.get("policy").context("--policy required")?;
+    let seed = flags.num("seed", 0u64)?;
+    let cfg = SystemConfig {
+        num_gpus: flags.num("gpus", 8usize)?,
+        ..SystemConfig::testbed()
+    };
+    let trace_cfg = TraceConfig {
+        num_jobs: flags.num("jobs", 100usize)?,
+        mean_interarrival_s: flags.num("lambda", 60.0f64)?,
+        seed,
+        ..Default::default()
+    };
+    let trace = TraceGenerator::new(trace_cfg).generate();
+    // Oracle is reported overhead-free, as in the paper.
+    let cfg = if policy_name == "oracle" {
+        SystemConfig { mig_reconfig_s: 0.0, checkpoint_s: 0.0, ..cfg }
+    } else {
+        cfg
+    };
+    let mut policy = make_policy(policy_name, seed ^ 0xD15C0)?;
+    let t0 = std::time::Instant::now();
+    let m = miso::sim::run(policy.as_mut(), &trace, cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
+    println!("policy            : {}", policy.name());
+    println!("jobs              : {}", m.records.len());
+    println!("avg JCT           : {:.1} s", m.avg_jct());
+    println!("makespan          : {:.1} s", m.makespan());
+    println!("avg STP           : {:.3}", m.avg_stp());
+    println!("p50/p90 rel. JCT  : {:.2} / {:.2}",
+        miso::util::stats::percentile_sorted(&sorted_rel(&m), 0.5),
+        miso::util::stats::percentile_sorted(&sorted_rel(&m), 0.9));
+    println!("lifecycle         : queue {q:.1}% | mps {mps:.1}% | ckpt {ckpt:.1}% | exec {exec:.1}% | idle {idle:.1}%");
+    println!("sim wall time     : {wall:.2} s");
+    Ok(())
+}
+
+fn sorted_rel(m: &miso::metrics::RunMetrics) -> Vec<f64> {
+    let mut v: Vec<f64> = m.records.iter().map(|r| r.relative_jct()).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
+/// Training-data generation (paper Sec. 4.1 "Model training"): random job
+/// mixes with count 1..=7, `--mixes-per-count` each (paper: 400 ⇒ 2800
+/// total), profiled in MPS (input) and MIG (target) on the simulated
+/// hardware. Output: one JSON object per line.
+fn gen_data(flags: &Flags) -> Result<()> {
+    use miso::predictor::features;
+    use miso::util::json::Value;
+    use std::io::Write;
+
+    let out_path = flags.get("out").unwrap_or("data/mixes.jsonl").to_string();
+    let per_count = flags.num("mixes-per-count", 400usize)?;
+    let seed = flags.num("seed", 1u64)?;
+    let clean = flags.flag("clean");
+
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = std::io::BufWriter::new(std::fs::File::create(&out_path)?);
+    let mut rng = miso::util::Rng::seed_from_u64(seed);
+    let mut written = 0usize;
+
+    for m in 1..=7usize {
+        for i in 0..per_count {
+            let mix_seed = seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add((m * 100_000 + i) as u64);
+            let jobs = TraceGenerator::generate_mix(mix_seed, m, 600.0);
+            let mut specs: Vec<_> = jobs.iter().map(|j| j.spec).collect();
+            let matrix = if clean {
+                features::profile_mps_matrix(&specs, None)
+            } else {
+                features::profile_mps_matrix(&specs, Some((&mut rng, 10.0)))
+            };
+            // Pad specs to 7 for target computation (dummy columns have
+            // real targets — the dummies actually run, per the paper).
+            while specs.len() < 7 {
+                specs.push(miso::workload::WorkloadSpec::dummy());
+            }
+            let mut target_rows = [[0.0f64; 7]; 3];
+            let mut small = Vec::new();
+            for (c, s) in specs.iter().enumerate() {
+                let t = features::mig_target(s);
+                for r in 0..3 {
+                    // Finite-window measurement noise on the MIG side too.
+                    let v = if clean {
+                        t[r]
+                    } else {
+                        (t[r] * (1.0 + 0.01 * rng.normal())).clamp(1e-3, 1.0)
+                    };
+                    target_rows[r][c] = v;
+                }
+                let sm = features::mig_small_slices(s);
+                small.push(Value::arr_f64(sm));
+            }
+            let input_rows: Vec<Value> = matrix
+                .data
+                .iter()
+                .map(|row| Value::arr_f64(row.iter().copied()))
+                .collect();
+            let target_rows: Vec<Value> = target_rows
+                .iter()
+                .map(|row| Value::arr_f64(row.iter().copied()))
+                .collect();
+            let obj = Value::obj([
+                ("m", Value::num(m as f64)),
+                ("input", Value::arr(input_rows)),
+                ("target", Value::arr(target_rows)),
+                ("small", Value::arr(small)),
+            ]);
+            writeln!(out, "{obj}")?;
+            written += 1;
+        }
+    }
+    out.flush()?;
+    println!("wrote {written} mixes to {out_path}");
+    Ok(())
+}

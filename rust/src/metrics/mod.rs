@@ -1,0 +1,259 @@
+//! Figures of merit (paper Sec. 2.3): average job completion time (JCT),
+//! makespan, system throughput (STP, Eq. 1), plus the per-job lifecycle
+//! breakdown (Fig. 12) and relative-JCT CDFs (Figs. 11, 15b).
+
+use crate::workload::JobId;
+
+
+
+/// Per-job lifecycle accounting. Invariant (tested): the stage times sum to
+/// the job's JCT.
+#[derive(Debug, Clone, Default)]
+pub struct JobRecord {
+    pub id: u64,
+    /// Arrival time (s).
+    pub arrival: f64,
+    /// Completion time (s).
+    pub completion: f64,
+    /// Exclusive-full-GPU execution time (the job's `work`) — the
+    /// denominator of relative JCT.
+    pub exclusive_s: f64,
+    /// Time waiting in queue before first placement.
+    pub queue_s: f64,
+    /// Time executing on MIG slices (includes slowdown; wall time).
+    pub mig_exec_s: f64,
+    /// Time executing in MPS profiling mode (still progressing).
+    pub mps_s: f64,
+    /// Time lost to checkpoint/restart + MIG reconfiguration (job stopped).
+    pub checkpoint_s: f64,
+    /// Time parked on a GPU but not running (waiting out co-located
+    /// profiling rounds in MIG-profiling ablation mode, etc.).
+    pub idle_s: f64,
+}
+
+impl JobRecord {
+    /// End-to-end job completion time (queue wait + execution; Sec. 2.3).
+    pub fn jct(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// JCT relative to exclusive, queue-free execution on a full A100
+    /// (the x-axis of Figs. 11 and 15b). Always ≥ 1 up to rounding.
+    pub fn relative_jct(&self) -> f64 {
+        self.jct() / self.exclusive_s
+    }
+
+    /// Sum of the lifecycle stages — must equal `jct()`.
+    pub fn stage_sum(&self) -> f64 {
+        self.queue_s + self.mig_exec_s + self.mps_s + self.checkpoint_s + self.idle_s
+    }
+}
+
+/// Aggregated metrics for one scheduler run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub records: Vec<JobRecord>,
+    /// Time-integrated STP samples: (time, stp). Mean STP is reported over
+    /// the interval where at least one job is present.
+    pub stp_samples: Vec<(f64, f64)>,
+}
+
+impl RunMetrics {
+    pub fn avg_jct(&self) -> f64 {
+        mean(self.records.iter().map(JobRecord::jct))
+    }
+
+    pub fn makespan(&self) -> f64 {
+        let start = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        let end = self.records.iter().map(|r| r.completion).fold(0.0, f64::max);
+        end - start
+    }
+
+    /// Time-averaged STP (Eq. 1) over the busy interval.
+    pub fn avg_stp(&self) -> f64 {
+        if self.stp_samples.len() < 2 {
+            return self.stp_samples.first().map_or(0.0, |s| s.1);
+        }
+        let mut area = 0.0;
+        let mut span = 0.0;
+        for w in self.stp_samples.windows(2) {
+            let dt = w[1].0 - w[0].0;
+            area += w[0].1 * dt;
+            span += dt;
+        }
+        if span > 0.0 { area / span } else { 0.0 }
+    }
+
+    /// CDF of relative JCT: sorted (x = relative JCT, y = fraction ≤ x).
+    pub fn relative_jct_cdf(&self) -> Vec<(f64, f64)> {
+        let mut xs: Vec<f64> = self.records.iter().map(JobRecord::relative_jct).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len() as f64;
+        xs.into_iter()
+            .enumerate()
+            .map(|(i, x)| (x, (i + 1) as f64 / n))
+            .collect()
+    }
+
+    /// Fraction of jobs with relative JCT ≤ `x` (e.g. the paper's "50% of
+    /// MISO's jobs experience within 1.5× of the ideal JCT").
+    pub fn frac_within(&self, x: f64) -> f64 {
+        let n = self.records.len();
+        if n == 0 {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| r.relative_jct() <= x).count() as f64 / n as f64
+    }
+
+    /// Mean lifecycle breakdown in absolute seconds:
+    /// (queue, mps, checkpoint, mig_exec, idle) — Fig. 12a.
+    pub fn breakdown_abs(&self) -> (f64, f64, f64, f64, f64) {
+        (
+            mean(self.records.iter().map(|r| r.queue_s)),
+            mean(self.records.iter().map(|r| r.mps_s)),
+            mean(self.records.iter().map(|r| r.checkpoint_s)),
+            mean(self.records.iter().map(|r| r.mig_exec_s)),
+            mean(self.records.iter().map(|r| r.idle_s)),
+        )
+    }
+
+    /// Lifecycle breakdown as percentages of mean JCT — Fig. 12b.
+    pub fn breakdown_pct(&self) -> (f64, f64, f64, f64, f64) {
+        let (q, m, c, e, i) = self.breakdown_abs();
+        let total = q + m + c + e + i;
+        if total == 0.0 {
+            return (0.0, 0.0, 0.0, 0.0, 0.0);
+        }
+        let f = 100.0 / total;
+        (q * f, m * f, c * f, e * f, i * f)
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for v in it {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 { 0.0 } else { sum / n as f64 }
+}
+
+/// Builder used by the simulator: accumulates per-job stage times and STP
+/// samples as virtual time advances.
+#[derive(Debug, Default)]
+pub struct MetricsCollector {
+    records: crate::util::FastMap<u64, JobRecord>,
+    stp_samples: Vec<(f64, f64)>,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, id: JobId, arrival: f64, exclusive_s: f64) {
+        self.records.insert(
+            id.0,
+            JobRecord { id: id.0, arrival, exclusive_s, ..Default::default() },
+        );
+    }
+
+    pub fn record(&mut self, id: JobId) -> &mut JobRecord {
+        self.records.get_mut(&id.0).expect("job not registered")
+    }
+
+    pub fn on_completion(&mut self, id: JobId, t: f64) {
+        self.record(id).completion = t;
+    }
+
+    pub fn sample_stp(&mut self, t: f64, stp: f64) {
+        self.stp_samples.push((t, stp));
+    }
+
+    pub fn finish(self) -> RunMetrics {
+        let mut records: Vec<JobRecord> = self.records.into_values().collect();
+        records.sort_by_key(|r| r.id);
+        RunMetrics { records, stp_samples: self.stp_samples }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, completion: f64, exclusive: f64, queue: f64) -> JobRecord {
+        JobRecord {
+            id: 0,
+            arrival,
+            completion,
+            exclusive_s: exclusive,
+            queue_s: queue,
+            mig_exec_s: completion - arrival - queue,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn jct_and_relative() {
+        let r = rec(10.0, 110.0, 50.0, 20.0);
+        assert_eq!(r.jct(), 100.0);
+        assert_eq!(r.relative_jct(), 2.0);
+        assert!((r.stage_sum() - r.jct()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_spans_first_arrival_to_last_completion() {
+        let m = RunMetrics {
+            records: vec![rec(0.0, 100.0, 50.0, 0.0), rec(30.0, 250.0, 50.0, 0.0)],
+            stp_samples: vec![],
+        };
+        assert_eq!(m.makespan(), 250.0);
+        assert_eq!(m.avg_jct(), (100.0 + 220.0) / 2.0);
+    }
+
+    #[test]
+    fn stp_time_average() {
+        let m = RunMetrics {
+            records: vec![],
+            stp_samples: vec![(0.0, 1.0), (10.0, 3.0), (20.0, 3.0)],
+        };
+        // 1.0 over [0,10), 3.0 over [10,20) → 2.0
+        assert!((m.avg_stp() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_monotone_normalized() {
+        let m = RunMetrics {
+            records: (0..10).map(|i| rec(0.0, 100.0 + 10.0 * i as f64, 50.0, 0.0)).collect(),
+            stp_samples: vec![],
+        };
+        let cdf = m.relative_jct_cdf();
+        assert_eq!(cdf.len(), 10);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+        assert!(cdf.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn breakdown_percentages_sum_to_100() {
+        let m = RunMetrics {
+            records: vec![rec(0.0, 100.0, 50.0, 40.0)],
+            stp_samples: vec![],
+        };
+        let (q, mp, c, e, i) = m.breakdown_pct();
+        assert!((q + mp + c + e + i - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collector_roundtrip() {
+        let mut col = MetricsCollector::new();
+        col.on_arrival(JobId(1), 5.0, 60.0);
+        col.record(JobId(1)).queue_s = 10.0;
+        col.record(JobId(1)).mig_exec_s = 80.0;
+        col.on_completion(JobId(1), 95.0);
+        col.sample_stp(0.0, 1.0);
+        let m = col.finish();
+        assert_eq!(m.records.len(), 1);
+        assert_eq!(m.records[0].jct(), 90.0);
+        assert!((m.records[0].stage_sum() - 90.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,357 @@
+//! The 18 valid A100 MIG partition configurations (paper appendix, Fig. 20).
+//!
+//! A configuration is a *maximal* set of non-overlapping slice placements on
+//! the 8-slice memory layout, subject to:
+//! * each profile only starts at its allowed offsets ([`SliceKind::placements`]),
+//! * total GPCs ≤ 7,
+//! * per-profile instance counts ≤ Table 1 max counts,
+//! * `4g.20gb` and `3g.20gb` never coexist (hardware restriction cited in
+//!   the paper, Sec. 2.2),
+//! * maximality: no further slice can be added.
+//!
+//! The enumeration below produces exactly 18 configurations, matching the
+//! paper's count ("In total, there are 18 MIG configurations on an A100").
+
+use super::profiles::SliceKind;
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// A placed MIG slice: profile + starting memory-slice offset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Placement {
+    pub kind: SliceKind,
+    pub start: u8,
+}
+
+/// One of the 18 valid GPU partition configurations.
+///
+/// Slices are stored sorted by memory-slice offset (left-to-right as drawn
+/// in the paper's Fig. 20).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MigConfig {
+    pub slices: Vec<Placement>,
+}
+
+impl MigConfig {
+    /// Number of slices in this configuration.
+    pub fn len(&self) -> usize {
+        self.slices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slices.is_empty()
+    }
+
+    /// Slice kinds in offset order.
+    pub fn kinds(&self) -> Vec<SliceKind> {
+        self.slices.iter().map(|p| p.kind).collect()
+    }
+
+    /// The multiset of GPC sizes, sorted descending — e.g. `[4, 2, 1]`.
+    pub fn gpc_multiset(&self) -> Vec<u8> {
+        let mut v: Vec<u8> = self.slices.iter().map(|p| p.kind.gpcs()).collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    /// Total GPCs used.
+    pub fn total_gpcs(&self) -> u8 {
+        self.slices.iter().map(|p| p.kind.gpcs()).sum()
+    }
+
+    /// Total memory slices used.
+    pub fn total_mem_slices(&self) -> u8 {
+        self.slices.iter().map(|p| p.kind.mem_slices()).sum()
+    }
+
+    /// Whether this configuration's placements are mutually non-overlapping
+    /// and individually legal. (All members of [`ALL_CONFIGS`] satisfy this;
+    /// used by property tests.)
+    pub fn is_valid(&self) -> bool {
+        let mut occupied = [false; 8];
+        let mut count_3g = 0;
+        let mut count_4g = 0;
+        let mut counts = std::collections::HashMap::new();
+        for p in &self.slices {
+            if !p.kind.placements().contains(&p.start) {
+                return false;
+            }
+            for s in p.start..p.start + p.kind.mem_slices() {
+                if occupied[s as usize] {
+                    return false;
+                }
+                occupied[s as usize] = true;
+            }
+            *counts.entry(p.kind).or_insert(0u8) += 1;
+            match p.kind {
+                SliceKind::G3 => count_3g += 1,
+                SliceKind::G4 => count_4g += 1,
+                _ => {}
+            }
+        }
+        if count_3g > 0 && count_4g > 0 {
+            return false; // 4g.20gb and 3g.20gb cannot coexist (Sec. 2.2)
+        }
+        if self.total_gpcs() > 7 {
+            return false;
+        }
+        counts.iter().all(|(k, &c)| c <= k.max_count())
+    }
+}
+
+impl fmt::Display for MigConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<String> = self
+            .slices
+            .iter()
+            .map(|p| format!("{}g", p.kind.gpcs()))
+            .collect();
+        write!(f, "({})", names.join(","))
+    }
+}
+
+/// Recursively enumerate every *maximal* valid placement set.
+fn enumerate_maximal() -> Vec<MigConfig> {
+    fn placeable(occ: &[bool; 8], gpcs_left: u8, counts: &[u8; 5], kind: SliceKind, has3: bool, has4: bool) -> Vec<u8> {
+        let idx = kind_index(kind);
+        if counts[idx] >= kind.max_count() || kind.gpcs() > gpcs_left {
+            return vec![];
+        }
+        if (kind == SliceKind::G3 && has4) || (kind == SliceKind::G4 && has3) {
+            return vec![];
+        }
+        kind.placements()
+            .iter()
+            .copied()
+            .filter(|&s| (s..s + kind.mem_slices()).all(|m| !occ[m as usize]))
+            .collect()
+    }
+
+    fn kind_index(kind: SliceKind) -> usize {
+        match kind {
+            SliceKind::G1 => 0,
+            SliceKind::G2 => 1,
+            SliceKind::G3 => 2,
+            SliceKind::G4 => 3,
+            SliceKind::G7 => 4,
+        }
+    }
+
+    fn recurse(
+        occ: [bool; 8],
+        gpcs_left: u8,
+        counts: [u8; 5],
+        current: Vec<Placement>,
+        out: &mut Vec<MigConfig>,
+    ) {
+        let has3 = counts[kind_index(SliceKind::G3)] > 0;
+        let has4 = counts[kind_index(SliceKind::G4)] > 0;
+        // Maximality is judged over *all* legal placements; the recursion
+        // itself only follows canonically-ordered ones (left-to-right per
+        // kind) to avoid permuted duplicates. Every maximal set is reachable
+        // in canonical order, so this prunes without losing configurations.
+        let mut any = false;
+        for kind in [SliceKind::G7, SliceKind::G4, SliceKind::G3, SliceKind::G2, SliceKind::G1] {
+            for start in placeable(&occ, gpcs_left, &counts, kind, has3, has4) {
+                any = true;
+                if let Some(last) = current.iter().rev().find(|p| p.kind == kind) {
+                    if start < last.start {
+                        continue;
+                    }
+                }
+                let mut occ2 = occ;
+                for s in start..start + kind.mem_slices() {
+                    occ2[s as usize] = true;
+                }
+                let mut counts2 = counts;
+                counts2[kind_index(kind)] += 1;
+                let mut cur2 = current.clone();
+                cur2.push(Placement { kind, start });
+                recurse(occ2, gpcs_left - kind.gpcs(), counts2, cur2, out);
+            }
+        }
+        if !any && !current.is_empty() {
+            let mut slices = current;
+            slices.sort_by_key(|p| p.start);
+            let cfg = MigConfig { slices };
+            if !out.contains(&cfg) {
+                out.push(cfg);
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    recurse([false; 8], 7, [0; 5], Vec::new(), &mut out);
+    out.sort_by(|a, b| {
+        b.gpc_multiset()
+            .cmp(&a.gpc_multiset())
+            .then_with(|| a.slices.iter().map(|p| p.start).collect::<Vec<_>>()
+                .cmp(&b.slices.iter().map(|p| p.start).collect::<Vec<_>>()))
+    });
+    out
+}
+
+/// Enumerate the valid configurations (computed once, cached).
+pub fn enumerate_configs() -> &'static [MigConfig] {
+    static CONFIGS: OnceLock<Vec<MigConfig>> = OnceLock::new();
+    CONFIGS.get_or_init(enumerate_maximal)
+}
+
+/// The paper's 18 configurations.
+pub struct AllConfigs;
+
+/// Convenience handle; `ALL_CONFIGS.iter()` yields the 18 configurations.
+pub static ALL_CONFIGS: AllConfigs = AllConfigs;
+
+impl AllConfigs {
+    pub fn iter(&self) -> std::slice::Iter<'static, MigConfig> {
+        enumerate_configs().iter()
+    }
+
+    pub fn len(&self) -> usize {
+        enumerate_configs().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Configurations with exactly `m` slices (Algorithm 1's `P_valid`).
+    pub fn with_len(&self, m: usize) -> impl Iterator<Item = &'static MigConfig> {
+        enumerate_configs().iter().filter(move |c| c.len() == m)
+    }
+}
+
+/// Whether a job mix whose per-job *minimum feasible slices* (GPC counts,
+/// sorted descending) are `min_gpcs_desc` can be hosted by some valid
+/// partition with exactly that many slices.
+///
+/// Exactness: along the slice order 1g→2g→3g→4g→7g both memory and GPCs
+/// are non-decreasing, so "job fits slice" is an up-set per job and a
+/// larger slice dominates a smaller one for *every* job. Matching jobs
+/// (sorted by requirement) to slices (sorted by size) greedily is then
+/// optimal (Hall's condition on nested intervals), so feasibility reduces
+/// to element-wise dominance of the sorted GPC multisets. This is the
+/// controller's hot-path admission check ("maximum spare slice",
+/// Sec. 4.3) — the full Algorithm-1 DP is only needed when *speedups*,
+/// not feasibility, are at stake.
+pub fn mix_feasible(min_gpcs_desc: &[u8]) -> bool {
+    let m = min_gpcs_desc.len();
+    if m == 0 || m > 7 {
+        return false;
+    }
+    debug_assert!(min_gpcs_desc.windows(2).all(|w| w[0] >= w[1]), "must be sorted desc");
+    sorted_multisets(m)
+        .iter()
+        .any(|gpcs| gpcs.iter().zip(min_gpcs_desc).all(|(&s, &need)| s >= need))
+}
+
+/// Distinct sorted-descending GPC multisets per slice count, cached.
+fn sorted_multisets(m: usize) -> &'static [Vec<u8>] {
+    static SETS: OnceLock<Vec<Vec<Vec<u8>>>> = OnceLock::new();
+    let all = SETS.get_or_init(|| {
+        let mut by_len: Vec<Vec<Vec<u8>>> = vec![Vec::new(); 8];
+        for c in enumerate_configs() {
+            let ms = c.gpc_multiset();
+            let bucket = &mut by_len[c.len()];
+            if !bucket.contains(&ms) {
+                bucket.push(ms);
+            }
+        }
+        by_len
+    });
+    &all[m.min(7)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_18_configs() {
+        assert_eq!(enumerate_configs().len(), 18, "paper: 18 MIG configurations on an A100");
+    }
+
+    #[test]
+    fn all_configs_valid() {
+        for c in ALL_CONFIGS.iter() {
+            assert!(c.is_valid(), "invalid config {c}");
+        }
+    }
+
+    #[test]
+    fn paper_examples_present() {
+        let multisets: Vec<Vec<u8>> = ALL_CONFIGS.iter().map(|c| c.gpc_multiset()).collect();
+        // Sec 2.2: "(4g, 2g, 1g) and (2g, 2g, 3g) are valid combinations"
+        assert!(multisets.contains(&vec![4, 2, 1]));
+        assert!(multisets.contains(&vec![3, 2, 2]));
+        // full GPU
+        assert!(multisets.contains(&vec![7]));
+        // 7-way split
+        assert!(multisets.contains(&vec![1; 7]));
+    }
+
+    #[test]
+    fn no_4g_3g_coexistence() {
+        for c in ALL_CONFIGS.iter() {
+            let ms = c.gpc_multiset();
+            assert!(
+                !(ms.contains(&4) && ms.contains(&3)),
+                "4g.20gb and 3g.20gb cannot co-exist: {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_job_count_coverable() {
+        // Algorithm 1 needs at least one partition for every m in 1..=7.
+        for m in 1..=7usize {
+            assert!(
+                ALL_CONFIGS.with_len(m).next().is_some(),
+                "no partition with {m} slices"
+            );
+        }
+    }
+
+    #[test]
+    fn gpc_budget_respected() {
+        for c in ALL_CONFIGS.iter() {
+            assert!(c.total_gpcs() <= 7);
+            assert!(c.total_mem_slices() <= 8);
+        }
+    }
+
+    #[test]
+    fn maximality() {
+        // No configuration can accept one more 1g slice (the smallest), i.e.
+        // either compute budget is exhausted or no free legal offset exists.
+        for c in ALL_CONFIGS.iter() {
+            let mut occ = [false; 8];
+            for p in &c.slices {
+                for s in p.start..p.start + p.kind.mem_slices() {
+                    occ[s as usize] = true;
+                }
+            }
+            let free_gpcs = 7 - c.total_gpcs();
+            let free_slot = SliceKind::G1
+                .placements()
+                .iter()
+                .any(|&s| !occ[s as usize]);
+            let onegs = c.slices.iter().filter(|p| p.kind == SliceKind::G1).count();
+            assert!(
+                free_gpcs == 0 || !free_slot || onegs >= 7,
+                "{c} is not maximal"
+            );
+        }
+    }
+
+    #[test]
+    fn display_format() {
+        let c = ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![4, 2, 1])
+            .unwrap();
+        assert_eq!(format!("{c}"), "(4g,2g,1g)");
+    }
+}

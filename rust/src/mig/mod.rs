@@ -1,0 +1,26 @@
+//! MIG (Multi-Instance GPU) slice profiles and partition configurations.
+//!
+//! Encodes the NVIDIA A100-40GB MIG geometry exactly as described in the
+//! paper (Table 1 + the 18 valid configurations of the appendix, Fig. 20).
+//! An A100 exposes 7 compute slices (GPCs) and 8 memory slices; each MIG
+//! profile occupies a contiguous run of memory slices and a number of GPCs:
+//!
+//! | profile  | GPCs | memory | cache | mem slices | placements |
+//! |----------|------|--------|-------|------------|------------|
+//! | 7g.40gb  | 7    | 40 GB  | 8/8   | 8          | {0}        |
+//! | 4g.20gb  | 4    | 20 GB  | 4/8   | 4          | {0}        |
+//! | 3g.20gb  | 3    | 20 GB  | 4/8   | 4          | {0, 4}     |
+//! | 2g.10gb  | 2    | 10 GB  | 2/8   | 2          | {0, 2, 4}  |
+//! | 1g.5gb   | 1    | 5 GB   | 1/8   | 1          | {0..=6}    |
+//!
+//! Enumerating all *maximal* non-overlapping placements under these rules
+//! (with the additional hardware restriction from the paper that `4g.20gb`
+//! and `3g.20gb` cannot coexist) yields exactly the paper's 18
+//! configurations: 1 (7g) + 2 (4g-led) + 1 (3g,3g) + 2 (3g@0-led)
+//! + 4 (3g@4-led) + 8 (2g/1g-only).
+
+mod configs;
+mod profiles;
+
+pub use configs::{enumerate_configs, mix_feasible, MigConfig, Placement, ALL_CONFIGS};
+pub use profiles::{SliceKind, ALL_SLICES, SCHEDULABLE_SLICES};

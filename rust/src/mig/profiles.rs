@@ -1,0 +1,200 @@
+//! MIG slice profiles (paper Table 1).
+
+
+use std::fmt;
+
+/// One of the five MIG slice profiles available on an A100-40GB.
+///
+/// The paper indexes slices by GPC count (`x_i ∈ {1, 2, 3, 4, 7}`); we keep
+/// the same convention throughout ([`SliceKind::gpcs`] is the paper's value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SliceKind {
+    /// `1g.5gb` — 1 GPC, 5 GB, 1/8 L2 cache.
+    G1,
+    /// `2g.10gb` — 2 GPC, 10 GB, 2/8 L2 cache.
+    G2,
+    /// `3g.20gb` — 3 GPC, 20 GB, 4/8 L2 cache.
+    G3,
+    /// `4g.20gb` — 4 GPC, 20 GB, 4/8 L2 cache.
+    G4,
+    /// `7g.40gb` — the full GPU, 7 GPC, 40 GB, full L2.
+    G7,
+}
+
+/// All profiles, largest first (the order used for "maximum spare slice").
+pub const ALL_SLICES: [SliceKind; 5] = [
+    SliceKind::G7,
+    SliceKind::G4,
+    SliceKind::G3,
+    SliceKind::G2,
+    SliceKind::G1,
+];
+
+/// The slice sizes a job can be scheduled on, smallest first.
+pub const SCHEDULABLE_SLICES: [SliceKind; 5] = [
+    SliceKind::G1,
+    SliceKind::G2,
+    SliceKind::G3,
+    SliceKind::G4,
+    SliceKind::G7,
+];
+
+impl SliceKind {
+    /// Number of GPCs (compute slices). This is the paper's `x_i` encoding.
+    pub const fn gpcs(self) -> u8 {
+        match self {
+            SliceKind::G1 => 1,
+            SliceKind::G2 => 2,
+            SliceKind::G3 => 3,
+            SliceKind::G4 => 4,
+            SliceKind::G7 => 7,
+        }
+    }
+
+    /// GPU memory capacity in MB (Table 1).
+    pub const fn memory_mb(self) -> u32 {
+        match self {
+            SliceKind::G1 => 5_000,
+            SliceKind::G2 => 10_000,
+            SliceKind::G3 => 20_000,
+            SliceKind::G4 => 20_000,
+            SliceKind::G7 => 40_000,
+        }
+    }
+
+    /// Number of the 8 memory slices the profile occupies. Memory bandwidth
+    /// is proportional to this (MIG isolates bandwidth per memory slice).
+    pub const fn mem_slices(self) -> u8 {
+        match self {
+            SliceKind::G1 => 1,
+            SliceKind::G2 => 2,
+            SliceKind::G3 => 4,
+            SliceKind::G4 => 4,
+            SliceKind::G7 => 8,
+        }
+    }
+
+    /// Fraction of the L2 cache (Table 1's `Cache` column).
+    pub const fn cache_fraction(self) -> f64 {
+        match self {
+            SliceKind::G1 => 1.0 / 8.0,
+            SliceKind::G2 => 2.0 / 8.0,
+            SliceKind::G3 => 4.0 / 8.0,
+            SliceKind::G4 => 4.0 / 8.0,
+            SliceKind::G7 => 1.0,
+        }
+    }
+
+    /// Fraction of SMs (GPCs / 7).
+    pub fn sm_fraction(self) -> f64 {
+        f64::from(self.gpcs()) / 7.0
+    }
+
+    /// Fraction of HBM bandwidth (memory slices / 8).
+    pub fn bw_fraction(self) -> f64 {
+        f64::from(self.mem_slices()) / 8.0
+    }
+
+    /// Maximum number of instances of this profile on one GPU (Table 1).
+    pub const fn max_count(self) -> u8 {
+        match self {
+            SliceKind::G1 => 7,
+            SliceKind::G2 => 3,
+            SliceKind::G3 => 2,
+            SliceKind::G4 => 1,
+            SliceKind::G7 => 1,
+        }
+    }
+
+    /// Valid starting memory-slice offsets on the 8-slice memory layout.
+    pub fn placements(self) -> &'static [u8] {
+        match self {
+            SliceKind::G1 => &[0, 1, 2, 3, 4, 5, 6],
+            SliceKind::G2 => &[0, 2, 4],
+            SliceKind::G3 => &[0, 4],
+            SliceKind::G4 => &[0],
+            SliceKind::G7 => &[0],
+        }
+    }
+
+    /// Parse from the paper's GPC-count encoding.
+    pub fn from_gpcs(g: u8) -> Option<SliceKind> {
+        match g {
+            1 => Some(SliceKind::G1),
+            2 => Some(SliceKind::G2),
+            3 => Some(SliceKind::G3),
+            4 => Some(SliceKind::G4),
+            7 => Some(SliceKind::G7),
+            _ => None,
+        }
+    }
+
+    /// Canonical profile name, e.g. `3g.20gb`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SliceKind::G1 => "1g.5gb",
+            SliceKind::G2 => "2g.10gb",
+            SliceKind::G3 => "3g.20gb",
+            SliceKind::G4 => "4g.20gb",
+            SliceKind::G7 => "7g.40gb",
+        }
+    }
+}
+
+impl fmt::Display for SliceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        // (slice, gpcs, mem_gb, cache_eighths, max_count)
+        let rows = [
+            (SliceKind::G7, 7, 40, 8, 1),
+            (SliceKind::G4, 4, 20, 4, 1),
+            (SliceKind::G3, 3, 20, 4, 2),
+            (SliceKind::G2, 2, 10, 2, 3),
+            (SliceKind::G1, 1, 5, 1, 7),
+        ];
+        for (k, g, mem, cache8, maxc) in rows {
+            assert_eq!(k.gpcs(), g);
+            assert_eq!(k.memory_mb(), mem * 1000);
+            assert!((k.cache_fraction() - f64::from(cache8) / 8.0).abs() < 1e-12);
+            assert_eq!(k.max_count(), maxc);
+        }
+    }
+
+    #[test]
+    fn sm_and_memory_one_to_one() {
+        // Sec 2.2: "the SM and memory are one-to-one mapped" — slices with
+        // more GPCs never have less memory.
+        let mut prev = (0u8, 0u32);
+        for k in [SliceKind::G1, SliceKind::G2, SliceKind::G3, SliceKind::G4, SliceKind::G7] {
+            assert!(k.gpcs() >= prev.0 && k.memory_mb() >= prev.1);
+            prev = (k.gpcs(), k.memory_mb());
+        }
+    }
+
+    #[test]
+    fn gpc_roundtrip() {
+        for k in ALL_SLICES {
+            assert_eq!(SliceKind::from_gpcs(k.gpcs()), Some(k));
+        }
+        assert_eq!(SliceKind::from_gpcs(5), None);
+        assert_eq!(SliceKind::from_gpcs(0), None);
+    }
+
+    #[test]
+    fn placements_fit_memory_layout() {
+        for k in ALL_SLICES {
+            for &p in k.placements() {
+                assert!(p + k.mem_slices() <= 8, "{k} at {p} overflows memory slices");
+            }
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! MISO's partition optimizer (paper Sec. 4.2, Algorithm 1).
+//!
+//! Given per-job speedup functions `f_i : slice → k_i ∈ [0, 1]` (0 encodes
+//! OOM/QoS infeasibility), find the MIG partition configuration with
+//! exactly `m = #jobs` slices maximizing `Σ f_i(x_i)` over the valid
+//! configurations `P_mig` (the 18 of [`crate::mig`]).
+//!
+//! For each candidate *physical* partition (a multiset of slice kinds), the
+//! best job→slice assignment is itself an optimization. The paper treats
+//! permutations of a partition as distinct feasible vectors ("[4,1,2] is
+//! feasible because the physical partition is the same — J2 and J3 are
+//! mapped to different slices"); enumerating all m! assignments is cheap at
+//! m ≤ 7 but wasteful. We instead sort slices descending and assign jobs by
+//! a greedy-optimal rule: because each `f_i` is non-decreasing in slice
+//! size, the assignment problem over a fixed multiset is solved exactly by
+//! Hungarian-style optimal matching — for which we use an exact O(m·2^m)
+//! bitmask DP (m ≤ 7 ⇒ ≤ 896 states), still well within the paper's 0.5 ms
+//! budget.
+
+use crate::mig::{MigConfig, SliceKind, ALL_CONFIGS};
+
+/// Per-job speedup table over the five slice kinds, indexed by
+/// [`slice_index`]. Values ∈ [0, 1]; 0 = the job cannot run there.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SpeedupTable(pub [f64; 5]);
+
+pub fn slice_index(k: SliceKind) -> usize {
+    match k {
+        SliceKind::G1 => 0,
+        SliceKind::G2 => 1,
+        SliceKind::G3 => 2,
+        SliceKind::G4 => 3,
+        SliceKind::G7 => 4,
+    }
+}
+
+impl SpeedupTable {
+    pub fn get(&self, k: SliceKind) -> f64 {
+        self.0[slice_index(k)]
+    }
+
+    pub fn set(&mut self, k: SliceKind, v: f64) {
+        self.0[slice_index(k)] = v;
+    }
+
+    /// Build from a closure over slice kinds.
+    pub fn from_fn(mut f: impl FnMut(SliceKind) -> f64) -> SpeedupTable {
+        let mut t = SpeedupTable::default();
+        for k in crate::mig::SCHEDULABLE_SLICES {
+            t.set(k, f(k));
+        }
+        t
+    }
+}
+
+/// Result of the partition optimization.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// The chosen physical configuration.
+    pub config: MigConfig,
+    /// `assignment[j]` = index into `config.slices` for job `j`.
+    pub assignment: Vec<usize>,
+    /// The achieved objective `Σ f_i(x_i)` (= predicted STP, Eq. 1).
+    pub objective: f64,
+}
+
+impl PartitionPlan {
+    /// Slice kind assigned to job `j`.
+    pub fn slice_for(&self, j: usize) -> SliceKind {
+        self.config.slices[self.assignment[j]].kind
+    }
+}
+
+/// Algorithm 1: exhaustive scan over valid partitions with exact
+/// job→slice matching per partition. Returns `None` when no feasible
+/// partition exists (e.g. some job OOMs on every slice of every m-way
+/// partition).
+///
+/// `require_all_feasible`: when true (MISO's default), a plan is rejected
+/// if any job would land on a slice where its speedup is 0 (OOM/QoS).
+pub fn optimize(tables: &[SpeedupTable]) -> Option<PartitionPlan> {
+    optimize_over(tables, ALL_CONFIGS.iter())
+}
+
+/// As [`optimize`] but over a caller-supplied configuration universe —
+/// used by the scalability study (Sec. 8: 10× combinations) and tests.
+pub fn optimize_over<'a>(
+    tables: &[SpeedupTable],
+    configs: impl Iterator<Item = &'a MigConfig>,
+) -> Option<PartitionPlan> {
+    let m = tables.len();
+    if m == 0 || m > 7 {
+        return None;
+    }
+    let mut best: Option<PartitionPlan> = None;
+    for cfg in configs.filter(|c| c.len() == m) {
+        if let Some((assignment, obj)) = best_assignment(tables, cfg) {
+            if best.as_ref().map_or(true, |b| obj > b.objective) {
+                best = Some(PartitionPlan { config: cfg.clone(), assignment, objective: obj });
+            }
+        }
+    }
+    best
+}
+
+/// Exact maximum-weight perfect matching of jobs onto `cfg`'s slices via
+/// bitmask DP. Returns `None` if every perfect matching forces some job
+/// onto a zero-speedup (infeasible) slice.
+fn best_assignment(tables: &[SpeedupTable], cfg: &MigConfig) -> Option<(Vec<usize>, f64)> {
+    let m = tables.len();
+    debug_assert_eq!(cfg.len(), m);
+    // dp[mask] = best objective assigning jobs 0..popcount(mask) to the
+    // slice set `mask`; parent pointers reconstruct the assignment.
+    // Stack-allocated (m ≤ 7 ⇒ ≤ 128 states): this routine runs inside the
+    // scheduler's hot loop and heap churn dominated the profile before
+    // (EXPERIMENTS.md §Perf).
+    let mut kinds = [SliceKind::G1; 7];
+    for (k, p) in kinds.iter_mut().zip(&cfg.slices) {
+        *k = p.kind;
+    }
+    let kinds = &kinds[..m];
+    let full = (1usize << m) - 1;
+    let mut dp = [f64::NEG_INFINITY; 128];
+    let mut parent = [usize::MAX; 128];
+    dp[0] = 0.0;
+    for mask in 0..=full {
+        if dp[mask] == f64::NEG_INFINITY {
+            continue;
+        }
+        let j = mask.count_ones() as usize; // next job to place
+        if j == m {
+            continue;
+        }
+        for (s, &kind) in kinds.iter().enumerate() {
+            if mask & (1 << s) != 0 {
+                continue;
+            }
+            let w = tables[j].get(kind);
+            if w <= 0.0 {
+                continue; // infeasible slice for this job
+            }
+            let nm = mask | (1 << s);
+            if dp[mask] + w > dp[nm] {
+                dp[nm] = dp[mask] + w;
+                parent[nm] = s;
+            }
+        }
+    }
+    if dp[full] == f64::NEG_INFINITY {
+        return None;
+    }
+    // Reconstruct: walk back from the full mask.
+    let mut assignment = vec![0usize; m];
+    let mut mask = full;
+    while mask != 0 {
+        let s = parent[mask];
+        let j = mask.count_ones() as usize - 1;
+        assignment[j] = s;
+        mask &= !(1 << s);
+    }
+    Some((assignment, dp[full]))
+}
+
+/// Reference implementation: enumerate every slice-permutation of every
+/// valid config (the paper's literal formulation). Exponentially slower;
+/// used by tests/benches to validate `optimize`.
+pub fn optimize_bruteforce(tables: &[SpeedupTable]) -> Option<PartitionPlan> {
+    let m = tables.len();
+    if m == 0 || m > 7 {
+        return None;
+    }
+    let mut best: Option<PartitionPlan> = None;
+    for cfg in ALL_CONFIGS.iter().filter(|c| c.len() == m) {
+        let mut idx: Vec<usize> = (0..m).collect();
+        permute(&mut idx, 0, &mut |perm| {
+            let mut obj = 0.0;
+            let mut ok = true;
+            for (j, &s) in perm.iter().enumerate() {
+                let w = tables[j].get(cfg.slices[s].kind);
+                if w <= 0.0 {
+                    ok = false;
+                    break;
+                }
+                obj += w;
+            }
+            if ok && best.as_ref().map_or(true, |b| obj > b.objective) {
+                best = Some(PartitionPlan {
+                    config: cfg.clone(),
+                    assignment: perm.to_vec(),
+                    objective: obj,
+                });
+            }
+        });
+    }
+    best
+}
+
+fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == v.len() {
+        f(v);
+        return;
+    }
+    for i in k..v.len() {
+        v.swap(k, i);
+        permute(v, k + 1, f);
+        v.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::SliceKind;
+
+    fn monotone_table(base: f64) -> SpeedupTable {
+        // Saturating curve parameterized by demand `base`.
+        SpeedupTable::from_fn(|k| (k.sm_fraction() / base).min(1.0))
+    }
+
+    #[test]
+    fn single_job_gets_full_gpu() {
+        let plan = optimize(&[monotone_table(0.9)]).unwrap();
+        assert_eq!(plan.config.gpc_multiset(), vec![7]);
+        assert_eq!(plan.slice_for(0), SliceKind::G7);
+    }
+
+    #[test]
+    fn heavy_job_gets_big_slice() {
+        // One compute-hungry job + two light jobs → (4,2,1) with the hungry
+        // job on 4g.
+        let tables = vec![monotone_table(0.95), monotone_table(0.15), monotone_table(0.15)];
+        let plan = optimize(&tables).unwrap();
+        assert!(plan.slice_for(0).gpcs() >= plan.slice_for(1).gpcs());
+        assert!(plan.slice_for(0).gpcs() >= plan.slice_for(2).gpcs());
+    }
+
+    #[test]
+    fn oom_job_never_on_small_slice() {
+        let mut t = monotone_table(0.5);
+        t.set(SliceKind::G1, 0.0);
+        t.set(SliceKind::G2, 0.0);
+        let tables = vec![t, monotone_table(0.2), monotone_table(0.2)];
+        let plan = optimize(&tables).unwrap();
+        assert!(plan.slice_for(0).gpcs() >= 3, "OOM job landed on {}", plan.slice_for(0));
+    }
+
+    #[test]
+    fn infeasible_when_all_zero() {
+        let zero = SpeedupTable::default();
+        assert!(optimize(&[zero, monotone_table(0.5)]).is_none());
+    }
+
+    #[test]
+    fn empty_and_oversized_rejected() {
+        assert!(optimize(&[]).is_none());
+        let t = vec![monotone_table(0.5); 8];
+        assert!(optimize(&t).is_none());
+    }
+
+    #[test]
+    fn plan_uses_exactly_m_slices() {
+        for m in 1..=7 {
+            let tables: Vec<_> = (0..m).map(|i| monotone_table(0.2 + 0.1 * i as f64)).collect();
+            let plan = optimize(&tables).unwrap();
+            assert_eq!(plan.config.len(), m);
+            // assignment is a permutation
+            let mut seen = vec![false; m];
+            for &s in &plan.assignment {
+                assert!(!seen[s]);
+                seen[s] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_bruteforce() {
+        let mut rng = crate::util::Rng::seed_from_u64(42);
+        for _ in 0..200 {
+            let m = 1 + rng.below(5); // brute force is m!·configs
+            let tables: Vec<SpeedupTable> = (0..m)
+                .map(|_| {
+                    let mut t = SpeedupTable::from_fn(|k| {
+                        // arbitrary (not necessarily monotone) tables
+                        (rng.f64() * k.sm_fraction()).min(1.0)
+                    });
+                    if rng.bool(0.2) {
+                        t.set(SliceKind::G1, 0.0);
+                    }
+                    t
+                })
+                .collect();
+            let a = optimize(&tables);
+            let b = optimize_bruteforce(&tables);
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    assert!((x.objective - y.objective).abs() < 1e-9, "{} vs {}", x.objective, y.objective)
+                }
+                (None, None) => {}
+                (x, y) => panic!("feasibility mismatch: {x:?} vs {y:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn objective_equals_sum_of_assigned_speedups() {
+        let tables = vec![monotone_table(0.6), monotone_table(0.3), monotone_table(0.8)];
+        let plan = optimize(&tables).unwrap();
+        let sum: f64 = (0..3).map(|j| tables[j].get(plan.slice_for(j))).sum();
+        assert!((plan.objective - sum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,219 @@
+//! Ground-truth simulated GPU performance model — the substitute for the
+//! paper's real A100 testbed (see DESIGN.md §Substitutions).
+//!
+//! Two faces:
+//!
+//! * [`mig_speed`] — interference-free execution speed of a job on a MIG
+//!   slice, normalized to its full-GPU (7g.40gb) speed. MIG grants the job
+//!   an exclusive fraction of SMs, HBM bandwidth, and L2 cache (Table 1).
+//! * [`mps_speeds`] — interference-*prone* speeds of a set of co-located
+//!   jobs under MPS at a given active-thread percentage. MPS caps each
+//!   job's SM share but leaves bandwidth and cache fully shared, so
+//!   co-runners contend.
+//!
+//! The model is a saturating-roofline composition: a job's iteration time
+//! splits into a serial part, a compute part (scales with granted SM up to
+//! its demand), and a memory part (scales with granted bandwidth, inflated
+//! when the L2 working set exceeds the granted cache). This reproduces the
+//! qualitative families the paper's characterization shows:
+//! compute-bound jobs scale ≈ linearly with GPCs, bandwidth-bound jobs
+//! track the (non-linear) memory-slice curve — note 3g and 4g have *equal*
+//! memory systems — and latency-bound jobs are flat. Crucially, MPS
+//! profiles are informative-but-distorted views of the MIG behaviour, so
+//! MPS→MIG translation is a genuine learning problem, as in the paper.
+
+mod mps;
+
+pub use mps::{mps_speeds, mps_speeds_caps, MpsLevel, MPS_LEVELS};
+
+use crate::mig::SliceKind;
+use crate::workload::WorkloadSpec;
+
+/// Resource grant: fractions of the full GPU's SMs, HBM bandwidth, and L2.
+#[derive(Debug, Clone, Copy)]
+pub struct Grant {
+    pub sm: f64,
+    pub bw: f64,
+    pub cache: f64,
+}
+
+impl Grant {
+    pub fn full() -> Grant {
+        Grant { sm: 1.0, bw: 1.0, cache: 1.0 }
+    }
+
+    pub fn for_slice(slice: SliceKind) -> Grant {
+        Grant {
+            sm: slice.sm_fraction(),
+            bw: slice.bw_fraction(),
+            cache: slice.cache_fraction(),
+        }
+    }
+}
+
+/// Relative iteration *time* (full GPU = the denominator's grant) for a job
+/// under an arbitrary resource grant. Speed = 1 / time ratio.
+///
+/// Iteration time decomposition on the full GPU (normalized so that total
+/// time = 1): `serial + compute + memory` where
+/// `compute = (1 - serial) · w_c`, `memory = (1 - serial) · (1 - w_c)`, and
+/// the compute weight `w_c` reflects how SM-dominated the job is.
+/// Smooth saturating cap: `≈ min(grant, demand)` but with a soft knee
+/// (p-norm softmin, p = 6). Real hardware throughput curves bend smoothly
+/// near saturation; the hard-min version also makes slice-to-slice speed
+/// relationships piecewise-linear, which would understate how learnable
+/// (and linearly-regressable, paper R² = 0.96) the 2g/1g speeds are.
+fn smooth_cap(grant: f64, demand: f64) -> f64 {
+    const P: f64 = 6.0;
+    (grant.powf(-P) + demand.powf(-P)).powf(-1.0 / P)
+}
+
+fn iteration_time(spec: &WorkloadSpec, g: Grant) -> f64 {
+    let serial = spec.serial_frac;
+    // Compute/memory split of the parallel portion: weight by demands.
+    let w_c = spec.sm_demand / (spec.sm_demand + spec.bw_demand);
+
+    // Compute: the job can absorb `sm_demand` of the GPU; granting less
+    // stretches compute time proportionally; granting more gives no benefit.
+    let sm_eff = smooth_cap(g.sm, spec.sm_demand);
+    // Latency-hiding: fewer SMs expose more stall time even when raw
+    // throughput demand is met, so compute time retains a mild slope past
+    // saturation (also what makes large-slice speeds informative about the
+    // small-slice knee — cf. the paper's R² = 0.96 linear head).
+    let hiding = 1.0 + 0.12 * (1.0 - g.sm);
+    let t_compute = (1.0 - serial) * w_c * (spec.sm_demand / sm_eff) * hiding;
+
+    // Memory: cache misses inflate DRAM *traffic* when the L2 working set
+    // exceeds the granted cache fraction. The job's achievable service rate
+    // is its (inflated) demand capped by the granted bandwidth. Relative to
+    // the full-GPU baseline (traffic = 1, rate = bw_demand):
+    //   t_mem / base = traffic · bw_demand / rate.
+    // Smooth hinge: ≈ max(0, (ws - cache)/ws) with a soft corner, for the
+    // same reason smooth_cap exists.
+    let x = (spec.cache_ws - g.cache) / spec.cache_ws;
+    let cache_deficit = 0.5 * (x + (x * x + 0.02).sqrt());
+    let traffic = 1.0 + 0.5 * cache_deficit; // DRAM traffic inflation ≥ 1
+    let bw_needed = spec.bw_demand * traffic;
+    let rate = smooth_cap(g.bw, bw_needed);
+    let t_memory = (1.0 - serial) * (1.0 - w_c) * traffic * (spec.bw_demand / rate);
+
+    serial + t_compute + t_memory
+}
+
+/// Interference-free speed of `spec` on `slice`, normalized to its speed on
+/// the exclusive full GPU: `k ∈ (0, 1]`. Returns 0 if the job's memory
+/// footprint does not fit the slice (OOM).
+pub fn mig_speed(spec: &WorkloadSpec, slice: SliceKind) -> f64 {
+    if spec.mem_mb > f64::from(slice.memory_mb()) {
+        return 0.0;
+    }
+    let t_full = iteration_time(spec, Grant::full());
+    let t_slice = iteration_time(spec, Grant::for_slice(slice));
+    (t_full / t_slice).clamp(0.0, 1.0)
+}
+
+/// Speed of `spec` under an arbitrary exclusive grant (used by the MPS
+/// model and tests), normalized to the full GPU.
+pub fn grant_speed(spec: &WorkloadSpec, g: Grant) -> f64 {
+    let t_full = iteration_time(spec, Grant::full());
+    let t = iteration_time(spec, g);
+    (t_full / t).clamp(0.0, 1.0)
+}
+
+/// The paper's STP (Eq. 1) for a set of (spec, normalized speed) pairs:
+/// `Σ q_i / p_i` where `q_i/p_i` is exactly the normalized speed.
+pub fn system_throughput(normalized_speeds: &[f64]) -> f64 {
+    normalized_speeds.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelFamily, WorkloadSpec};
+
+    fn spec(f: ModelFamily) -> WorkloadSpec {
+        WorkloadSpec::new(f, 0, (0.0, 0.0))
+    }
+
+    #[test]
+    fn full_slice_speed_is_one() {
+        for f in crate::workload::ALL_FAMILIES {
+            let s = spec(f);
+            assert!(
+                (mig_speed(&s, SliceKind::G7) - 1.0).abs() < 1e-9,
+                "{f:?}: {}",
+                mig_speed(&s, SliceKind::G7)
+            );
+        }
+    }
+
+    #[test]
+    fn speed_monotone_in_slice_size() {
+        for f in crate::workload::ALL_FAMILIES {
+            let s = spec(f);
+            let speeds: Vec<f64> = [SliceKind::G1, SliceKind::G2, SliceKind::G3, SliceKind::G4, SliceKind::G7]
+                .iter()
+                .map(|&k| mig_speed(&s, k))
+                .collect();
+            for w in speeds.windows(2) {
+                assert!(w[0] <= w[1] + 1e-9, "{f:?}: {speeds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn oom_returns_zero() {
+        let mut s = spec(ModelFamily::Bert);
+        s.mem_mb = 12_000.0;
+        assert_eq!(mig_speed(&s, SliceKind::G1), 0.0);
+        assert_eq!(mig_speed(&s, SliceKind::G2), 0.0);
+        assert!(mig_speed(&s, SliceKind::G3) > 0.0);
+    }
+
+    #[test]
+    fn underutilizing_job_flat_on_large_slices() {
+        // MobileNet (sm_demand 0.35) should be nearly as fast on 3g (sm 0.43)
+        // as on 7g — the paper's motivation for co-location.
+        let s = spec(ModelFamily::MobileNet);
+        let k3 = mig_speed(&s, SliceKind::G3);
+        assert!(k3 > 0.85, "underutilizing job should barely slow on 3g: {k3}");
+    }
+
+    #[test]
+    fn compute_bound_job_scales_with_gpcs() {
+        let s = spec(ModelFamily::CycleGan); // sm_demand 0.9
+        let k1 = mig_speed(&s, SliceKind::G1);
+        let k7 = mig_speed(&s, SliceKind::G7);
+        assert!(k1 < 0.45, "compute-bound job should suffer on 1g: {k1}");
+        assert!(k7 / k1 > 2.0);
+    }
+
+    #[test]
+    fn g3_equals_g4_for_bandwidth_bound() {
+        // 3g and 4g have identical memory systems (20 GB, 4/8 cache, 4 mem
+        // slices); a bandwidth-bound job should see nearly equal speeds —
+        // the structural quirk that defeats SM-proportional heuristics (Fig. 5).
+        let s = spec(ModelFamily::Embedding); // bw-heavy, sm-light
+        let k3 = mig_speed(&s, SliceKind::G3);
+        let k4 = mig_speed(&s, SliceKind::G4);
+        assert!((k4 - k3) < 0.05, "3g {k3} vs 4g {k4}");
+    }
+
+    #[test]
+    fn speeds_in_unit_interval() {
+        for f in crate::workload::ALL_FAMILIES {
+            for b in 0..4 {
+                let s = WorkloadSpec::new(f, b, (0.3, -0.7));
+                for k in crate::mig::SCHEDULABLE_SLICES {
+                    let v = mig_speed(&s, k);
+                    assert!((0.0..=1.0).contains(&v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stp_is_sum_of_normalized_speeds() {
+        assert!((system_throughput(&[0.5, 0.25, 0.75]) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,230 @@
+//! MPS (Multi-Process Service) contention model.
+//!
+//! MPS space-shares only the SMs: each job is capped at an *active-thread
+//! percentage*, while HBM bandwidth and L2 cache remain fully shared
+//! (paper Fig. 1). Co-located jobs therefore interfere:
+//!
+//! * **SM**: a job gets `min(its demand, its thread cap)` of the SMs, scaled
+//!   down when the sum of effective demands exceeds the machine.
+//! * **Bandwidth**: shared proportionally to (cache-inflated) demand when
+//!   oversubscribed.
+//! * **Cache**: each job's effective L2 share is its working-set-weighted
+//!   fraction of the total working set — co-runners pollute the cache.
+//! * A small MPS scheduling overhead per extra co-runner models the
+//!   software-based context interleaving (the "interference-prone" nature
+//!   the paper highlights).
+
+use super::{grant_speed, Grant};
+use crate::workload::WorkloadSpec;
+
+/// The three MPS active-thread-percentage levels MISO profiles at
+/// (Sec. 4.1: 100, 50, 14 — at 14% all 7 jobs have an exclusive SM block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MpsLevel {
+    /// 100% — all jobs share access to the full GPU.
+    Full,
+    /// 50% — middle ground.
+    Half,
+    /// 14% — every one of up to 7 jobs has its own exclusive SM block.
+    Exclusive,
+}
+
+pub const MPS_LEVELS: [MpsLevel; 3] = [MpsLevel::Full, MpsLevel::Half, MpsLevel::Exclusive];
+
+impl MpsLevel {
+    pub fn thread_percentage(self) -> f64 {
+        match self {
+            MpsLevel::Full => 1.00,
+            MpsLevel::Half => 0.50,
+            MpsLevel::Exclusive => 0.14,
+        }
+    }
+}
+
+/// Per-process MPS scheduling/interleaving overhead: each extra *active*
+/// co-runner shaves a small multiplicative factor (software scheduling,
+/// launch serialization, pipe contention). Near-idle co-runners (e.g. the
+/// dummy padding workloads) issue too little work to contend.
+const MPS_CORUNNER_PENALTY: f64 = 0.08;
+
+/// Demand floor below which a co-runner does not meaningfully interfere.
+const MPS_ACTIVE_FLOOR: f64 = 0.10;
+
+/// Speeds of co-located jobs running concurrently under MPS with every job
+/// capped at `level`'s active-thread percentage. Speeds are normalized to
+/// each job's exclusive full-GPU speed (same convention as
+/// [`super::mig_speed`]). Jobs always fit memory-wise during MPS in this
+/// model: profiling happens on the 7g.40gb slice and the scheduler ensures
+/// aggregate footprints fit before co-locating.
+///
+/// Can also be called with per-job thread caps via [`mps_speeds_caps`].
+pub fn mps_speeds(specs: &[WorkloadSpec], level: MpsLevel) -> Vec<f64> {
+    let caps: Vec<f64> = specs.iter().map(|_| level.thread_percentage()).collect();
+    mps_speeds_caps(specs, &caps)
+}
+
+/// MPS speeds with an explicit per-job active-thread cap (used by the
+/// Fig. 3 experiments, e.g. (57%, 29%, 14%), and the MPS-only scheduler).
+pub fn mps_speeds_caps(specs: &[WorkloadSpec], caps: &[f64]) -> Vec<f64> {
+    assert_eq!(specs.len(), caps.len());
+    if specs.is_empty() {
+        return vec![];
+    }
+
+    // --- Cache: shared L2 divides by working-set pressure. Each job's
+    //     granted fraction of the full L2: its working set if everything
+    //     fits together, otherwise its pressure-proportional share. ---
+    let total_ws: f64 = specs.iter().map(|s| s.cache_ws).sum();
+    let cache_grants: Vec<f64> = specs
+        .iter()
+        .map(|s| {
+            if total_ws <= 1.0 {
+                s.cache_ws
+            } else {
+                s.cache_ws / total_ws
+            }
+        })
+        .collect();
+
+    // --- SM: demand capped by thread percentage; proportional scale-down
+    //     when the aggregate exceeds the machine. ---
+    let eff_sm: Vec<f64> = specs
+        .iter()
+        .zip(caps)
+        .map(|(s, &c)| s.sm_demand.min(c))
+        .collect();
+    let sm_total: f64 = eff_sm.iter().sum();
+    let sm_scale = if sm_total > 1.0 { 1.0 / sm_total } else { 1.0 };
+
+    // --- Bandwidth: cache-deficit-inflated demands share the HBM
+    //     proportionally when oversubscribed. ---
+    let inflated_bw: Vec<f64> = specs
+        .iter()
+        .zip(&cache_grants)
+        .map(|(s, &gc)| {
+            let x = (s.cache_ws - gc) / s.cache_ws;
+            let deficit = 0.5 * (x + (x * x + 0.02).sqrt());
+            s.bw_demand * (1.0 + 0.5 * deficit)
+        })
+        .collect();
+    // Shared-HBM contention: unlike MIG's per-memory-slice isolation,
+    // concurrent access streams interleave on the same channels (row-buffer
+    // conflicts, scheduler thrash), shrinking the effective pool. Jobs with
+    // negligible traffic don't contribute to the thrash.
+    let heavy = specs.iter().filter(|s| s.bw_demand >= 0.10).count();
+    let pool = (1.0 - 0.18 * heavy.saturating_sub(1) as f64).max(0.45);
+    let bw_total: f64 = inflated_bw.iter().sum();
+    let bw_scale = if bw_total > pool { pool / bw_total } else { 1.0 };
+
+    // --- Compose per-job grants and evaluate the roofline. ---
+    let active = specs
+        .iter()
+        .filter(|s| s.sm_demand >= MPS_ACTIVE_FLOOR || s.bw_demand >= MPS_ACTIVE_FLOOR)
+        .count();
+    let interference = (1.0 - MPS_CORUNNER_PENALTY * active.saturating_sub(1) as f64).max(0.5);
+
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let g = Grant {
+                sm: (eff_sm[i] * sm_scale).max(1e-6),
+                bw: (inflated_bw[i] * bw_scale).max(1e-6),
+                cache: cache_grants[i],
+            };
+            grant_speed(s, g) * interference
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelFamily, WorkloadSpec, ALL_FAMILIES};
+
+    fn spec(f: ModelFamily) -> WorkloadSpec {
+        WorkloadSpec::new(f, 0, (0.0, 0.0))
+    }
+
+    #[test]
+    fn single_job_full_mps_is_near_exclusive() {
+        for f in ALL_FAMILIES {
+            let s = spec(f);
+            let v = mps_speeds(&[s], MpsLevel::Full);
+            assert!(v[0] > 0.85, "{f:?}: {}", v[0]);
+        }
+    }
+
+    #[test]
+    fn speeds_in_unit_interval() {
+        let specs: Vec<_> = ALL_FAMILIES.iter().map(|&f| spec(f)).collect();
+        for level in MPS_LEVELS {
+            for v in mps_speeds(&specs[..7], level) {
+                assert!(v > 0.0 && v <= 1.0, "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_corunners_slower() {
+        let s = spec(ModelFamily::ResNet50);
+        let mut prev = f64::INFINITY;
+        for n in 1..=7 {
+            let mix: Vec<_> = (0..n).map(|_| s).collect();
+            let v = mps_speeds(&mix, MpsLevel::Full)[0];
+            assert!(v <= prev + 1e-9, "n={n}: {v} > {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn thread_cap_binds_compute_bound() {
+        let s = spec(ModelFamily::CycleGan); // sm_demand 0.9
+        let full = mps_speeds(&[s], MpsLevel::Full)[0];
+        let excl = mps_speeds(&[s], MpsLevel::Exclusive)[0];
+        assert!(excl < 0.35, "14% cap should throttle compute-bound job: {excl}");
+        assert!(full > 2.0 * excl);
+    }
+
+    #[test]
+    fn thread_cap_mild_for_latency_bound() {
+        let s = spec(ModelFamily::GraphNN); // sm_demand 0.30, serial 0.18
+        let excl = mps_speeds(&[s], MpsLevel::Exclusive)[0];
+        let full = mps_speeds(&[s], MpsLevel::Full)[0];
+        assert!(excl / full > 0.55, "latency-bound job barely hurt by cap: {excl}/{full}");
+    }
+
+    #[test]
+    fn mps_differs_from_mig_at_matched_sm() {
+        // The paper's Fig. 3 point: MPS at the same SM ratio as a MIG slice
+        // is (typically) slower because bandwidth and cache stay shared.
+        let mix = [spec(ModelFamily::ResNet50), spec(ModelFamily::Embedding), spec(ModelFamily::MobileNet)];
+        // MPS caps 4/7, 2/7, 1/7 ≈ MIG (4g, 2g, 1g)
+        let caps = [4.0 / 7.0, 2.0 / 7.0, 1.0 / 7.0];
+        let mps = mps_speeds_caps(&mix, &caps);
+        let mig = [
+            super::super::mig_speed(&mix[0], crate::mig::SliceKind::G4),
+            super::super::mig_speed(&mix[1], crate::mig::SliceKind::G2),
+            super::super::mig_speed(&mix[2], crate::mig::SliceKind::G1),
+        ];
+        let stp_mps: f64 = mps.iter().sum();
+        let stp_mig: f64 = mig.iter().sum();
+        assert!(
+            stp_mig > stp_mps,
+            "isolation should win for this mix: MIG {stp_mig} vs MPS {stp_mps}"
+        );
+    }
+
+    #[test]
+    fn caps_are_respected() {
+        // A compute-bound job capped at 29% cannot exceed roughly that share.
+        let mix = [spec(ModelFamily::CycleGan), spec(ModelFamily::CycleGan)];
+        let v = mps_speeds_caps(&mix, &[0.29, 0.29]);
+        assert!(v[0] < 0.45, "{}", v[0]);
+    }
+
+    #[test]
+    fn empty_mix_ok() {
+        assert!(mps_speeds(&[], MpsLevel::Full).is_empty());
+    }
+}

@@ -1,0 +1,205 @@
+//! Predictor I/O construction (paper Fig. 8).
+//!
+//! Input: a 3×7 matrix — rows are the MPS active-thread levels
+//! {100, 50, 14}%, columns are jobs. Mixes with fewer than 7 jobs are
+//! padded with *lightweight dummy workloads that actually run* (the paper
+//! found zero-padding hurts training). Each column is normalized by its
+//! maximum across the 3 levels, so entries ∈ (0, 1].
+//!
+//! Output/target: a 3×7 matrix — rows are speeds on the {7g, 4g, 3g} MIG
+//! slices, each column normalized by its max (= the 7g speed).
+
+use crate::perfmodel::{mig_speed, mps_speeds, MPS_LEVELS};
+use crate::util::Rng;
+use crate::workload::WorkloadSpec;
+
+/// Number of job columns (A100: at most 7 co-located jobs).
+pub const COLS: usize = 7;
+/// Number of MPS levels / output slice rows.
+pub const ROWS: usize = 3;
+
+/// The measured 3×7 MPS profile matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MpsMatrix {
+    /// `data[row][col]`; rows = MPS levels 100/50/14, cols = jobs
+    /// (real jobs first, then dummies).
+    pub data: [[f64; COLS]; ROWS],
+    /// Number of real (non-dummy) jobs.
+    pub num_real: usize,
+}
+
+impl MpsMatrix {
+    /// Flatten row-major to f32 (the U-Net HLO's input layout).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().flatten().map(|&v| v as f32).collect()
+    }
+}
+
+/// Measurement noise model for a finite profiling window: iteration-time
+/// variance over a `t`-second window yields a throughput-estimate error
+/// ∝ 1/√t. `noise = Some((rng, per_level_seconds))` perturbs entries; the
+/// paper's default window is 10 s per level.
+pub type MeasureNoise<'a> = Option<(&'a mut Rng, f64)>;
+
+/// Profile a job mix under MPS: pad with dummies to 7, run the padded mix
+/// at each of the three levels on the simulated hardware, normalize
+/// per-column.
+pub fn profile_mps_matrix(specs: &[WorkloadSpec], noise: MeasureNoise) -> MpsMatrix {
+    assert!(!specs.is_empty() && specs.len() <= COLS, "1..=7 jobs");
+    let mut padded: Vec<WorkloadSpec> = specs.to_vec();
+    while padded.len() < COLS {
+        padded.push(WorkloadSpec::dummy());
+    }
+
+    // Base CV of a single 10 s window measurement, from run-to-run iteration
+    // jitter; scales as 1/sqrt(t/10).
+    const BASE_CV_AT_10S: f64 = 0.03;
+
+    let mut data = [[0.0; COLS]; ROWS];
+    let mut noise = noise;
+    for (r, level) in MPS_LEVELS.iter().enumerate() {
+        let speeds = mps_speeds(&padded, *level);
+        for (c, &v) in speeds.iter().enumerate() {
+            let measured = match &mut noise {
+                Some((rng, per_level_s)) => {
+                    let cv = BASE_CV_AT_10S / (*per_level_s / 10.0).sqrt();
+                    (v * (1.0 + cv * rng.normal())).max(1e-4)
+                }
+                None => v,
+            };
+            data[r][c] = measured;
+        }
+    }
+
+    // Per-column normalization by the column max.
+    for c in 0..COLS {
+        let max = (0..ROWS).map(|r| data[r][c]).fold(f64::MIN, f64::max);
+        for r in 0..ROWS {
+            data[r][c] /= max;
+        }
+    }
+    MpsMatrix { data, num_real: specs.len() }
+}
+
+/// Ground-truth training target for one job: speeds on {7g, 4g, 3g}
+/// normalized by the column max. With our normalization convention the 7g
+/// speed is 1 by construction, so the target is `[1, k4, k3]`. Jobs too
+/// large even for 20 GB would OOM on 4g/3g — the paper's methodology keeps
+/// all MIG-compatible jobs within 20 GB, which the zoo guarantees.
+pub fn mig_target(spec: &WorkloadSpec) -> [f64; ROWS] {
+    let k7 = mig_speed(spec, crate::mig::SliceKind::G7);
+    let k4 = mig_speed(spec, crate::mig::SliceKind::G4);
+    let k3 = mig_speed(spec, crate::mig::SliceKind::G3);
+    let max = k7.max(k4).max(k3).max(1e-9);
+    [k7 / max, k4 / max, k3 / max]
+}
+
+/// Ground-truth 2g/1g speeds (for training the linear-regression head).
+/// Entries are 0 when the job OOMs on the slice.
+pub fn mig_small_slices(spec: &WorkloadSpec) -> [f64; 2] {
+    [
+        mig_speed(spec, crate::mig::SliceKind::G2),
+        mig_speed(spec, crate::mig::SliceKind::G1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceGenerator;
+
+    fn specs(m: usize, seed: u64) -> Vec<WorkloadSpec> {
+        TraceGenerator::generate_mix(seed, m, 600.0)
+            .into_iter()
+            .map(|j| j.spec)
+            .collect()
+    }
+
+    #[test]
+    fn matrix_shape_and_range() {
+        for m in 1..=7 {
+            let mat = profile_mps_matrix(&specs(m, 1), None);
+            assert_eq!(mat.num_real, m);
+            for r in 0..ROWS {
+                for c in 0..COLS {
+                    assert!(
+                        mat.data[r][c] > 0.0 && mat.data[r][c] <= 1.0,
+                        "[{r}][{c}] = {}",
+                        mat.data[r][c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn columns_normalized_to_max_one() {
+        let mat = profile_mps_matrix(&specs(4, 2), None);
+        for c in 0..COLS {
+            let max = (0..ROWS).map(|r| mat.data[r][c]).fold(f64::MIN, f64::max);
+            assert!((max - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dummies_fill_remaining_columns() {
+        let mat = profile_mps_matrix(&specs(2, 3), None);
+        assert_eq!(mat.num_real, 2);
+        // dummy columns still contain meaningful (nonzero) values
+        for c in 2..COLS {
+            assert!(mat.data[0][c] > 0.0);
+        }
+    }
+
+    #[test]
+    fn column_permutation_equivariance() {
+        // The paper's data augmentation relies on this: permuting job
+        // columns permutes the matrix columns identically.
+        let s = specs(7, 4);
+        let mat = profile_mps_matrix(&s, None);
+        let mut perm = s.clone();
+        perm.swap(0, 3);
+        let mat_p = profile_mps_matrix(&perm, None);
+        for r in 0..ROWS {
+            assert!((mat.data[r][0] - mat_p.data[r][3]).abs() < 1e-12);
+            assert!((mat.data[r][3] - mat_p.data[r][0]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn noise_shrinks_with_longer_window() {
+        let s = specs(5, 5);
+        let clean = profile_mps_matrix(&s, None);
+        let err_at = |window: f64, seed: u64| {
+            let mut rng = Rng::seed_from_u64(seed);
+            let noisy = profile_mps_matrix(&s, Some((&mut rng, window)));
+            let mut err = 0.0;
+            for r in 0..ROWS {
+                for c in 0..COLS {
+                    err += (noisy.data[r][c] - clean.data[r][c]).abs();
+                }
+            }
+            err / (ROWS * COLS) as f64
+        };
+        let short: f64 = (0..20).map(|i| err_at(2.5, i)).sum::<f64>() / 20.0;
+        let long: f64 = (0..20).map(|i| err_at(40.0, i)).sum::<f64>() / 20.0;
+        assert!(short > 2.0 * long, "short {short} vs long {long}");
+    }
+
+    #[test]
+    fn target_first_row_is_one() {
+        for s in specs(7, 6) {
+            let t = mig_target(&s);
+            assert_eq!(t[0], 1.0);
+            assert!(t[1] <= 1.0 && t[2] <= t[1] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn to_f32_is_row_major_21() {
+        let mat = profile_mps_matrix(&specs(3, 7), None);
+        let flat = mat.to_f32();
+        assert_eq!(flat.len(), 21);
+        assert!((flat[8] as f64 - mat.data[1][1]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,155 @@
+//! Heuristic partitioners (paper Fig. 5): pick the MIG partition whose GPC
+//! vector has the highest cosine similarity to a per-job characteristic
+//! vector (memory footprint, exclusive-run power draw, or exclusive-run SM
+//! utilization), then assign jobs to slices by matching rank order.
+//! The paper shows these trail the optimal partition by 8–14% STP.
+
+use crate::mig::{MigConfig, ALL_CONFIGS};
+use crate::workload::WorkloadSpec;
+
+/// The job characteristic each heuristic keys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeuristicKind {
+    /// Exclusive-run GPU memory consumption.
+    Memory,
+    /// Exclusive-run average power draw.
+    Power,
+    /// Exclusive-run average SM utilization.
+    SmUtil,
+}
+
+impl HeuristicKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            HeuristicKind::Memory => "memory",
+            HeuristicKind::Power => "power",
+            HeuristicKind::SmUtil => "sm-util",
+        }
+    }
+
+    fn characteristic(self, s: &WorkloadSpec) -> f64 {
+        match self {
+            HeuristicKind::Memory => s.mem_mb,
+            HeuristicKind::Power => s.power_watts(),
+            HeuristicKind::SmUtil => s.sm_utilization(),
+        }
+    }
+}
+
+/// Choose the partition for `specs` by cosine similarity (paper's method:
+/// e.g. memory [4000, 2500, 1000] → partition (4g, 2g, 1g)). Returns the
+/// config and the job→slice-index assignment (jobs ranked by characteristic
+/// land on slices ranked by GPC count).
+pub fn choose_partition(
+    specs: &[WorkloadSpec],
+    kind: HeuristicKind,
+) -> Option<(&'static MigConfig, Vec<usize>)> {
+    let m = specs.len();
+    if m == 0 || m > 7 {
+        return None;
+    }
+    let c: Vec<f64> = specs.iter().map(|s| kind.characteristic(s)).collect();
+
+    // Rank of each job by descending characteristic.
+    let mut job_rank: Vec<usize> = (0..m).collect();
+    job_rank.sort_by(|&a, &b| c[b].partial_cmp(&c[a]).unwrap());
+
+    let mut best: Option<(&'static MigConfig, f64)> = None;
+    for cfg in ALL_CONFIGS.with_len(m) {
+        // Compare the job characteristic vector with the GPC vector under
+        // the rank-matched pairing (both sorted descending) — equivalent to
+        // the paper's max-cosine over slice orderings.
+        let mut gpcs: Vec<f64> = cfg.slices.iter().map(|p| f64::from(p.kind.gpcs())).collect();
+        gpcs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let sorted_c: Vec<f64> = job_rank.iter().map(|&j| c[j]).collect();
+        let cos = cosine(&sorted_c, &gpcs);
+        if best.map_or(true, |(_, b)| cos > b) {
+            best = Some((cfg, cos));
+        }
+    }
+    let (cfg, _) = best?;
+
+    // Assign: slice indices sorted by GPC descending get jobs by rank.
+    let mut slice_order: Vec<usize> = (0..m).collect();
+    slice_order.sort_by(|&a, &b| cfg.slices[b].kind.gpcs().cmp(&cfg.slices[a].kind.gpcs()));
+    let mut assignment = vec![0usize; m];
+    for (rank, &j) in job_rank.iter().enumerate() {
+        assignment[j] = slice_order[rank];
+    }
+    Some((cfg, assignment))
+}
+
+/// STP achieved by a heuristic choice on the simulated hardware.
+pub fn heuristic_stp(specs: &[WorkloadSpec], kind: HeuristicKind) -> Option<f64> {
+    let (cfg, assignment) = choose_partition(specs, kind)?;
+    Some(
+        specs
+            .iter()
+            .zip(&assignment)
+            .map(|(s, &si)| crate::perfmodel::mig_speed(s, cfg.slices[si].kind))
+            .sum(),
+    )
+}
+
+fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    dot / (na * nb).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelFamily, WorkloadSpec};
+
+    #[test]
+    fn paper_memory_example() {
+        // Memory 4000/2500/1000 MB → (4g, 2g, 1g) per the paper's example.
+        let mut specs: Vec<WorkloadSpec> = (0..3)
+            .map(|i| WorkloadSpec::new(ModelFamily::Transformer, i, (0.0, 0.0)))
+            .collect();
+        specs[0].mem_mb = 4000.0;
+        specs[1].mem_mb = 2500.0;
+        specs[2].mem_mb = 1000.0;
+        let (cfg, assignment) = choose_partition(&specs, HeuristicKind::Memory).unwrap();
+        // The paper's prose says (4g,2g,1g); numerically cosine([4,2.5,1])
+        // is maximized by (3,2,1) (0.9978 vs 0.9955) — either is a
+        // "proportional" answer; we assert the proportional shape + ranking.
+        let ms = cfg.gpc_multiset();
+        assert!(ms == vec![4, 2, 1] || ms == vec![3, 2, 1], "{ms:?}");
+        let g: Vec<u8> = assignment.iter().map(|&si| cfg.slices[si].kind.gpcs()).collect();
+        assert!(g[0] > g[1] && g[1] > g[2], "ranking preserved: {g:?}");
+    }
+
+    #[test]
+    fn heuristics_at_most_optimal() {
+        // Heuristic STP never exceeds the Algorithm-1 optimum on true tables.
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        for trial in 0..50 {
+            let m = 2 + rng.below(5);
+            let specs: Vec<WorkloadSpec> = (0..m)
+                .map(|_| crate::workload::TraceGenerator::sample_spec(&mut rng))
+                .collect();
+            let tables: Vec<_> = specs
+                .iter()
+                .map(|s| {
+                    crate::optimizer::SpeedupTable::from_fn(|k| crate::perfmodel::mig_speed(s, k))
+                })
+                .collect();
+            let opt = crate::optimizer::optimize(&tables).map(|p| p.objective);
+            for kind in [HeuristicKind::Memory, HeuristicKind::Power, HeuristicKind::SmUtil] {
+                if let (Some(h), Some(o)) = (heuristic_stp(&specs, kind), opt) {
+                    assert!(h <= o + 1e-9, "trial {trial}: {} {h} > optimal {o}", kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn equal_jobs_get_equal_partition() {
+        let specs = vec![WorkloadSpec::new(ModelFamily::MobileNet, 0, (0.0, 0.0)); 7];
+        let (cfg, _) = choose_partition(&specs, HeuristicKind::SmUtil).unwrap();
+        assert_eq!(cfg.gpc_multiset(), vec![1; 7]);
+    }
+}

@@ -1,0 +1,125 @@
+//! The production predictor: the trained U-Net autoencoder, AOT-lowered to
+//! HLO text by `python/compile/aot.py`, executed on the PJRT CPU client.
+//!
+//! Artifacts (built by `make artifacts`):
+//! * `artifacts/predictor.hlo.txt` — the U-Net inference graph. Parameters:
+//!   `(input 1×3×7×1 f32, w0, b0, w1, b1, ...)` in the order listed in the
+//!   manifest; returns a 1-tuple containing the 1×3×7×1 output.
+//! * `artifacts/weights.bin` — all weight tensors, row-major f32 LE,
+//!   concatenated in manifest order.
+//! * `artifacts/manifest.json` — `{"params": [{"name", "shape": [...]},...],
+//!   "linreg": {...}, "val_mae": ...}`.
+
+use super::features::MpsMatrix;
+use super::linreg::LinRegHead;
+use super::Predictor;
+use crate::optimizer::SpeedupTable;
+use crate::runtime::HloExecutable;
+use crate::workload::WorkloadSpec;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// U-Net predictor backed by the PJRT runtime.
+pub struct UNetPredictor {
+    exe: HloExecutable,
+    /// Weight tensors in parameter order: (flattened data, shape).
+    weights: Vec<(Vec<f32>, Vec<i64>)>,
+    head: LinRegHead,
+    /// Validation MAE recorded at training time (for reporting).
+    pub val_mae: f64,
+}
+
+impl UNetPredictor {
+    /// Load from the artifact directory (default `artifacts/`).
+    pub fn load_default() -> Result<UNetPredictor> {
+        Self::load(crate::runtime::artifacts_dir())
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<UNetPredictor> {
+        let dir = dir.as_ref();
+        let manifest_src = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let manifest = crate::util::json::parse(&manifest_src)?;
+
+        let all = crate::runtime::read_f32_bin(dir.join("weights.bin"))?;
+        let mut weights = Vec::new();
+        let mut off = 0usize;
+        for p in manifest.req_arr("params")? {
+            let shape: Vec<i64> = p
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as i64)
+                .collect();
+            let len: usize = shape.iter().product::<i64>() as usize;
+            anyhow::ensure!(off + len <= all.len(), "weights.bin too short");
+            weights.push((all[off..off + len].to_vec(), shape));
+            off += len;
+        }
+        anyhow::ensure!(off == all.len(), "weights.bin has {} trailing floats", all.len() - off);
+
+        let head = LinRegHead::from_manifest(
+            manifest.get("linreg").context("manifest missing 'linreg'")?,
+        )?;
+        let val_mae = manifest.req_f64("val_mae").unwrap_or(f64::NAN);
+        let exe = HloExecutable::load(dir.join("predictor.hlo.txt"))?;
+        Ok(UNetPredictor { exe, weights, head, val_mae })
+    }
+
+    /// Run the U-Net on one 3×7 matrix; returns the 3×7 output
+    /// (rows = speeds on {7g, 4g, 3g}).
+    pub fn infer_matrix(&self, matrix: &MpsMatrix) -> Result<[[f64; 7]; 3]> {
+        let input = matrix.to_f32();
+        let mut args: Vec<(&[f32], &[i64])> = vec![(&input, &[1, 3, 7, 1])];
+        for (data, shape) in &self.weights {
+            args.push((data, shape));
+        }
+        let outputs = self.exe.run_f32(&args)?;
+        anyhow::ensure!(!outputs.is_empty(), "empty output tuple");
+        let flat = &outputs[0];
+        anyhow::ensure!(flat.len() == 21, "expected 21 outputs, got {}", flat.len());
+        let mut out = [[0.0f64; 7]; 3];
+        for r in 0..3 {
+            for c in 0..7 {
+                out[r][c] = f64::from(flat[r * 7 + c]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Predictor for UNetPredictor {
+    fn name(&self) -> &'static str {
+        "unet"
+    }
+
+    fn predict(&mut self, specs: &[WorkloadSpec], matrix: &MpsMatrix) -> Vec<SpeedupTable> {
+        let out = self
+            .infer_matrix(matrix)
+            .expect("U-Net inference failed at runtime");
+        (0..specs.len())
+            .map(|c| {
+                // Normalize by the 7g row so f(7g) ≡ 1 (the output column is
+                // already ~max-normalized; this removes residual error).
+                let k7 = out[0][c].max(1e-3);
+                let k = [1.0, (out[1][c] / k7).clamp(0.01, 1.0), (out[2][c] / k7).clamp(0.01, 1.0)];
+                // Head features: (7g,4g,3g) + the job's measured MPS column
+                // (see linreg module docs on the substrate adaptation).
+                let (k2, k1) = self.head.predict([
+                    k[0],
+                    k[1],
+                    k[2],
+                    matrix.data[0][c],
+                    matrix.data[1][c],
+                    matrix.data[2][c],
+                ]);
+                let mut t = SpeedupTable::default();
+                t.set(crate::mig::SliceKind::G7, k[0]);
+                t.set(crate::mig::SliceKind::G4, k[1]);
+                t.set(crate::mig::SliceKind::G3, k[2]);
+                t.set(crate::mig::SliceKind::G2, k2.min(k[2]));
+                t.set(crate::mig::SliceKind::G1, k1.min(k2));
+                t
+            })
+            .collect()
+    }
+}

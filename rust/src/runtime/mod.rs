@@ -1,0 +1,100 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust request path.
+//!
+//! The Python build path (`python/compile/aot.py`) lowers the JAX/Pallas
+//! predictor to **HLO text** (not a serialized proto — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). This module loads that text, compiles it once on the
+//! PJRT CPU client, and executes it with `f32` buffers. Python is never on
+//! the request path.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("MISO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A compiled HLO module ready for repeated execution.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+// The xla crate's client is `Rc`-based (single-threaded); keep one per
+// thread. Compilation caches inside the client, executions share it.
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    thread_local! {
+        static CLIENT: std::cell::OnceCell<xla::PjRtClient> =
+            const { std::cell::OnceCell::new() };
+    }
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let _ = cell.set(c);
+        }
+        f(cell.get().unwrap())
+    })
+}
+
+impl HloExecutable {
+    /// Load HLO text from `path` and compile it.
+    pub fn load(path: impl AsRef<Path>) -> Result<HloExecutable> {
+        let path = path.as_ref().to_path_buf();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| {
+            c.compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        })?;
+        Ok(HloExecutable { exe, path })
+    }
+
+    /// Execute with f32 tensor inputs `(data, shape)`; returns the flattened
+    /// f32 elements of each tuple output. The JAX lowering uses
+    /// `return_tuple=True`, so the single on-device result is a tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(shape)
+                    .with_context(|| format!("reshaping input to {shape:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                // Outputs may be f32 or (rarely) f64 depending on lowering;
+                // convert to f32 vectors.
+                lit.to_vec::<f32>().context("reading f32 output")
+            })
+            .collect()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Read a little-endian f32 binary blob (the weight export format of
+/// `python/compile/train.py`).
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "weight file not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

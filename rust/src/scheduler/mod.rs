@@ -1,0 +1,23 @@
+//! Scheduling policies (paper Sec. 5 "Competing Techniques" + MISO itself).
+//!
+//! * [`NoPartPolicy`] — unpartitioned GPUs, one job per A100 (the
+//!   datacenter default).
+//! * [`OptStaPolicy`] — a single static MIG partition applied to every GPU,
+//!   chosen offline by exhaustive search ([`find_best_static`]).
+//! * [`MisoPolicy`] — the paper's system: least-loaded placement, MPS
+//!   profiling, MPS→MIG prediction, Algorithm-1 repartitioning on every
+//!   arrival/completion. Also doubles as the Oracle (ground-truth tables,
+//!   no profiling, zero overheads) and the sequential-MIG-profiling
+//!   ablation of Fig. 12 via [`ProfilingMode`].
+//! * [`MpsOnlyPolicy`] — the Fig. 15 baseline: up to 3 jobs per GPU under
+//!   equal-share MPS, no MIG.
+
+mod miso;
+mod mpsonly;
+mod nopart;
+mod optsta;
+
+pub use miso::{MisoPolicy, ProfilingMode};
+pub use mpsonly::MpsOnlyPolicy;
+pub use nopart::NoPartPolicy;
+pub use optsta::{find_best_static, OptStaPolicy};

@@ -1,0 +1,64 @@
+//! MPS-only baseline (paper Fig. 15): each GPU co-locates up to three jobs
+//! under MPS with equal SM shares — "limiting to three because more
+//! partitions lead to worse performance and out-of-memory error". No MIG,
+//! no profiling, no reconfiguration overhead.
+
+use crate::sim::{ClusterState, Policy};
+use crate::workload::JobId;
+
+pub struct MpsOnlyPolicy {
+    max_per_gpu: usize,
+}
+
+impl MpsOnlyPolicy {
+    pub fn new() -> MpsOnlyPolicy {
+        MpsOnlyPolicy { max_per_gpu: 3 }
+    }
+
+    fn drain(&mut self, st: &mut ClusterState) {
+        while let Some(&id) = st.queue.front() {
+            let job_mem = st.jobs[&id].job.spec.mem_mb;
+            let pick = (0..st.gpus.len())
+                .filter(|&g| {
+                    let cnt = st.gpus[g].gpu.job_count();
+                    if cnt >= self.max_per_gpu {
+                        return false;
+                    }
+                    // aggregate footprint must fit the 40 GB card
+                    let (_, specs) = st.resident_specs(g);
+                    let used: f64 = specs.iter().map(|s| s.mem_mb).sum();
+                    used + job_mem <= 40_000.0
+                })
+                .min_by_key(|&g| st.gpus[g].gpu.job_count());
+            match pick {
+                Some(g) => st.join_mps_permanent(g, id),
+                None => break,
+            }
+        }
+    }
+}
+
+impl Default for MpsOnlyPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for MpsOnlyPolicy {
+    fn name(&self) -> &str {
+        "mps-only"
+    }
+
+    fn on_arrival(&mut self, st: &mut ClusterState, _id: JobId) {
+        self.drain(st);
+    }
+
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, _id: JobId) {
+        st.refresh_permanent_mps_speeds(gpu);
+        self.drain(st);
+    }
+
+    fn on_profiling_done(&mut self, _st: &mut ClusterState, _gpu: usize) {
+        unreachable!("MPS-only never profiles");
+    }
+}

@@ -1,0 +1,46 @@
+//! NoPart: the unpartitioned-GPU baseline. Every job gets an exclusive
+//! A100 (the full 7g.40gb slice); arrivals queue FCFS for the next free GPU.
+
+use crate::sim::{ClusterState, Policy};
+use crate::workload::JobId;
+
+#[derive(Default)]
+pub struct NoPartPolicy;
+
+impl NoPartPolicy {
+    pub fn new() -> NoPartPolicy {
+        NoPartPolicy
+    }
+
+    fn drain(&mut self, st: &mut ClusterState) {
+        while let Some(&id) = st.queue.front() {
+            let free = (0..st.gpus.len())
+                .find(|&g| !st.gpus[g].busy && st.gpus[g].gpu.job_count() == 0);
+            match free {
+                Some(g) => {
+                    let ok = st.assign_to_free_slice(g, id);
+                    debug_assert!(ok, "empty unpartitioned GPU must accept any job");
+                }
+                None => break, // strict FCFS: head blocks the queue
+            }
+        }
+    }
+}
+
+impl Policy for NoPartPolicy {
+    fn name(&self) -> &str {
+        "nopart"
+    }
+
+    fn on_arrival(&mut self, st: &mut ClusterState, _id: JobId) {
+        self.drain(st);
+    }
+
+    fn on_completion(&mut self, st: &mut ClusterState, _gpu: usize, _id: JobId) {
+        self.drain(st);
+    }
+
+    fn on_profiling_done(&mut self, _st: &mut ClusterState, _gpu: usize) {
+        unreachable!("NoPart never profiles");
+    }
+}

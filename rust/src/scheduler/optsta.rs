@@ -1,0 +1,168 @@
+//! OptSta: the optimal *static* partition baseline. All GPUs are
+//! partitioned once into the same configuration (selected offline by
+//! exhaustively simulating all 18 — the paper's "we exhaustively evaluate
+//! all possible MIG configurations offline and choose the best static
+//! partition"). Jobs take the smallest fitting free slice; on completions
+//! jobs migrate small→large (the paper notes OptSta does this with
+//! negligible overhead). Per the paper's methodology, OptSta results carry
+//! no profiling/switching overhead.
+
+use crate::config::SystemConfig;
+use crate::gpu::GpuMode;
+use crate::metrics::RunMetrics;
+use crate::mig::MigConfig;
+use crate::perfmodel::mig_speed;
+use crate::sim::{ClusterState, Policy};
+use crate::workload::{Job, JobId};
+use std::collections::HashMap;
+
+pub struct OptStaPolicy {
+    config: MigConfig,
+}
+
+impl OptStaPolicy {
+    pub fn new(config: MigConfig) -> OptStaPolicy {
+        OptStaPolicy { config }
+    }
+
+    /// The deployed-in-practice default from Abacus: (4g, 2g, 1g).
+    pub fn abacus() -> OptStaPolicy {
+        OptStaPolicy::new(
+            crate::mig::ALL_CONFIGS
+                .iter()
+                .find(|c| c.gpc_multiset() == vec![4, 2, 1])
+                .unwrap()
+                .clone(),
+        )
+    }
+
+    fn drain(&mut self, st: &mut ClusterState) {
+        'queue: while let Some(&id) = st.queue.front() {
+            // Pick the GPU offering the smallest fitting free slice.
+            let job = st.jobs[&id].job.clone();
+            let mut best: Option<(usize, u8)> = None; // (gpu, gpcs)
+            for g in 0..st.gpus.len() {
+                if st.gpus[g].busy {
+                    continue;
+                }
+                if let Some(k) = smallest_fitting_free(st, g, &job) {
+                    if best.map_or(true, |(_, bg)| k < bg) {
+                        best = Some((g, k));
+                    }
+                }
+            }
+            match best {
+                Some((g, _)) => {
+                    let ok = st.assign_to_free_slice(g, id);
+                    debug_assert!(ok);
+                }
+                None => break 'queue,
+            }
+        }
+    }
+
+    /// Migrate jobs from smaller to larger free slices (zero overhead, as
+    /// in the paper) whenever that increases their speed.
+    fn migrate_up(&mut self, st: &mut ClusterState, gpu: usize) {
+        loop {
+            let GpuMode::Mig { config, assignment } = &st.gpus[gpu].gpu.mode else {
+                return;
+            };
+            let mut best_move: Option<(JobId, usize, f64)> = None;
+            for (&si, &id) in assignment.iter() {
+                let cur_kind = config.slices[si].kind;
+                let spec = st.jobs[&id].job.spec;
+                let cur = mig_speed(&spec, cur_kind);
+                for ti in 0..config.len() {
+                    if assignment.contains_key(&ti) {
+                        continue;
+                    }
+                    let k = config.slices[ti].kind;
+                    if !st.jobs[&id].job.fits(k) || spec.mem_mb > f64::from(k.memory_mb()) {
+                        continue;
+                    }
+                    let gain = mig_speed(&spec, k) - cur;
+                    if gain > 1e-9 && best_move.map_or(true, |(_, _, g)| gain > g) {
+                        best_move = Some((id, ti, gain));
+                    }
+                }
+            }
+            match best_move {
+                Some((id, ti, _)) => st.migrate_within_gpu(gpu, id, ti),
+                None => return,
+            }
+        }
+    }
+}
+
+fn smallest_fitting_free(st: &ClusterState, gpu: usize, job: &Job) -> Option<u8> {
+    let GpuMode::Mig { config, assignment } = &st.gpus[gpu].gpu.mode else {
+        return None;
+    };
+    (0..config.len())
+        .filter(|si| !assignment.contains_key(si))
+        .map(|si| config.slices[si].kind)
+        .filter(|k| job.fits(*k) && job.spec.mem_mb <= f64::from(k.memory_mb()))
+        .map(|k| k.gpcs())
+        .min()
+}
+
+impl Policy for OptStaPolicy {
+    fn name(&self) -> &str {
+        "optsta"
+    }
+
+    fn init(&mut self, st: &mut ClusterState) {
+        // Pre-partition every GPU (no cost: happens before the trace).
+        for g in 0..st.gpus.len() {
+            st.gpus[g].gpu.mode = GpuMode::Mig {
+                config: self.config.clone(),
+                assignment: HashMap::new(),
+            };
+        }
+    }
+
+    fn on_arrival(&mut self, st: &mut ClusterState, _id: JobId) {
+        self.drain(st);
+    }
+
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, _id: JobId) {
+        self.drain(st);
+        self.migrate_up(st, gpu);
+        self.drain(st);
+    }
+
+    fn on_profiling_done(&mut self, _st: &mut ClusterState, _gpu: usize) {
+        unreachable!("OptSta never profiles");
+    }
+}
+
+/// Offline exhaustive search for the best static partition (lowest average
+/// JCT) over the 18 configurations — the "Opt" in OptSta. Returns the
+/// winning config and its metrics.
+pub fn find_best_static(trace: &[Job], cfg: &SystemConfig) -> (MigConfig, RunMetrics) {
+    let mut best: Option<(MigConfig, RunMetrics)> = None;
+    for config in crate::mig::ALL_CONFIGS.iter() {
+        // A static config is only admissible if every job in the trace fits
+        // its largest slice — otherwise the FCFS queue wedges forever.
+        let max_slice = config
+            .slices
+            .iter()
+            .map(|p| p.kind)
+            .max_by_key(|k| k.gpcs())
+            .unwrap();
+        let hosts_all = trace.iter().all(|j| {
+            j.fits(max_slice) && j.spec.mem_mb <= f64::from(max_slice.memory_mb())
+        });
+        if !hosts_all {
+            continue;
+        }
+        let mut policy = OptStaPolicy::new(config.clone());
+        let metrics = crate::sim::run(&mut policy, trace, cfg.clone());
+        let jct = metrics.avg_jct();
+        if best.as_ref().map_or(true, |(_, m)| jct < m.avg_jct()) {
+            best = Some((config.clone(), metrics));
+        }
+    }
+    best.expect("at least one config")
+}

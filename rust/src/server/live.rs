@@ -1,0 +1,370 @@
+//! The live controller (paper Fig. 6): a central controller thread owning
+//! the cluster engine + MISO policy, per-connection server threads speaking
+//! a line-oriented TCP protocol, and virtual time advancing at a
+//! configurable multiple of wall-clock time.
+//!
+//! Protocol (one request per line, one JSON reply per line):
+//!
+//! ```text
+//! SUBMIT <family> <batch_index 0..3> <exclusive_seconds>   -> {"ok":true,"job":<id>}
+//! STATUS                                                   -> cluster snapshot
+//! JOBS                                                     -> per-job states
+//! METRICS                                                  -> aggregate metrics so far
+//! QUIT                                                     -> closes the connection
+//! ```
+//!
+//! The controller mirrors the paper's deployment: GPUs (simulated A100
+//! substrates) update job completion / partition state centrally; the
+//! controller decides placement; the MISO policy drives MPS profiling and
+//! MIG repartitioning. Python is nowhere in this path.
+
+use crate::scheduler::MisoPolicy;
+use crate::sim::{Engine, JobState, Policy};
+use crate::util::json::Value;
+use crate::workload::{Job, ModelFamily, WorkloadSpec};
+use crate::SystemConfig;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A request forwarded from a connection thread to the controller.
+enum Request {
+    Submit { family: ModelFamily, batch: usize, work_s: f64, reply: Sender<String> },
+    Status { reply: Sender<String> },
+    Jobs { reply: Sender<String> },
+    Metrics { reply: Sender<String> },
+}
+
+/// Handle to a running live server (used by tests and `examples/live_serve`).
+pub struct LiveServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    controller: Option<std::thread::JoinHandle<()>>,
+    listener: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LiveServer {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join the server threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.listener.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.controller.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LiveServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Start the live server on `port` (0 = ephemeral) with `gpus` simulated
+/// A100s; virtual time runs at `time_scale` × wall-clock.
+pub fn start(port: u16, gpus: usize, time_scale: f64) -> Result<LiveServer> {
+    anyhow::ensure!(gpus > 0, "need at least one GPU");
+    anyhow::ensure!(time_scale > 0.0, "time scale must be positive");
+    let listener = TcpListener::bind(("127.0.0.1", port)).context("binding TCP listener")?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Request>();
+
+    // --- controller thread: owns engine + policy (not Send-constrained) ---
+    let stop_c = stop.clone();
+    let controller = std::thread::spawn(move || {
+        controller_loop(rx, stop_c, gpus, time_scale);
+    });
+
+    // --- listener thread: accepts connections, one handler thread each ---
+    let stop_l = stop.clone();
+    let listener_handle = std::thread::spawn(move || {
+        while !stop_l.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = tx.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(stream, tx);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    Ok(LiveServer { addr, stop, controller: Some(controller), listener: Some(listener_handle) })
+}
+
+/// Blocking entrypoint for `repro serve`.
+pub fn serve(port: u16, gpus: usize, time_scale: f64) -> Result<()> {
+    let server = start(port, gpus, time_scale)?;
+    println!(
+        "MISO live controller on {} — {gpus} simulated A100s, virtual time ×{time_scale}",
+        server.addr()
+    );
+    println!("protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | QUIT");
+    // Block until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, time_scale: f64) {
+    let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
+    let mut engine = Engine::new(cfg);
+    let mut policy = MisoPolicy::paper(0x11FE);
+    policy.init(&mut engine.st);
+    let mut next_id: u64 = 0;
+    let started = Instant::now();
+
+    while !stop.load(Ordering::SeqCst) {
+        // Advance virtual time to scaled wall-clock.
+        let target = started.elapsed().as_secs_f64() * time_scale;
+        if target > engine.st.now {
+            engine.advance_to(&mut policy, target);
+        }
+
+        // Serve all pending requests.
+        while let Ok(req) = rx.try_recv() {
+            match req {
+                Request::Submit { family, batch, work_s, reply } => {
+                    let spec = WorkloadSpec::new(family, batch.min(3), (0.0, 0.0));
+                    let job = Job::new(next_id, spec, engine.st.now, work_s.max(1.0));
+                    let id = job.id;
+                    next_id += 1;
+                    engine.submit(&mut policy, job);
+                    let _ = reply.send(
+                        Value::obj([("ok", Value::Bool(true)), ("job", Value::num(id.0 as f64))])
+                            .to_string(),
+                    );
+                }
+                Request::Status { reply } => {
+                    let _ = reply.send(status_json(&engine).to_string());
+                }
+                Request::Jobs { reply } => {
+                    let _ = reply.send(jobs_json(&engine).to_string());
+                }
+                Request::Metrics { reply } => {
+                    let _ = reply.send(metrics_json(&engine).to_string());
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn status_json(engine: &Engine) -> Value {
+    let gpus: Vec<Value> = engine
+        .st
+        .gpus
+        .iter()
+        .map(|g| {
+            let (mode, partition) = match &g.gpu.mode {
+                crate::gpu::GpuMode::Mig { config, .. } => ("mig", format!("{config}")),
+                crate::gpu::GpuMode::Mps { .. } => ("mps", "7g.40gb+MPS".to_string()),
+            };
+            Value::obj([
+                ("id", Value::num(g.gpu.id as f64)),
+                ("mode", Value::str(mode)),
+                ("partition", Value::str(partition)),
+                ("jobs", Value::num(g.gpu.job_count() as f64)),
+                ("busy", Value::Bool(g.busy)),
+            ])
+        })
+        .collect();
+    Value::obj([
+        ("now_s", Value::num(engine.st.now)),
+        ("queued", Value::num(engine.st.queue.len() as f64)),
+        ("live_jobs", Value::num(engine.live_jobs() as f64)),
+        ("instant_stp", Value::num(engine.st.instant_stp())),
+        ("gpus", Value::arr(gpus)),
+    ])
+}
+
+fn jobs_json(engine: &Engine) -> Value {
+    let mut jobs: Vec<(&u64, Value)> = engine
+        .st
+        .jobs
+        .iter()
+        .map(|(id, j)| {
+            let state = match j.state {
+                JobState::Queued => "queued",
+                JobState::MigRun { .. } => "mig-run",
+                JobState::MpsRun { .. } => "mps-profiling",
+                JobState::Blocked => "checkpointing",
+                JobState::Idle { .. } => "idle",
+                JobState::Done => "done",
+            };
+            (
+                &id.0,
+                Value::obj([
+                    ("id", Value::num(id.0 as f64)),
+                    ("model", Value::str(j.job.spec.family.name())),
+                    ("state", Value::str(state)),
+                    ("speed", Value::num(j.state.speed())),
+                    ("remaining_s", Value::num(j.remaining.max(0.0))),
+                    ("gpu", j.gpu.map_or(Value::Null, |g| Value::num(g as f64))),
+                ]),
+            )
+        })
+        .collect();
+    jobs.sort_by_key(|(id, _)| **id);
+    Value::arr(jobs.into_iter().map(|(_, v)| v))
+}
+
+fn metrics_json(engine: &Engine) -> Value {
+    let completed = engine
+        .st
+        .jobs
+        .values()
+        .filter(|j| matches!(j.state, JobState::Done))
+        .count();
+    Value::obj([
+        ("now_s", Value::num(engine.st.now)),
+        ("completed", Value::num(completed as f64)),
+        ("live", Value::num(engine.live_jobs() as f64)),
+        ("instant_stp", Value::num(engine.st.instant_stp())),
+    ])
+}
+
+fn handle_connection(stream: TcpStream, tx: Sender<Request>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let reply = match parts.as_slice() {
+            ["SUBMIT", family, batch, secs] => {
+                let Some(fam) = parse_family(family) else {
+                    respond(&mut writer, &err_json(&format!("unknown model '{family}'")))?;
+                    continue;
+                };
+                let (Ok(batch), Ok(secs)) = (batch.parse::<usize>(), secs.parse::<f64>()) else {
+                    respond(&mut writer, &err_json("SUBMIT <family> <batch 0-3> <seconds>"))?;
+                    continue;
+                };
+                request(&tx, |reply| Request::Submit { family: fam, batch, work_s: secs, reply })
+            }
+            ["STATUS"] => request(&tx, |reply| Request::Status { reply }),
+            ["JOBS"] => request(&tx, |reply| Request::Jobs { reply }),
+            ["METRICS"] => request(&tx, |reply| Request::Metrics { reply }),
+            ["QUIT"] => return Ok(()),
+            [] => continue,
+            _ => Some(err_json("unknown command")),
+        };
+        match reply {
+            Some(r) => respond(&mut writer, &r)?,
+            None => respond(&mut writer, &err_json("controller unavailable"))?,
+        }
+    }
+    Ok(())
+}
+
+fn request(tx: &Sender<Request>, make: impl FnOnce(Sender<String>) -> Request) -> Option<String> {
+    let (reply_tx, reply_rx) = channel();
+    tx.send(make(reply_tx)).ok()?;
+    reply_rx.recv_timeout(Duration::from_secs(5)).ok()
+}
+
+fn respond(w: &mut TcpStream, msg: &str) -> Result<()> {
+    writeln!(w, "{msg}")?;
+    Ok(())
+}
+
+fn err_json(msg: &str) -> String {
+    Value::obj([("ok", Value::Bool(false)), ("error", Value::str(msg))]).to_string()
+}
+
+fn parse_family(name: &str) -> Option<ModelFamily> {
+    crate::workload::ALL_FAMILIES
+        .iter()
+        .copied()
+        .find(|f| f.name().eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn send_line(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<String> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut out = Vec::new();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for l in lines {
+            writeln!(stream, "{l}").unwrap();
+            if *l == "QUIT" {
+                break;
+            }
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            out.push(resp.trim().to_string());
+        }
+        out
+    }
+
+    #[test]
+    fn live_submit_and_complete() {
+        // 60×: a 30-virtual-second job finishes in ~0.5 wall seconds.
+        let server = start(0, 2, 240.0).unwrap();
+        let addr = server.addr();
+
+        let resp = send_line(addr, &["SUBMIT ResNet50 0 30", "STATUS"]);
+        let sub = crate::util::json::parse(&resp[0]).unwrap();
+        assert_eq!(sub.get("ok"), Some(&Value::Bool(true)));
+        let status = crate::util::json::parse(&resp[1]).unwrap();
+        assert!(status.req_f64("live_jobs").unwrap() >= 1.0);
+
+        // Wait until virtual time passes profiling + execution.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let resp = send_line(addr, &["METRICS"]);
+            let m = crate::util::json::parse(&resp[0]).unwrap();
+            if m.req_f64("live").unwrap() == 0.0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "job never completed: {m}");
+            std::thread::sleep(Duration::from_millis(100));
+        }
+
+        let resp = send_line(addr, &["JOBS"]);
+        assert!(resp[0].contains("done"), "{}", resp[0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn live_rejects_bad_input() {
+        let server = start(0, 1, 60.0).unwrap();
+        let resp = send_line(server.addr(), &["SUBMIT NotAModel 0 10", "BOGUS"]);
+        assert!(resp[0].contains("unknown model"));
+        assert!(resp[1].contains("unknown command"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn family_parser_covers_zoo() {
+        for f in crate::workload::ALL_FAMILIES {
+            assert_eq!(parse_family(f.name()), Some(f));
+            assert_eq!(parse_family(&f.name().to_lowercase()), Some(f));
+        }
+        assert_eq!(parse_family("GPT5"), None);
+    }
+}

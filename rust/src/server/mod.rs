@@ -1,0 +1,8 @@
+//! Live mode (paper Fig. 6): a central controller + per-GPU "server API"
+//! threads over TCP, with simulated GPUs advancing in scaled wall-clock
+//! time. Implemented with std::net + threads (tokio is unavailable in this
+//! offline build). See server/live.rs.
+
+mod live;
+
+pub use live::{serve, start, LiveServer};

@@ -1,0 +1,759 @@
+//! Discrete-event cluster simulator.
+//!
+//! Replaces the paper's real 8/40-GPU A100 testbed: virtual time advances
+//! from event to event (job arrivals, transition/profiling timers, job
+//! completions); between events every job runs at a constant speed given by
+//! the simulated hardware ([`crate::perfmodel`]). Scheduling *policies*
+//! ([`crate::scheduler`]) make decisions through the [`ClusterState`] API,
+//! which models exactly the controls the real MISO server APIs expose:
+//! enter MPS profiling, repartition MIG, assign jobs to slices — each with
+//! the paper's overhead structure (GPU reset ≈ 4 s + per-job
+//! checkpoint/restart).
+//!
+//! Lifecycle accounting matches Fig. 12's stages: queue, MPS (progressing),
+//! checkpoint (stopped), MIG execution, idle.
+
+use crate::config::SystemConfig;
+use crate::gpu::{Gpu, GpuMode};
+use crate::metrics::{MetricsCollector, RunMetrics};
+use crate::mig::{MigConfig, SliceKind};
+use crate::perfmodel::{mig_speed, mps_speeds, MPS_LEVELS};
+use crate::predictor::features::{profile_mps_matrix, MpsMatrix};
+use crate::util::Rng;
+use crate::workload::{Job, JobId, WorkloadSpec};
+use std::collections::{HashMap, VecDeque};
+
+const EPS: f64 = 1e-7;
+
+/// Dynamic state of one job.
+#[derive(Debug, Clone)]
+pub struct JobSim {
+    pub job: Job,
+    /// Remaining work in exclusive-full-GPU seconds.
+    pub remaining: f64,
+    pub state: JobState,
+    pub gpu: Option<usize>,
+}
+
+impl JobSim {
+    /// Remaining-work level at which the pending phase change (if any)
+    /// fires: `work * (1 - at_work_fraction)`.
+    fn phase_boundary(&self) -> Option<f64> {
+        self.job
+            .phase
+            .map(|p| self.job.work * (1.0 - p.at_work_fraction))
+    }
+}
+
+/// Where a job's wall-clock time is going (maps 1:1 onto Fig. 12 stages).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobState {
+    /// Waiting in the controller queue.
+    Queued,
+    /// Executing on a MIG slice at `speed` (normalized).
+    MigRun { speed: f64 },
+    /// Executing under MPS at `speed` (profiling or MPS-only co-location).
+    MpsRun { speed: f64 },
+    /// Stopped for checkpoint/restart + GPU reconfiguration.
+    Blocked,
+    /// Resident but idle (e.g. waiting out sequential MIG profiling),
+    /// possibly with a small average progress rate.
+    Idle { speed: f64 },
+    Done,
+}
+
+impl JobState {
+    pub fn speed(self) -> f64 {
+        match self {
+            JobState::MigRun { speed } | JobState::MpsRun { speed } | JobState::Idle { speed } => speed,
+            _ => 0.0,
+        }
+    }
+}
+
+/// What a GPU transition resolves into once its overhead window elapses.
+#[derive(Debug, Clone)]
+pub enum Pending {
+    /// Enter MPS profiling for `profile_s` seconds.
+    ToMps { profile_s: f64 },
+    /// Apply a MIG partition + job→slice assignment.
+    ToMig { config: MigConfig, assignment: HashMap<usize, JobId> },
+    /// Enter permanent equal-share MPS co-location (the MPS-only baseline).
+    ToMpsPermanent,
+    /// Enter sequential per-job MIG profiling for `total_s` seconds with the
+    /// given average per-job progress `avg_speed` (Fig. 12 ablation).
+    ToMigProfiling { total_s: f64, avg_speed: f64 },
+}
+
+/// Per-GPU simulator state.
+pub struct GpuSim {
+    pub gpu: Gpu,
+    pub pending: Option<Pending>,
+    /// True while a transition or profiling is in flight — the controller
+    /// does not place new jobs on a busy GPU.
+    pub busy: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TimerKind {
+    TransitionDone,
+    ProfilingDone,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Timer {
+    at: f64,
+    gpu: usize,
+    kind: TimerKind,
+}
+
+/// The full cluster state a policy operates on.
+pub struct ClusterState {
+    pub now: f64,
+    pub cfg: SystemConfig,
+    pub gpus: Vec<GpuSim>,
+    pub jobs: crate::util::FastMap<JobId, JobSim>,
+    /// FCFS queue (head = next to place).
+    pub queue: VecDeque<JobId>,
+    pub metrics: MetricsCollector,
+    /// Noise source for MPS measurement (None = noise-free profiling).
+    pub measure_rng: Option<Rng>,
+    timers: Vec<Timer>,
+    /// Jobs not yet Done — the event loop's iteration set (Done jobs
+    /// would otherwise dominate the per-event scans; EXPERIMENTS.md §Perf).
+    active: Vec<JobId>,
+}
+
+impl ClusterState {
+    pub fn new(cfg: SystemConfig) -> ClusterState {
+        let gpus = (0..cfg.num_gpus)
+            .map(|i| GpuSim { gpu: Gpu::new(i), pending: None, busy: false })
+            .collect();
+        ClusterState {
+            now: 0.0,
+            cfg,
+            gpus,
+            jobs: crate::util::FastMap::default(),
+            queue: VecDeque::new(),
+            metrics: MetricsCollector::new(),
+            measure_rng: Some(Rng::seed_from_u64(0x5eed)),
+            timers: Vec::new(),
+            active: Vec::new(),
+        }
+    }
+
+    // ---------- queries ----------
+
+    /// Specs of the real jobs resident on a GPU, in a stable order,
+    /// together with their ids.
+    pub fn resident_specs(&self, gpu: usize) -> (Vec<JobId>, Vec<WorkloadSpec>) {
+        let mut ids = self.gpus[gpu].gpu.resident_jobs();
+        ids.sort();
+        let specs = ids.iter().map(|id| self.jobs[id].job.spec).collect();
+        (ids, specs)
+    }
+
+    /// Whether `gpu` can host `job` in addition to its current residents:
+    /// not busy, < 7 jobs, and some valid (m+1)-way partition gives every
+    /// job (residents + new) a slice it fits on (memory + QoS) — the
+    /// controller's "maximum spare slice" record generalized to exactness.
+    pub fn can_host(&self, gpu: usize, job: &Job) -> bool {
+        self.can_host_all(gpu, &[job])
+    }
+
+    /// [`Self::can_host`] for a batch of new jobs joining together (the
+    /// profiling-batching optimization: one MPS round for several arrivals).
+    ///
+    /// Feasibility-only, so it uses the exact sorted-dominance check
+    /// ([`crate::mig::mix_feasible`]) instead of the Algorithm-1 DP — this
+    /// is the controller's hottest path (every queued job × every GPU on
+    /// every drain; see EXPERIMENTS.md §Perf).
+    pub fn can_host_all(&self, gpu: usize, jobs: &[&Job]) -> bool {
+        let g = &self.gpus[gpu];
+        if g.busy || g.gpu.job_count() + jobs.len() > 7 {
+            return false;
+        }
+        let mut min_gpcs: Vec<u8> = g
+            .gpu
+            .resident_jobs()
+            .iter()
+            .map(|id| &self.jobs[id].job)
+            .chain(jobs.iter().copied())
+            .map(|j| match j.min_feasible_slice() {
+                Some(k) => k.gpcs(),
+                None => u8::MAX, // cannot run anywhere
+            })
+            .collect();
+        min_gpcs.sort_unstable_by(|a, b| b.cmp(a));
+        crate::mig::mix_feasible(&min_gpcs)
+    }
+
+    /// Number of resident jobs per GPU.
+    pub fn loads(&self) -> Vec<usize> {
+        self.gpus.iter().map(|g| g.gpu.job_count()).collect()
+    }
+
+    /// Cluster-wide instantaneous STP (Eq. 1): sum of normalized speeds of
+    /// all jobs currently progressing.
+    pub fn instant_stp(&self) -> f64 {
+        self.active.iter().map(|id| self.jobs[id].state.speed()).sum()
+    }
+
+    // ---------- mechanics (what the real server API exposes) ----------
+
+    /// Place a job on a free slice of a GPU's *current* partition without
+    /// reconfiguring (no disruption, no overhead). Returns false if no
+    /// fitting free slice exists.
+    pub fn assign_to_free_slice(&mut self, gpu: usize, id: JobId) -> bool {
+        let job = self.jobs[&id].job.clone();
+        let g = &mut self.gpus[gpu];
+        let GpuMode::Mig { config, assignment } = &mut g.gpu.mode else {
+            return false;
+        };
+        // Smallest fitting free slice.
+        let mut candidates: Vec<(usize, SliceKind)> = (0..config.len())
+            .filter(|si| !assignment.contains_key(si))
+            .map(|si| (si, config.slices[si].kind))
+            .filter(|(_, k)| job.fits(*k) && job.spec.mem_mb <= f64::from(k.memory_mb()))
+            .collect();
+        candidates.sort_by_key(|(_, k)| k.gpcs());
+        let Some(&(si, kind)) = candidates.first() else {
+            return false;
+        };
+        assignment.insert(si, id);
+        let speed = mig_speed(&job.spec, kind);
+        let js = self.jobs.get_mut(&id).unwrap();
+        js.gpu = Some(gpu);
+        js.state = JobState::MigRun { speed };
+        self.queue.retain(|&q| q != id);
+        true
+    }
+
+    /// Move an already-resident job to a different (free) slice of the same
+    /// partition. `overhead_s` > 0 blocks the job for that long first
+    /// (checkpoint); 0 = the paper's "negligible" migration.
+    pub fn migrate_within_gpu(&mut self, gpu: usize, id: JobId, to_slice: usize) {
+        let g = &mut self.gpus[gpu];
+        let GpuMode::Mig { config, assignment } = &mut g.gpu.mode else {
+            panic!("migrate_within_gpu on non-MIG GPU");
+        };
+        assert!(!assignment.contains_key(&to_slice), "target slice occupied");
+        let from = assignment
+            .iter()
+            .find(|(_, &j)| j == id)
+            .map(|(&s, _)| s)
+            .expect("job not on this GPU");
+        assignment.remove(&from);
+        assignment.insert(to_slice, id);
+        let kind = config.slices[to_slice].kind;
+        let spec = self.jobs[&id].job.spec;
+        self.jobs.get_mut(&id).unwrap().state = JobState::MigRun { speed: mig_speed(&spec, kind) };
+    }
+
+    /// Begin the transition into MPS profiling mode: optionally pull new
+    /// jobs from the queue onto the GPU, checkpoint all residents,
+    /// reconfigure to 7g + MPS, profile for the configured window.
+    /// Overheads come from `self.cfg` (0 ⇒ instantaneous, applied via a
+    /// zero-delay timer).
+    pub fn begin_mps_profiling(&mut self, gpu: usize, new_jobs: &[JobId]) {
+        let had_residents = self.gpus[gpu].gpu.job_count() > 0;
+        for &id in new_jobs {
+            self.queue.retain(|&q| q != id);
+            let js = self.jobs.get_mut(&id).unwrap();
+            js.gpu = Some(gpu);
+            js.state = JobState::Blocked;
+        }
+        let g = &mut self.gpus[gpu];
+        let mut cost = self.cfg.mig_reconfig_s;
+        if had_residents {
+            cost += self.cfg.checkpoint_s;
+        }
+        // Residents get checkpointed; new jobs just wait for the reset.
+        for id in g.gpu.resident_jobs() {
+            self.jobs.get_mut(&id).unwrap().state = JobState::Blocked;
+        }
+        let g = &mut self.gpus[gpu];
+        match &mut g.gpu.mode {
+            GpuMode::Mig { assignment, .. } => {
+                let mut all: Vec<JobId> = assignment.values().copied().collect();
+                all.extend_from_slice(new_jobs);
+                g.gpu.mode = GpuMode::Mps { since: self.now, jobs: all };
+            }
+            GpuMode::Mps { jobs, .. } => jobs.extend_from_slice(new_jobs),
+        }
+        debug_assert!(g.pending.is_none(), "overlapping transitions on a GPU");
+        g.busy = true;
+        g.pending = Some(Pending::ToMps { profile_s: self.cfg.mps_profile_total_s() });
+        self.timers.push(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
+    }
+
+    /// Begin the transition into a new MIG partition. `assignment` maps
+    /// slice index → job id; every resident job must appear. Jobs in
+    /// `new_jobs` are pulled from the queue first.
+    pub fn begin_repartition(
+        &mut self,
+        gpu: usize,
+        config: MigConfig,
+        assignment: HashMap<usize, JobId>,
+        new_jobs: &[JobId],
+    ) {
+        for &id in new_jobs {
+            self.queue.retain(|&q| q != id);
+            let js = self.jobs.get_mut(&id).unwrap();
+            js.gpu = Some(gpu);
+        }
+        let had_residents = self.gpus[gpu].gpu.job_count() > 0;
+        let mut cost = self.cfg.mig_reconfig_s;
+        if had_residents {
+            cost += self.cfg.checkpoint_s;
+        }
+        for &id in assignment.values() {
+            self.jobs.get_mut(&id).unwrap().state = JobState::Blocked;
+        }
+        let g = &mut self.gpus[gpu];
+        debug_assert!(g.pending.is_none(), "overlapping transitions on GPU {gpu}");
+        g.busy = true;
+        g.pending = Some(Pending::ToMig { config, assignment });
+        self.timers.push(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
+    }
+
+    /// Enter permanent MPS co-location with equal thread caps (MPS-only
+    /// baseline). New jobs join without disrupting residents (that is MPS's
+    /// selling point), so no overhead is charged.
+    pub fn join_mps_permanent(&mut self, gpu: usize, id: JobId) {
+        self.queue.retain(|&q| q != id);
+        {
+            let js = self.jobs.get_mut(&id).unwrap();
+            js.gpu = Some(gpu);
+        }
+        let g = &mut self.gpus[gpu];
+        match &mut g.gpu.mode {
+            GpuMode::Mps { jobs, .. } => jobs.push(id),
+            GpuMode::Mig { .. } => {
+                g.gpu.mode = GpuMode::Mps { since: self.now, jobs: vec![id] };
+            }
+        }
+        self.refresh_permanent_mps_speeds(gpu);
+    }
+
+    /// Recompute speeds for a permanent-MPS GPU (equal caps over residents).
+    pub fn refresh_permanent_mps_speeds(&mut self, gpu: usize) {
+        let (ids, specs) = self.resident_specs(gpu);
+        if ids.is_empty() {
+            return;
+        }
+        let cap = 1.0 / ids.len() as f64;
+        let caps = vec![cap.max(0.14); ids.len()];
+        let speeds = crate::perfmodel::mps_speeds_caps(&specs, &caps);
+        for (id, sp) in ids.iter().zip(speeds) {
+            self.jobs.get_mut(id).unwrap().state = JobState::MpsRun { speed: sp };
+        }
+    }
+
+    /// Begin sequential MIG-based profiling (the Fig. 12 ablation): each of
+    /// the `m` resident jobs is measured alone on {7g, 4g, 3g} for the
+    /// profiling window while the others idle, with a GPU reset between
+    /// slice changes.
+    pub fn begin_mig_profiling(&mut self, gpu: usize, new_jobs: &[JobId]) {
+        for &id in new_jobs {
+            self.queue.retain(|&q| q != id);
+            let js = self.jobs.get_mut(&id).unwrap();
+            js.gpu = Some(gpu);
+            js.state = JobState::Blocked;
+        }
+        let g = &mut self.gpus[gpu];
+        for id in g.gpu.resident_jobs() {
+            self.jobs.get_mut(&id).unwrap().state = JobState::Blocked;
+        }
+        let g = &mut self.gpus[gpu];
+        match &mut g.gpu.mode {
+            GpuMode::Mig { assignment, .. } => {
+                let mut all: Vec<JobId> = assignment.values().copied().collect();
+                all.extend_from_slice(new_jobs);
+                g.gpu.mode = GpuMode::Mps { since: self.now, jobs: all };
+            }
+            GpuMode::Mps { jobs, .. } => jobs.extend_from_slice(new_jobs),
+        }
+        let m = g.gpu.job_count() as f64;
+        // Per job: 3 slices × window + 3 GPU resets + 1 checkpoint swap.
+        let per_job = 3.0 * self.cfg.mps_profile_per_level_s
+            + 3.0 * self.cfg.mig_reconfig_s
+            + self.cfg.checkpoint_s;
+        let total = m * per_job;
+        // Average progress: each job runs 3 windows at mean({7g,4g,3g})
+        // speed out of `total` wall seconds.
+        let (_, specs) = self.resident_specs(gpu);
+        let mean_speed: f64 = specs
+            .iter()
+            .map(|s| {
+                (mig_speed(s, SliceKind::G7) + mig_speed(s, SliceKind::G4) + mig_speed(s, SliceKind::G3)) / 3.0
+            })
+            .sum::<f64>()
+            / m;
+        let run_frac = (3.0 * self.cfg.mps_profile_per_level_s) / per_job;
+        let g = &mut self.gpus[gpu];
+        g.busy = true;
+        g.pending = Some(Pending::ToMigProfiling { total_s: total, avg_speed: mean_speed * run_frac });
+        self.timers
+            .push(Timer { at: self.now + self.cfg.mig_reconfig_s, gpu, kind: TimerKind::TransitionDone });
+    }
+
+    /// Measure the MPS profile matrix of a GPU currently in MPS mode, with
+    /// the configured finite-window noise.
+    pub fn measure_matrix(&mut self, gpu: usize) -> (Vec<JobId>, MpsMatrix) {
+        let (ids, specs) = self.resident_specs(gpu);
+        let per_level = self.cfg.mps_profile_per_level_s;
+        let matrix = match &mut self.measure_rng {
+            Some(rng) => profile_mps_matrix(&specs, Some((rng, per_level))),
+            None => profile_mps_matrix(&specs, None),
+        };
+        (ids, matrix)
+    }
+
+    // ---------- internals ----------
+
+    fn fire_transition(&mut self, gpu: usize) {
+        let pending = self.gpus[gpu].pending.take().expect("transition without pending");
+        match pending {
+            Pending::ToMps { profile_s } => {
+                // Jobs progress during profiling at the mean speed across
+                // the three MPS levels (the profiler cycles through them).
+                let (ids, specs) = self.resident_specs(gpu);
+                let mut padded = specs.clone();
+                while padded.len() < 7 {
+                    padded.push(WorkloadSpec::dummy());
+                }
+                let mut mean = vec![0.0; padded.len()];
+                for level in MPS_LEVELS {
+                    for (i, v) in mps_speeds(&padded, level).iter().enumerate() {
+                        mean[i] += v / MPS_LEVELS.len() as f64;
+                    }
+                }
+                for (i, id) in ids.iter().enumerate() {
+                    self.jobs.get_mut(id).unwrap().state = JobState::MpsRun { speed: mean[i] };
+                }
+                self.timers.push(Timer {
+                    at: self.now + profile_s,
+                    gpu,
+                    kind: TimerKind::ProfilingDone,
+                });
+                // stays busy until profiling completes
+            }
+            Pending::ToMig { config, mut assignment } => {
+                // Jobs may complete during the checkpoint window (they were
+                // blocked with ~zero remaining work); drop them from the
+                // snapshot so they are not resurrected onto a slice.
+                assignment.retain(|_, id| !matches!(self.jobs[id].state, JobState::Done));
+                for (&si, id) in &assignment {
+                    let kind = config.slices[si].kind;
+                    let spec = self.jobs[id].job.spec;
+                    let speed = mig_speed(&spec, kind);
+                    let js = self.jobs.get_mut(id).unwrap();
+                    js.state = JobState::MigRun { speed };
+                    js.gpu = Some(gpu);
+                }
+                self.gpus[gpu].gpu.mode = GpuMode::Mig { config, assignment };
+                self.gpus[gpu].busy = false;
+            }
+            Pending::ToMpsPermanent => {
+                self.refresh_permanent_mps_speeds(gpu);
+                self.gpus[gpu].busy = false;
+            }
+            Pending::ToMigProfiling { total_s, avg_speed } => {
+                let (ids, _) = self.resident_specs(gpu);
+                for id in ids {
+                    self.jobs.get_mut(&id).unwrap().state = JobState::Idle { speed: avg_speed };
+                }
+                self.timers.push(Timer {
+                    at: self.now + total_s,
+                    gpu,
+                    kind: TimerKind::ProfilingDone,
+                });
+            }
+        }
+    }
+}
+
+
+/// A scheduling policy: decides placements and partitions; the engine
+/// handles time, progress, and overheads.
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// A new job entered the queue (already registered in `st.jobs`).
+    fn on_arrival(&mut self, st: &mut ClusterState, id: JobId);
+
+    /// `id` finished and has been removed from its GPU.
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, id: JobId);
+
+    /// A profiling window (MPS or sequential-MIG) completed on `gpu`.
+    fn on_profiling_done(&mut self, st: &mut ClusterState, gpu: usize);
+
+    /// A transition (checkpoint + reconfiguration) completed on `gpu`; the
+    /// GPU may have become placeable again. Default: no-op.
+    fn on_transition_done(&mut self, _st: &mut ClusterState, _gpu: usize) {}
+
+    /// A resident job crossed a workload phase boundary and its execution
+    /// speed visibly changed (Sec. 4.3). Default: ignore (static policies
+    /// keep the job where it is).
+    fn on_phase_change(
+        &mut self,
+        _st: &mut ClusterState,
+        _gpu: usize,
+        _id: JobId,
+        _old_speed: f64,
+        _new_speed: f64,
+    ) {
+    }
+
+    /// One-time setup before any job arrives (e.g. OptSta pre-partitions).
+    fn init(&mut self, _st: &mut ClusterState) {}
+}
+
+/// Incremental simulation engine: the event loop of [`run`] factored out so
+/// the live TCP server ([`crate::server`]) can drive the same cluster model
+/// in scaled wall-clock time with externally injected arrivals.
+pub struct Engine {
+    pub st: ClusterState,
+    /// Jobs arrived but not yet done.
+    live: usize,
+}
+
+impl Engine {
+    pub fn new(cfg: SystemConfig) -> Engine {
+        let mut st = ClusterState::new(cfg);
+        st.metrics.sample_stp(0.0, 0.0);
+        Engine { st, live: 0 }
+    }
+
+    /// Number of jobs arrived but not completed.
+    pub fn live_jobs(&self) -> usize {
+        self.live
+    }
+
+    /// Earliest pending *internal* event (timer expiry or job completion)
+    /// strictly relevant at or after `now`. `None` when nothing is pending.
+    pub fn next_event(&self) -> Option<f64> {
+        let mut t_next = f64::INFINITY;
+        for t in &self.st.timers {
+            t_next = t_next.min(t.at);
+        }
+        for id in &self.st.active {
+            let j = &self.st.jobs[id];
+            let sp = j.state.speed();
+            if sp > 0.0 && j.remaining > 0.0 {
+                t_next = t_next.min(self.st.now + j.remaining / sp);
+                if let Some(b) = j.phase_boundary() {
+                    if j.remaining > b {
+                        t_next = t_next.min(self.st.now + (j.remaining - b) / sp);
+                    }
+                }
+            }
+        }
+        t_next.is_finite().then_some(t_next)
+    }
+
+    /// Inject a job arriving *now* (live mode) or at `job.arrival == now`
+    /// (trace replay). Registers it, queues it, and notifies the policy.
+    pub fn submit(&mut self, policy: &mut dyn Policy, job: Job) {
+        self.live += 1;
+        self.st.metrics.on_arrival(job.id, self.st.now, job.work);
+        let id = job.id;
+        self.st.jobs.insert(
+            id,
+            JobSim { remaining: job.work, job, state: JobState::Queued, gpu: None },
+        );
+        self.st.active.push(id);
+        self.st.queue.push_back(id);
+        policy.on_arrival(&mut self.st, id);
+        let stp = self.st.instant_stp();
+        self.st.metrics.sample_stp(self.st.now, stp);
+    }
+
+    /// Advance virtual time to `t_target`, firing every internal event on
+    /// the way (completions, transition/profiling timers) in order.
+    pub fn advance_to(&mut self, policy: &mut dyn Policy, t_target: f64) {
+        let st = &mut self.st;
+        loop {
+            // Next internal event, capped at the target.
+            let mut t_next = t_target;
+            for t in &st.timers {
+                t_next = t_next.min(t.at);
+            }
+            for id in &st.active {
+                let j = &st.jobs[id];
+                let sp = j.state.speed();
+                if sp > 0.0 && j.remaining > 0.0 {
+                    t_next = t_next.min(st.now + j.remaining / sp);
+                    if let Some(b) = j.phase_boundary() {
+                        if j.remaining > b {
+                            t_next = t_next.min(st.now + (j.remaining - b) / sp);
+                        }
+                    }
+                }
+            }
+            let t_next = t_next.max(st.now);
+            let dt = t_next - st.now;
+
+            // --- advance time: accrue stages + progress ---
+            if dt > 0.0 {
+                let ids: Vec<JobId> = st.active.clone();
+                for id in ids {
+                    let j = st.jobs.get_mut(&id).unwrap();
+                    match j.state {
+                        JobState::Queued => st.metrics.record(id).queue_s += dt,
+                        JobState::MigRun { speed } => {
+                            st.metrics.record(id).mig_exec_s += dt;
+                            st.jobs.get_mut(&id).unwrap().remaining -= speed * dt;
+                        }
+                        JobState::MpsRun { speed } => {
+                            st.metrics.record(id).mps_s += dt;
+                            st.jobs.get_mut(&id).unwrap().remaining -= speed * dt;
+                        }
+                        JobState::Blocked => st.metrics.record(id).checkpoint_s += dt,
+                        JobState::Idle { speed } => {
+                            st.metrics.record(id).idle_s += dt;
+                            st.jobs.get_mut(&id).unwrap().remaining -= speed * dt;
+                        }
+                        JobState::Done => {}
+                    }
+                }
+            }
+            st.now = t_next;
+
+            // --- phase changes (Sec. 4.3) ---
+            let crossed: Vec<JobId> = st
+                .active
+                .iter()
+                .filter(|id| {
+                    let j = &st.jobs[*id];
+                    matches!(j.phase_boundary(), Some(b) if j.remaining <= b + EPS)
+                        && j.remaining > EPS
+                })
+                .copied()
+                .collect();
+            for id in crossed {
+                let j = st.jobs.get_mut(&id).unwrap();
+                let next_spec = j.job.phase.take().unwrap().next_spec;
+                let old_speed = j.state.speed();
+                j.job.spec = next_spec;
+                // The job's speed on its current slice changes immediately
+                // (this is the observable signal MISO's monitoring sees).
+                let gpu = j.gpu;
+                if let (Some(g), JobState::MigRun { .. }) = (gpu, j.state) {
+                    if let Some(kind) = st.gpus[g].gpu.slice_of(id) {
+                        let sp = mig_speed(&next_spec, kind);
+                        st.jobs.get_mut(&id).unwrap().state = JobState::MigRun { speed: sp };
+                    }
+                }
+                if let (Some(g), JobState::MpsRun { .. }) = (gpu, st.jobs[&id].state) {
+                    // Permanent-MPS co-location: the whole GPU's contention
+                    // pattern shifts.
+                    if !st.gpus[g].busy {
+                        st.refresh_permanent_mps_speeds(g);
+                    }
+                }
+                let new_speed = st.jobs[&id].state.speed();
+                if let Some(g) = gpu {
+                    policy.on_phase_change(st, g, id, old_speed, new_speed);
+                }
+            }
+
+            // --- completions ---
+            let finished: Vec<(JobId, usize)> = st
+                .active
+                .iter()
+                .filter_map(|id| {
+                    let j = &st.jobs[id];
+                    (j.remaining <= EPS && j.gpu.is_some()).then(|| (*id, j.gpu.unwrap()))
+                })
+                .collect();
+            for (id, gpu) in finished {
+                let j = st.jobs.get_mut(&id).unwrap();
+                j.state = JobState::Done;
+                j.remaining = 0.0;
+                st.gpus[gpu].gpu.remove_job(id);
+                st.metrics.on_completion(id, st.now);
+                if let Some(pos) = st.active.iter().position(|&a| a == id) {
+                    st.active.swap_remove(pos);
+                }
+                self.live -= 1;
+                policy.on_completion(st, gpu, id);
+            }
+
+            // --- timers ---
+            let due: Vec<Timer> = {
+                let (due, rest): (Vec<Timer>, Vec<Timer>) =
+                    st.timers.iter().copied().partition(|t| t.at <= st.now + EPS);
+                st.timers = rest;
+                due
+            };
+            for t in due {
+                match t.kind {
+                    TimerKind::TransitionDone => {
+                        st.fire_transition(t.gpu);
+                        if !st.gpus[t.gpu].busy {
+                            policy.on_transition_done(st, t.gpu);
+                        }
+                    }
+                    TimerKind::ProfilingDone => policy.on_profiling_done(st, t.gpu),
+                }
+            }
+
+            let stp = st.instant_stp();
+            st.metrics.sample_stp(st.now, stp);
+
+            if t_next >= t_target - EPS {
+                return;
+            }
+        }
+    }
+
+    /// Consume the engine, returning the collected metrics.
+    pub fn finish(self) -> RunMetrics {
+        self.st.metrics.finish()
+    }
+}
+
+/// Run a policy over a job trace; returns the collected metrics.
+pub fn run(policy: &mut dyn Policy, trace: &[Job], cfg: SystemConfig) -> RunMetrics {
+    let mut eng = Engine::new(cfg);
+    policy.init(&mut eng.st);
+
+    let mut arrivals: Vec<Job> = trace.to_vec();
+    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let mut next_arrival = 0usize;
+
+    loop {
+        // --- next event time: internal events vs the next arrival ---
+        let mut t_next = f64::INFINITY;
+        if next_arrival < arrivals.len() {
+            t_next = t_next.min(arrivals[next_arrival].arrival);
+        }
+        if let Some(t) = eng.next_event() {
+            t_next = t_next.min(t);
+        }
+        if t_next.is_infinite() {
+            if next_arrival >= arrivals.len() && eng.live_jobs() == 0 {
+                break; // all done
+            }
+            // Deadlock guard: live jobs but no progress and no events.
+            panic!(
+                "simulation stalled at t={} with {} live jobs (policy bug?)",
+                eng.st.now,
+                eng.live_jobs()
+            );
+        }
+
+        eng.advance_to(policy, t_next);
+
+        // --- arrivals due at this instant ---
+        while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= eng.st.now + EPS {
+            let job = arrivals[next_arrival].clone();
+            next_arrival += 1;
+            eng.submit(policy, job);
+        }
+    }
+
+    eng.finish()
+}

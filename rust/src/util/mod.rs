@@ -1,0 +1,14 @@
+//! Small self-contained utilities replacing crates unavailable in this
+//! offline build environment: a deterministic RNG with the distributions
+//! the trace generator needs, a minimal JSON reader/writer for artifact
+//! manifests and data interchange with the Python build path, and basic
+//! summary statistics.
+
+pub mod fasthash;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use fasthash::FastMap;
+pub use rng::Rng;
+pub use stats::Summary;

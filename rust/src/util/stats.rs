@@ -1,0 +1,77 @@
+//! Summary statistics for experiment reporting: mean, percentiles, and the
+//! violin-plot five-number summaries used by the Fig. 16 experiment.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "empty sample");
+        let mut xs = values.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p25: percentile_sorted(&xs, 0.25),
+            median: percentile_sorted(&xs, 0.50),
+            p75: percentile_sorted(&xs, 0.75),
+            max: xs[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a sorted slice, q ∈ [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_number_summary() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&xs, 0.5), 5.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+}

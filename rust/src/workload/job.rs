@@ -1,0 +1,149 @@
+//! Job representation: a workload instance with arrival time, total work,
+//! and user-supplied scheduling requirements.
+
+use super::models::WorkloadSpec;
+
+
+/// Cluster-unique job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "J{}", self.0)
+    }
+}
+
+/// User-visible scheduling requirements (Sec. 4.3).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobRequirements {
+    /// Minimum GPU memory in MB (user-declared; 0 = unknown). The controller
+    /// only places the job on GPUs whose "maximum spare slice" satisfies it.
+    pub min_memory_mb: f64,
+    /// QoS floor: minimum MIG slice size in GPCs the job may run on
+    /// (0 = no QoS constraint).
+    pub min_slice_gpcs: u8,
+    /// Multi-instance jobs: number of identical instances to spawn
+    /// (1 = normal job). Only the first instance is MPS-profiled.
+    pub instances: u32,
+}
+
+/// A workload phase change (Sec. 4.3): after `at_work_fraction` of the
+/// job's total work, its resource behaviour shifts to `next_spec` (e.g. a
+/// training pipeline moving from data-heavy warmup to compute-heavy
+/// steady state). MISO detects the resulting execution-speed change and
+/// re-profiles the job as if it were new.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseChange {
+    /// Fraction of `work` after which the phase flips, ∈ (0, 1).
+    pub at_work_fraction: f64,
+    /// The workload's characteristics in the second phase.
+    pub next_spec: WorkloadSpec,
+}
+
+/// A job submitted to the cluster.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: WorkloadSpec,
+    /// Arrival time (s since trace start).
+    pub arrival: f64,
+    /// Total work, expressed in seconds of exclusive execution on a full
+    /// 7g.40gb A100. A job running at normalized speed `k ∈ (0,1]` for `dt`
+    /// seconds completes `k·dt` units of this.
+    pub work: f64,
+    pub requirements: JobRequirements,
+    /// Pending phase change, if any (consumed by the simulator when the
+    /// work boundary is crossed).
+    pub phase: Option<PhaseChange>,
+    /// Multi-instance group id: instances spawned from the same submission
+    /// share one MPS profile (Sec. 4.3). `None` for normal jobs.
+    pub group: Option<u64>,
+}
+
+impl Job {
+    pub fn new(id: u64, spec: WorkloadSpec, arrival: f64, work: f64) -> Job {
+        Job {
+            id: JobId(id),
+            spec,
+            arrival,
+            work,
+            requirements: JobRequirements {
+                // Users declare their footprint (rounded up 10%) as the
+                // memory requirement, mirroring the paper's user-specified
+                // minimum GPU memory.
+                min_memory_mb: spec.mem_mb * 1.1,
+                min_slice_gpcs: 0,
+                instances: 1,
+            },
+            phase: None,
+            group: None,
+        }
+    }
+
+    /// Attach a phase change (builder style).
+    pub fn with_phase(mut self, at_work_fraction: f64, next_spec: WorkloadSpec) -> Job {
+        assert!((0.0..1.0).contains(&at_work_fraction));
+        // The declared memory requirement must cover both phases (users
+        // request their peak footprint).
+        self.requirements.min_memory_mb =
+            self.requirements.min_memory_mb.max(next_spec.mem_mb * 1.1);
+        self.phase = Some(PhaseChange { at_work_fraction, next_spec });
+        self
+    }
+
+    /// Smallest MIG slice (by GPC count) this job can run on without OOM or
+    /// QoS violation. `None` if it cannot run even on the full GPU.
+    pub fn min_feasible_slice(&self) -> Option<crate::mig::SliceKind> {
+        crate::mig::SCHEDULABLE_SLICES
+            .iter()
+            .copied()
+            .find(|s| self.fits(*s))
+    }
+
+    /// Whether the job fits (memory + QoS) on a slice of the given kind.
+    pub fn fits(&self, slice: crate::mig::SliceKind) -> bool {
+        f64::from(slice.memory_mb()) >= self.requirements.min_memory_mb
+            && slice.gpcs() >= self.requirements.min_slice_gpcs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::SliceKind;
+    use crate::workload::models::{ModelFamily, WorkloadSpec};
+
+    fn job(mem_mb: f64) -> Job {
+        let mut spec = WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0));
+        spec.mem_mb = mem_mb;
+        let mut j = Job::new(1, spec, 0.0, 100.0);
+        j.requirements.min_memory_mb = mem_mb;
+        j
+    }
+
+    #[test]
+    fn memory_gates_slices() {
+        let j = job(12_000.0);
+        assert!(!j.fits(SliceKind::G1));
+        assert!(!j.fits(SliceKind::G2));
+        assert!(j.fits(SliceKind::G3));
+        assert!(j.fits(SliceKind::G4));
+        assert!(j.fits(SliceKind::G7));
+        assert_eq!(j.min_feasible_slice(), Some(SliceKind::G3));
+    }
+
+    #[test]
+    fn qos_floor_respected() {
+        let mut j = job(1_000.0);
+        j.requirements.min_slice_gpcs = 3;
+        assert!(!j.fits(SliceKind::G2));
+        assert_eq!(j.min_feasible_slice(), Some(SliceKind::G3));
+    }
+
+    #[test]
+    fn oversized_job_has_no_slice() {
+        let j = job(50_000.0);
+        assert_eq!(j.min_feasible_slice(), None);
+    }
+}

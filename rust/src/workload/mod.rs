@@ -1,0 +1,22 @@
+//! Workload model: the Table-2 deep-learning job zoo, per-job latent
+//! resource characteristics, and Helios-like trace generation.
+//!
+//! The paper drives its evaluation with 8 DL model families × 4 batch sizes
+//! sampled uniformly, job durations modeled after the Helios production
+//! trace (capped at 2 h ≈ the trace's p90), and Poisson arrivals
+//! (λ = 60 s on the testbed, λ = 10 s in simulation).
+//!
+//! Since the real A100 testbed is unavailable, each job carries *latent*
+//! resource-demand parameters (SM demand, memory-bandwidth demand, cache
+//! working set, serial fraction, memory footprint) that the simulated GPU
+//! substrate ([`crate::perfmodel`]) converts into MIG/MPS execution speeds.
+//! Schedulers never observe these latents — only measured speeds — exactly
+//! as the real system only observes profiled throughput.
+
+mod job;
+mod models;
+mod trace;
+
+pub use job::{Job, JobId, JobRequirements, PhaseChange};
+pub use models::{ModelFamily, WorkloadSpec, ALL_FAMILIES};
+pub use trace::{TraceConfig, TraceGenerator};

@@ -1,0 +1,260 @@
+//! Integration tests: end-to-end simulation runs across policies, checking
+//! both engine invariants (conservation, no lost jobs) and the paper's
+//! qualitative results (MISO ≳ OptSta > NoPart; Oracle bounds MISO).
+
+use miso::metrics::RunMetrics;
+use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, OptStaPolicy};
+use miso::sim::{run, Policy};
+use miso::workload::{TraceConfig, TraceGenerator};
+use miso::SystemConfig;
+
+fn small_trace(seed: u64) -> Vec<miso::workload::Job> {
+    let cfg = TraceConfig {
+        num_jobs: 40,
+        mean_interarrival_s: 30.0,
+        max_duration_s: 1800.0,
+        min_duration_s: 60.0,
+        seed,
+        ..Default::default()
+    };
+    TraceGenerator::new(cfg).generate()
+}
+
+fn testbed() -> SystemConfig {
+    SystemConfig { num_gpus: 4, ..SystemConfig::testbed() }
+}
+
+fn zero_overhead() -> SystemConfig {
+    SystemConfig {
+        num_gpus: 4,
+        mig_reconfig_s: 0.0,
+        checkpoint_s: 0.0,
+        ..SystemConfig::testbed()
+    }
+}
+
+fn check_conservation(m: &RunMetrics, expected_jobs: usize) {
+    assert_eq!(m.records.len(), expected_jobs, "no job lost or duplicated");
+    for r in &m.records {
+        assert!(r.completion > r.arrival, "job {} never completed", r.id);
+        assert!(
+            (r.stage_sum() - r.jct()).abs() < 1e-3,
+            "job {}: stages {} != JCT {}",
+            r.id,
+            r.stage_sum(),
+            r.jct()
+        );
+        assert!(r.relative_jct() >= 0.99, "job {} faster than exclusive?", r.id);
+    }
+}
+
+#[test]
+fn nopart_runs_and_conserves() {
+    let trace = small_trace(1);
+    let m = run(&mut NoPartPolicy::new(), &trace, testbed());
+    check_conservation(&m, trace.len());
+    // Unpartitioned: no MPS, no checkpoints.
+    for r in &m.records {
+        assert_eq!(r.mps_s, 0.0);
+        assert_eq!(r.checkpoint_s, 0.0);
+    }
+}
+
+#[test]
+fn optsta_runs_and_conserves() {
+    let trace = small_trace(2);
+    let m = run(&mut OptStaPolicy::abacus(), &trace, testbed());
+    check_conservation(&m, trace.len());
+}
+
+#[test]
+fn miso_runs_and_conserves() {
+    let trace = small_trace(3);
+    let m = run(&mut MisoPolicy::paper(42), &trace, testbed());
+    check_conservation(&m, trace.len());
+    // MISO must actually profile: jobs accumulate MPS time.
+    let total_mps: f64 = m.records.iter().map(|r| r.mps_s).sum();
+    assert!(total_mps > 0.0);
+}
+
+#[test]
+fn oracle_runs_and_conserves() {
+    let trace = small_trace(4);
+    let m = run(&mut MisoPolicy::oracle(), &trace, zero_overhead());
+    check_conservation(&m, trace.len());
+    for r in &m.records {
+        assert_eq!(r.mps_s, 0.0, "oracle does not profile");
+        assert_eq!(r.checkpoint_s, 0.0, "ideal oracle pays no overhead");
+    }
+}
+
+#[test]
+fn mps_only_runs_and_conserves() {
+    let trace = small_trace(5);
+    let m = run(&mut MpsOnlyPolicy::new(), &trace, testbed());
+    check_conservation(&m, trace.len());
+}
+
+#[test]
+fn paper_ordering_holds_on_congested_trace() {
+    // The headline qualitative result (Fig. 10): co-location beats NoPart
+    // on JCT; Oracle is the best dynamic scheme; MISO lands between OptSta
+    // and Oracle (within noise).
+    let trace = small_trace(7);
+    let cfg = testbed();
+
+    let nopart = run(&mut NoPartPolicy::new(), &trace, cfg.clone());
+    let (_, optsta) = miso::scheduler::find_best_static(&trace, &cfg);
+    let miso_m = run(&mut MisoPolicy::paper(11), &trace, cfg.clone());
+    let oracle = run(&mut MisoPolicy::oracle(), &trace, zero_overhead());
+
+    let (j_np, j_os, j_mi, j_or) = (
+        nopart.avg_jct(),
+        optsta.avg_jct(),
+        miso_m.avg_jct(),
+        oracle.avg_jct(),
+    );
+    assert!(j_mi < j_np, "MISO {j_mi} should beat NoPart {j_np}");
+    assert!(j_or <= j_mi * 1.02, "Oracle {j_or} bounds MISO {j_mi}");
+    assert!(j_os < j_np, "OptSta {j_os} should beat NoPart {j_np}");
+}
+
+#[test]
+fn single_gpu_ten_jobs_fig13_shape() {
+    // Fig. 13: on one GPU with n simultaneous 10-min jobs, NoPart JCT grows
+    // linearly while MISO grows much slower; STP stays 1 for NoPart.
+    let cfg = SystemConfig { num_gpus: 1, ..SystemConfig::testbed() };
+    let jobs = TraceGenerator::generate_mix(3, 6, 600.0);
+
+    let nopart = run(&mut NoPartPolicy::new(), &jobs, cfg.clone());
+    let miso_m = run(&mut MisoPolicy::paper(5), &jobs, cfg.clone());
+
+    assert!(nopart.avg_stp() <= 1.0 + 1e-6);
+    // Time-averaged STP: > 1 proves co-location pays off even counting the
+    // thinning tail as jobs stagger out and the profiling windows.
+    assert!(miso_m.avg_stp() > 1.05, "co-location lifts STP: {}", miso_m.avg_stp());
+    assert!(
+        miso_m.avg_jct() < nopart.avg_jct(),
+        "MISO {} vs NoPart {}",
+        miso_m.avg_jct(),
+        nopart.avg_jct()
+    );
+    assert!(miso_m.makespan() < nopart.makespan());
+}
+
+#[test]
+fn policies_never_exceed_seven_jobs_per_gpu() {
+    // Implicit engine invariant — would panic inside Gpu otherwise.
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 60,
+        mean_interarrival_s: 5.0, // heavy congestion
+        max_duration_s: 900.0,
+        min_duration_s: 60.0,
+        seed: 9,
+        ..Default::default()
+    })
+    .generate();
+    let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+    for policy in [&mut MisoPolicy::paper(1) as &mut dyn Policy, &mut MpsOnlyPolicy::new()] {
+        let m = run(policy, &trace, cfg.clone());
+        assert_eq!(m.records.len(), trace.len());
+    }
+}
+
+#[test]
+fn phase_change_fires_and_is_detected() {
+    // A job that flips from compute-light to compute-heavy mid-run: the
+    // engine must change its speed at the boundary, and MISO must re-profile.
+    use miso::workload::{Job, ModelFamily, WorkloadSpec};
+    let light = WorkloadSpec::new(ModelFamily::MobileNet, 0, (0.0, 0.0));
+    let heavy = WorkloadSpec::new(ModelFamily::CycleGan, 0, (0.0, 0.0));
+    let mut trace = vec![
+        Job::new(0, light, 0.0, 600.0).with_phase(0.5, heavy),
+        Job::new(1, WorkloadSpec::new(ModelFamily::Embedding, 0, (0.0, 0.0)), 0.0, 600.0),
+    ];
+    trace[1].requirements.min_memory_mb = 4000.0;
+    let cfg = SystemConfig { num_gpus: 1, ..SystemConfig::testbed() };
+
+    let mut policy = MisoPolicy::new(
+        Box::new(miso::predictor::OraclePredictor),
+        miso::scheduler::ProfilingMode::Mps,
+    );
+    let m = run(&mut policy, &trace, cfg);
+    check_conservation(&m, 2);
+    assert!(policy.phase_reprofiles >= 1, "phase change must trigger a re-profile");
+}
+
+#[test]
+fn phase_change_ignored_by_static_policies() {
+    use miso::workload::{Job, ModelFamily, WorkloadSpec};
+    let light = WorkloadSpec::new(ModelFamily::MobileNet, 0, (0.0, 0.0));
+    let heavy = WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0));
+    let trace = vec![Job::new(0, light, 0.0, 600.0).with_phase(0.4, heavy)];
+    let m = run(&mut NoPartPolicy::new(), &trace, testbed());
+    check_conservation(&m, 1);
+    // On an exclusive 7g slice both phases run at speed 1 — JCT = work.
+    assert!((m.records[0].jct() - 600.0).abs() < 1.0, "{}", m.records[0].jct());
+}
+
+#[test]
+fn multi_instance_groups_share_profiles() {
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 40,
+        mean_interarrival_s: 30.0,
+        max_duration_s: 1200.0,
+        min_duration_s: 60.0,
+        seed: 21,
+        multi_instance_prob: 0.5,
+        ..Default::default()
+    })
+    .generate();
+    assert!(trace.iter().filter(|j| j.group.is_some()).count() >= 10);
+    // Group members share spec/arrival/work.
+    let mut by_group: std::collections::HashMap<u64, Vec<&miso::workload::Job>> =
+        std::collections::HashMap::new();
+    for j in &trace {
+        if let Some(g) = j.group {
+            by_group.entry(g).or_default().push(j);
+        }
+    }
+    for (g, members) in &by_group {
+        assert!(members.len() >= 2, "group {g} has a single member");
+        for m in members {
+            assert_eq!(m.spec.family, members[0].spec.family);
+            assert_eq!(m.work, members[0].work);
+            assert_eq!(m.requirements.instances as usize, members.len());
+        }
+    }
+
+    let mut policy = MisoPolicy::paper(3);
+    let m = run(&mut policy, &trace, testbed());
+    check_conservation(&m, trace.len());
+    assert!(policy.group_fastpath > 0, "siblings must skip profiling via shared tables");
+}
+
+#[test]
+fn phased_multi_instance_trace_conserves_across_policies() {
+    // Failure-injection style stress: phases + groups + heavy congestion.
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 60,
+        mean_interarrival_s: 8.0,
+        max_duration_s: 900.0,
+        min_duration_s: 60.0,
+        seed: 5,
+        phase_change_prob: 0.5,
+        multi_instance_prob: 0.3,
+        ..Default::default()
+    })
+    .generate();
+    let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+    for policy in [
+        &mut MisoPolicy::paper(1) as &mut dyn Policy,
+        &mut MisoPolicy::oracle(),
+        &mut MpsOnlyPolicy::new(),
+        &mut OptStaPolicy::abacus(),
+        &mut NoPartPolicy::new(),
+    ] {
+        let m = run(policy, &trace, cfg.clone());
+        check_conservation(&m, trace.len());
+    }
+}

@@ -1,0 +1,350 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §5).
+//!
+//! No proptest crate is available in this offline build, so this file uses
+//! a small in-repo harness: deterministic seeded random generation with a
+//! per-case seed printed on failure (re-run with the seed to reproduce).
+
+use miso::mig::{MigConfig, SliceKind, ALL_CONFIGS};
+use miso::optimizer::{optimize, optimize_bruteforce, SpeedupTable};
+use miso::perfmodel::{mig_speed, mps_speeds, MpsLevel};
+use miso::predictor::features::profile_mps_matrix;
+use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, OptStaPolicy};
+use miso::sim::{run, Policy};
+use miso::util::Rng;
+use miso::workload::{TraceConfig, TraceGenerator, WorkloadSpec};
+use miso::SystemConfig;
+
+/// Run `f` on `cases` seeded cases; panic with the seed on failure.
+fn for_all(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xD00D_0000 + case;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at seed {seed:#x}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_specs(rng: &mut Rng, m: usize) -> Vec<WorkloadSpec> {
+    (0..m).map(|_| TraceGenerator::sample_spec(rng)).collect()
+}
+
+fn random_tables(rng: &mut Rng, m: usize) -> Vec<SpeedupTable> {
+    (0..m)
+        .map(|_| {
+            let mut t = SpeedupTable::from_fn(|k| (rng.f64() * k.sm_fraction() * 2.0).min(1.0));
+            if rng.bool(0.25) {
+                t.set(SliceKind::G1, 0.0);
+            }
+            if rng.bool(0.10) {
+                t.set(SliceKind::G2, 0.0);
+            }
+            t
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- MIG
+
+#[test]
+fn prop_every_config_is_valid_and_maximal() {
+    // Structural: the enumerated universe is exactly the paper's 18, each
+    // internally consistent.
+    assert_eq!(ALL_CONFIGS.len(), 18);
+    for c in ALL_CONFIGS.iter() {
+        assert!(c.is_valid(), "{c}");
+        assert!(c.total_gpcs() <= 7);
+        assert!(c.total_mem_slices() <= 8);
+    }
+}
+
+#[test]
+fn prop_mutated_configs_detected_invalid() {
+    // Fuzz: shifting any slice to a random offset either reproduces a
+    // valid layout or is caught by is_valid().
+    for_all("mutated-configs", 200, |rng| {
+        let cfg = ALL_CONFIGS.iter().nth(rng.below(18)).unwrap();
+        let mut slices = cfg.slices.clone();
+        let i = rng.below(slices.len());
+        slices[i].start = rng.below(8) as u8;
+        let mutant = MigConfig { slices };
+        if mutant.is_valid() {
+            // A valid mutant must still respect every structural bound.
+            assert!(mutant.total_gpcs() <= 7);
+            let mut occ = [0u8; 8];
+            for p in &mutant.slices {
+                for s in p.start..p.start + p.kind.mem_slices() {
+                    occ[s as usize] += 1;
+                }
+            }
+            assert!(occ.iter().all(|&c| c <= 1), "overlap in {mutant}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------- optimizer
+
+#[test]
+fn prop_optimizer_matches_bruteforce() {
+    for_all("optimizer-vs-bruteforce", 150, |rng| {
+        let m = 1 + rng.below(5); // bruteforce is m! per config
+        let tables = random_tables(rng, m);
+        match (optimize(&tables), optimize_bruteforce(&tables)) {
+            (Some(a), Some(b)) => {
+                assert!(
+                    (a.objective - b.objective).abs() < 1e-9,
+                    "{} vs {}",
+                    a.objective,
+                    b.objective
+                )
+            }
+            (None, None) => {}
+            (a, b) => panic!("feasibility mismatch: {a:?} vs {b:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_optimizer_plan_is_feasible_and_dominant() {
+    for_all("optimizer-feasible", 200, |rng| {
+        let m = 1 + rng.below(7);
+        let tables = random_tables(rng, m);
+        let Some(plan) = optimize(&tables) else { return };
+        // Feasible: exactly m slices, assignment is a permutation, no job
+        // on a zero-speedup slice.
+        assert_eq!(plan.config.len(), m);
+        let mut seen = vec![false; m];
+        for (j, &s) in plan.assignment.iter().enumerate() {
+            assert!(!seen[s], "slice {s} double-assigned");
+            seen[s] = true;
+            assert!(tables[j].get(plan.config.slices[s].kind) > 0.0);
+        }
+        // Objective is the sum of assigned speedups.
+        let sum: f64 = (0..m).map(|j| tables[j].get(plan.slice_for(j))).sum();
+        assert!((plan.objective - sum).abs() < 1e-9);
+        // Dominance over random feasible alternatives.
+        for _ in 0..50 {
+            let cfgs: Vec<&MigConfig> = ALL_CONFIGS.with_len(m).collect();
+            if cfgs.is_empty() {
+                continue;
+            }
+            let cfg = cfgs[rng.below(cfgs.len())];
+            let mut perm: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut perm);
+            let mut obj = 0.0;
+            let mut ok = true;
+            for (j, &s) in perm.iter().enumerate() {
+                let w = tables[j].get(cfg.slices[s].kind);
+                if w <= 0.0 {
+                    ok = false;
+                    break;
+                }
+                obj += w;
+            }
+            if ok {
+                assert!(obj <= plan.objective + 1e-9, "{obj} beats optimal {}", plan.objective);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------- perfmodel
+
+#[test]
+fn prop_mig_speeds_normalized_and_monotone() {
+    for_all("mig-monotone", 300, |rng| {
+        let s = TraceGenerator::sample_spec(rng);
+        let speeds: Vec<f64> = miso::mig::SCHEDULABLE_SLICES
+            .iter()
+            .map(|&k| mig_speed(&s, k))
+            .collect();
+        for v in &speeds {
+            assert!((0.0..=1.0).contains(v), "{v}");
+        }
+        assert!((speeds[4] - 1.0).abs() < 1e-9, "7g speed is 1 by construction");
+        // Monotone in slice size wherever the job fits.
+        for w in speeds.windows(2) {
+            if w[0] > 0.0 {
+                assert!(w[0] <= w[1] + 1e-9, "{speeds:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mps_speeds_bounded() {
+    for_all("mps-bounded", 200, |rng| {
+        let m = 1 + rng.below(7);
+        let specs = random_specs(rng, m);
+        for level in [MpsLevel::Full, MpsLevel::Half, MpsLevel::Exclusive] {
+            for (i, v) in mps_speeds(&specs, level).iter().enumerate() {
+                assert!(*v > 0.0 && *v <= 1.0, "job {i}: {v}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_profile_matrix_well_formed() {
+    for_all("matrix-shape", 150, |rng| {
+        let m = 1 + rng.below(7);
+        let specs = random_specs(rng, m);
+        let noisy = rng.bool(0.5);
+        let mat = if noisy {
+            let mut noise_rng = Rng::seed_from_u64(rng.next_u64());
+            profile_mps_matrix(&specs, Some((&mut noise_rng, 10.0)))
+        } else {
+            profile_mps_matrix(&specs, None)
+        };
+        assert_eq!(mat.num_real, m);
+        for c in 0..7 {
+            let col_max = (0..3).map(|r| mat.data[r][c]).fold(f64::MIN, f64::max);
+            assert!((col_max - 1.0).abs() < 1e-9, "column {c} max {col_max}");
+            for r in 0..3 {
+                assert!(mat.data[r][c] > 0.0 && mat.data[r][c] <= 1.0 + 1e-12);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------- simulator
+
+#[test]
+fn prop_simulation_conserves_under_any_policy() {
+    // Randomized traces + configurations across all policies: no job lost,
+    // stage times sum to JCT, ≤7 jobs/GPU (panics inside Gpu otherwise).
+    for_all("sim-conservation", 12, |rng| {
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 20 + rng.below(30),
+            mean_interarrival_s: 10.0 + rng.f64() * 80.0,
+            max_duration_s: 900.0,
+            min_duration_s: 60.0,
+            seed: rng.next_u64(),
+            ..Default::default()
+        })
+        .generate();
+        let cfg = SystemConfig {
+            num_gpus: 1 + rng.below(4),
+            checkpoint_s: rng.f64() * 30.0,
+            mig_reconfig_s: rng.f64() * 8.0,
+            ..SystemConfig::testbed()
+        };
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(NoPartPolicy::new()),
+            Box::new(OptStaPolicy::abacus()),
+            Box::new(MisoPolicy::paper(rng.next_u64())),
+            Box::new(MisoPolicy::oracle()),
+            Box::new(MpsOnlyPolicy::new()),
+        ];
+        for mut p in policies {
+            let m = run(p.as_mut(), &trace, cfg.clone());
+            assert_eq!(m.records.len(), trace.len(), "{} lost jobs", p.name());
+            for r in &m.records {
+                assert!(
+                    (r.stage_sum() - r.jct()).abs() < 1e-3,
+                    "{}: job {} stages {} != jct {}",
+                    p.name(),
+                    r.id,
+                    r.stage_sum(),
+                    r.jct()
+                );
+                assert!(r.completion >= r.arrival);
+            }
+            assert!(m.makespan() >= 0.0);
+            assert!(m.avg_stp() >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_oracle_weakly_dominates_overhead_free_miso() {
+    // With all overheads zeroed and noise-free tables, MISO differs from
+    // the Oracle only by the profiling-window detour; the Oracle must not
+    // lose on average JCT beyond rounding.
+    for_all("oracle-dominates", 6, |rng| {
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 30,
+            mean_interarrival_s: 40.0,
+            max_duration_s: 1200.0,
+            min_duration_s: 60.0,
+            seed: rng.next_u64(),
+            ..Default::default()
+        })
+        .generate();
+        let cfg = SystemConfig {
+            num_gpus: 4,
+            checkpoint_s: 0.0,
+            mig_reconfig_s: 0.0,
+            ..SystemConfig::testbed()
+        };
+        let miso_m = run(
+            &mut MisoPolicy::new(
+                Box::new(miso::predictor::OraclePredictor),
+                miso::scheduler::ProfilingMode::Mps,
+            ),
+            &trace,
+            cfg.clone(),
+        );
+        let oracle = run(&mut MisoPolicy::oracle(), &trace, cfg.clone());
+        assert!(
+            oracle.avg_jct() <= miso_m.avg_jct() * 1.02,
+            "oracle {} vs miso(no-noise,no-overhead) {}",
+            oracle.avg_jct(),
+            miso_m.avg_jct()
+        );
+    });
+}
+
+// ---------------------------------------------------------------- predictor
+
+#[test]
+fn prop_masking_respects_memory_and_qos() {
+    for_all("masking", 200, |rng| {
+        let spec = TraceGenerator::sample_spec(rng);
+        let mut job = miso::workload::Job::new(0, spec, 0.0, 100.0);
+        job.requirements.min_slice_gpcs = [0u8, 0, 1, 2, 3, 4, 7][rng.below(7)];
+        let mut t = SpeedupTable::from_fn(|k| mig_speed(&spec, k).max(0.01));
+        miso::predictor::mask_infeasible(&mut t, &job);
+        for k in miso::mig::SCHEDULABLE_SLICES {
+            let fits = f64::from(k.memory_mb()) >= job.requirements.min_memory_mb
+                && k.gpcs() >= job.requirements.min_slice_gpcs;
+            if !fits {
+                assert_eq!(t.get(k), 0.0, "slice {k} should be masked");
+            } else {
+                assert!(t.get(k) > 0.0, "slice {k} wrongly masked");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_noisy_predictor_error_scales_with_sigma() {
+    let mut rng = Rng::seed_from_u64(0xE44);
+    let specs = random_specs(&mut rng, 5);
+    let matrix = profile_mps_matrix(&specs, None);
+    let mae_at = |sigma: f64| {
+        let mut total = 0.0;
+        let mut n = 0;
+        for seed in 0..30 {
+            let mut p = miso::predictor::NoisyPredictor::new(sigma, seed);
+            let tables = miso::predictor::Predictor::predict(&mut p, &specs, &matrix);
+            for (s, t) in specs.iter().zip(&tables) {
+                for k in miso::mig::SCHEDULABLE_SLICES {
+                    let truth = mig_speed(s, k);
+                    if truth > 0.0 {
+                        total += (t.get(k) - truth).abs();
+                        n += 1;
+                    }
+                }
+            }
+        }
+        total / n as f64
+    };
+    let low = mae_at(0.01);
+    let high = mae_at(0.10);
+    assert!(high > 3.0 * low, "noise must scale: {low} vs {high}");
+}

@@ -1,0 +1,126 @@
+//! Runtime integration: the AOT-compiled U-Net HLO executed from Rust via
+//! the PJRT CPU client — the production inference path.
+//!
+//! These tests need `make artifacts` to have run (they are skipped with a
+//! notice otherwise, so `cargo test` stays green on a fresh checkout).
+
+use miso::mig::SliceKind;
+use miso::perfmodel::mig_speed;
+use miso::predictor::features::profile_mps_matrix;
+use miso::predictor::{Predictor, UNetPredictor};
+use miso::util::Rng;
+use miso::workload::TraceGenerator;
+
+fn load() -> Option<UNetPredictor> {
+    match UNetPredictor::load_default() {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("skipping runtime_hlo test (run `make artifacts` first): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn unet_loads_and_infers() {
+    let Some(unet) = load() else { return };
+    let mut rng = Rng::seed_from_u64(1);
+    let specs: Vec<_> = (0..4).map(|_| TraceGenerator::sample_spec(&mut rng)).collect();
+    let matrix = profile_mps_matrix(&specs, None);
+    let out = unet.infer_matrix(&matrix).expect("inference");
+    for row in &out {
+        for &v in row {
+            assert!((0.0..=1.0).contains(&v), "U-Net output out of range: {v}");
+        }
+    }
+}
+
+#[test]
+fn unet_tables_close_to_ground_truth() {
+    let Some(mut unet) = load() else { return };
+    assert!(unet.val_mae < 0.05, "training-time val MAE too high: {}", unet.val_mae);
+
+    let mut rng = Rng::seed_from_u64(2);
+    let (mut err, mut n) = (0.0, 0usize);
+    for _ in 0..40 {
+        let m = 1 + rng.below(7);
+        let specs: Vec<_> = (0..m).map(|_| TraceGenerator::sample_spec(&mut rng)).collect();
+        let matrix = profile_mps_matrix(&specs, None);
+        let tables = unet.predict(&specs, &matrix);
+        assert_eq!(tables.len(), m);
+        for (s, t) in specs.iter().zip(&tables) {
+            assert!((t.get(SliceKind::G7) - 1.0).abs() < 1e-9, "7g normalized to 1");
+            for k in [SliceKind::G4, SliceKind::G3] {
+                err += (t.get(k) - mig_speed(s, k)).abs();
+                n += 1;
+            }
+            // Structural sanity: speeds weakly increase with slice size.
+            assert!(t.get(SliceKind::G1) <= t.get(SliceKind::G2) + 1e-9);
+            assert!(t.get(SliceKind::G2) <= t.get(SliceKind::G3) + 1e-9);
+        }
+    }
+    let mae = err / n as f64;
+    assert!(mae < 0.06, "end-to-end MAE vs simulated ground truth: {mae}");
+}
+
+#[test]
+fn unet_inference_is_deterministic() {
+    let Some(unet) = load() else { return };
+    let mut rng = Rng::seed_from_u64(3);
+    let specs: Vec<_> = (0..3).map(|_| TraceGenerator::sample_spec(&mut rng)).collect();
+    let matrix = profile_mps_matrix(&specs, None);
+    let a = unet.infer_matrix(&matrix).unwrap();
+    let b = unet.infer_matrix(&matrix).unwrap();
+    assert_eq!(a, b, "repeated executions must agree bit-for-bit");
+}
+
+#[test]
+fn miso_unet_policy_end_to_end() {
+    // The full production composition: trace -> MPS profiling -> AOT U-Net
+    // on PJRT -> Algorithm 1 -> MIG repartitioning, inside the simulator.
+    let Some(unet) = load() else { return };
+    let trace = TraceGenerator::new(miso::workload::TraceConfig {
+        num_jobs: 30,
+        mean_interarrival_s: 40.0,
+        max_duration_s: 1200.0,
+        min_duration_s: 60.0,
+        seed: 4,
+        ..Default::default()
+    })
+    .generate();
+    let cfg = miso::SystemConfig { num_gpus: 4, ..miso::SystemConfig::testbed() };
+
+    let mut unet_policy =
+        miso::scheduler::MisoPolicy::new(Box::new(unet), miso::scheduler::ProfilingMode::Mps);
+    let m = miso::sim::run(&mut unet_policy, &trace, cfg.clone());
+    assert_eq!(m.records.len(), trace.len());
+
+    let nopart = miso::sim::run(&mut miso::scheduler::NoPartPolicy::new(), &trace, cfg);
+    assert!(
+        m.avg_jct() < nopart.avg_jct(),
+        "U-Net-driven MISO {} must beat NoPart {}",
+        m.avg_jct(),
+        nopart.avg_jct()
+    );
+}
+
+#[test]
+fn hlo_artifact_is_text_parseable() {
+    let dir = miso::runtime::artifacts_dir();
+    let path = dir.join("predictor.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping (no artifacts)");
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("ENTRY"), "HLO text missing ENTRY computation");
+    // 1 input + one parameter per weight tensor.
+    let expected_params = 1 + 12;
+    let count = text.matches("parameter(").count();
+    assert!(
+        count >= expected_params,
+        "expected ≥{expected_params} parameters, found {count}"
+    );
+    let exe = miso::runtime::HloExecutable::load(&path).expect("compile HLO");
+    assert_eq!(exe.path(), path);
+}
