@@ -1,0 +1,110 @@
+//! Bench: fleet-layer scaling sweep. DESIGN.md §Perf target: fleet
+//! stepping must scale near-linearly in node count (nodes are independent
+//! between routing instants), so a 64-node fleet trial stays interactive
+//! and the router-comparison studies in `miso fleet` are cheap to repeat.
+//!
+//! Writes the measured baseline to `BENCH_fleet.json` (repo root when run
+//! via `cargo bench --bench fleet` from `rust/`, else the current
+//! directory) — the perf-trajectory record future PRs append to.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use miso::fleet::{make_router, run_fleet, FleetConfig, ROUTER_NAMES};
+use miso::util::json::Value;
+use miso::workload::{TraceConfig, TraceGenerator};
+use miso::SystemConfig;
+
+fn fleet_cfg(nodes: usize, threads: usize) -> FleetConfig {
+    FleetConfig {
+        nodes,
+        gpus_per_node: 4,
+        threads,
+        node_cfg: SystemConfig::testbed(),
+    }
+}
+
+fn main() {
+    let mut records: Vec<Value> = Vec::new();
+
+    section("fleet scaling (miso policy, frag-aware router, 4 GPUs/node)");
+    for &nodes in &[1usize, 4, 16, 64] {
+        let jobs = 50 * nodes;
+        let trace =
+            TraceGenerator::new(TraceConfig::fleet(nodes, jobs, 42)).generate();
+        let cfg = fleet_cfg(nodes, 0);
+        let p50 = bench(&format!("{nodes:>2} nodes, {jobs} jobs"), || {
+            let mut router = make_router("frag-aware").unwrap();
+            run_fleet(&cfg, "miso", 7, router.as_mut(), &trace).unwrap()
+        });
+        records.push(Value::obj([
+            ("kind", Value::str("scaling")),
+            ("nodes", Value::num(nodes as f64)),
+            ("jobs", Value::num(jobs as f64)),
+            ("p50_s", Value::num(p50)),
+            ("jobs_per_s", Value::num(jobs as f64 / p50)),
+        ]));
+    }
+
+    section("router comparison (8 nodes, 400 jobs)");
+    let trace = TraceGenerator::new(TraceConfig::fleet_skewed(8, 400, 42)).generate();
+    let cfg = fleet_cfg(8, 0);
+    for name in ROUTER_NAMES {
+        let p50 = bench(name, || {
+            let mut router = make_router(name).unwrap();
+            run_fleet(&cfg, "miso", 7, router.as_mut(), &trace).unwrap()
+        });
+        records.push(Value::obj([
+            ("kind", Value::str("router")),
+            ("router", Value::str(name)),
+            ("p50_s", Value::num(p50)),
+        ]));
+    }
+
+    section("thread scaling (32 nodes, 1600 jobs)");
+    let trace =
+        TraceGenerator::new(TraceConfig::fleet(32, 1600, 42)).generate();
+    let mut thread_points = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let cfg = fleet_cfg(32, threads);
+        let p50 = bench(&format!("{threads} worker threads"), || {
+            let mut router = make_router("frag-aware").unwrap();
+            run_fleet(&cfg, "miso", 7, router.as_mut(), &trace).unwrap()
+        });
+        thread_points.push((threads, p50));
+        records.push(Value::obj([
+            ("kind", Value::str("threads")),
+            ("threads", Value::num(threads as f64)),
+            ("p50_s", Value::num(p50)),
+        ]));
+    }
+    if let (Some(first), Some(last)) = (thread_points.first(), thread_points.last()) {
+        println!(
+            "\n=> {:.2}x speedup from {} -> {} worker threads",
+            first.1 / last.1,
+            first.0,
+            last.0
+        );
+    }
+
+    // Perf-trajectory record: repo root if we can see it, else cwd.
+    let out = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_fleet.json"
+    } else {
+        "BENCH_fleet.json"
+    };
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0.0, |d| d.as_secs_f64());
+    let doc = Value::obj([
+        ("bench", Value::str("fleet")),
+        ("status", Value::str("measured")),
+        ("unix_time_s", Value::num(unix_s)),
+        ("results", Value::arr(records)),
+    ]);
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote baseline to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

@@ -1,0 +1,343 @@
+//! Fleet layer: multi-node cluster federation above the per-node MISO
+//! engine.
+//!
+//! MISO (the paper) schedules one pool of MIG-capable GPUs behind a single
+//! controller. A datacenter runs *many* such pools — one per node — and
+//! the scheduling action at that scale is **placement across nodes**:
+//! which node's controller a job is handed to. Follow-up work
+//! (fragmentation-aware MIG cloud scheduling, arXiv:2511.18906; Flex-MIG,
+//! arXiv:2511.09143) shows routing quality dominates once nodes are
+//! MIG-partitioned, because a node's *shape* (whole GPUs free vs. slices
+//! free) decides what it can still accept.
+//!
+//! Architecture:
+//!
+//! * [`FleetNode`] — one datacenter node: an owned [`crate::sim::Engine`]
+//!   (the node's GPUs + event loop) plus its own scheduling-policy
+//!   instance built from a shared fleet seed
+//!   ([`crate::scheduler::build_policy`] / [`crate::scheduler::node_seed`]).
+//!   Nodes share nothing, exactly like real machines behind a cluster
+//!   gateway.
+//! * [`FleetEngine`] — the federation: advances every node to the same
+//!   virtual instant in lock-step (fanning the independent node event
+//!   loops out across OS threads), and hands arriving jobs to a
+//!   [`Router`].
+//! * [`Router`] — the pluggable placement policy: [`RoundRobin`],
+//!   [`LeastLoaded`], and [`FragAware`] (MIG-fragmentation-aware scoring:
+//!   small jobs pack onto already-fragmented GPUs, large jobs keep whole
+//!   GPUs free).
+//!
+//! Determinism: nodes interact only at routing instants, and every node's
+//! event loop is sequential within the node, so fleet results are
+//! bit-identical across runs *and across worker-thread counts* — the
+//! property `tests/fleet.rs` locks in via [`FleetMetrics::digest`].
+
+mod router;
+
+pub use router::{make_router, FragAware, LeastLoaded, RoundRobin, Router, ROUTER_NAMES};
+
+use crate::metrics::FleetMetrics;
+use crate::sim::Engine;
+use crate::workload::Job;
+use crate::SystemConfig;
+use anyhow::Result;
+
+/// Fleet shape + stepping parallelism.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of independent nodes.
+    pub nodes: usize,
+    /// GPUs per node (overrides `node_cfg.num_gpus`).
+    pub gpus_per_node: usize,
+    /// Worker threads for lock-step node advancement; 0 = one per
+    /// available core. Results are identical for every value.
+    pub threads: usize,
+    /// Per-node overhead/profiling constants (`num_gpus` is taken from
+    /// `gpus_per_node`).
+    pub node_cfg: SystemConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            nodes: 4,
+            gpus_per_node: 8,
+            threads: 0,
+            node_cfg: SystemConfig::testbed(),
+        }
+    }
+}
+
+/// The router's view of one node at a routing instant: everything a real
+/// cluster gateway could cheaply learn from a node heartbeat.
+#[derive(Debug, Clone)]
+pub struct NodeView {
+    pub node: usize,
+    pub num_gpus: usize,
+    /// Jobs arrived but not completed (resident + queued).
+    pub live_jobs: usize,
+    /// Jobs waiting in the node's controller queue.
+    pub queued: usize,
+    /// Jobs resident on some GPU.
+    pub resident_jobs: usize,
+    /// GPUs with no residents and no transition in flight — whole GPUs a
+    /// large job could claim.
+    pub empty_gpus: usize,
+    /// GPUs already fragmented (some residents, but ≥ 1 GPC of headroom
+    /// and < 7 jobs) — where small jobs pack for free.
+    pub partial_gpus: usize,
+    /// GPUs with no remaining headroom.
+    pub full_gpus: usize,
+    /// Largest per-GPU GPC headroom among the partial GPUs (0 if none).
+    pub max_partial_headroom: u8,
+    /// Instantaneous cluster STP of the node (Eq. 1).
+    pub instant_stp: f64,
+}
+
+/// One datacenter node: engine + owned policy instance.
+pub struct FleetNode {
+    pub id: usize,
+    pub engine: Engine,
+    policy: Box<dyn crate::sim::Policy + Send>,
+    /// Jobs routed here (observability; completions live in the metrics).
+    pub arrivals: usize,
+}
+
+impl FleetNode {
+    /// Advance this node's virtual clock to `t`, firing its internal
+    /// events (completions, transitions, profiling) on the way.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.engine.st.now {
+            self.engine.advance_to(self.policy.as_mut(), t);
+        }
+    }
+
+    /// Run this node's event loop until it has no live jobs.
+    pub fn run_until_idle(&mut self) {
+        self.engine.run_until_idle(self.policy.as_mut());
+    }
+
+    /// Hand a job to this node's controller at the current instant.
+    pub fn submit(&mut self, job: Job) {
+        self.arrivals += 1;
+        self.engine.submit(self.policy.as_mut(), job);
+    }
+
+    /// Snapshot the node for routing.
+    pub fn view(&self) -> NodeView {
+        let st = &self.engine.st;
+        let mut empty = 0;
+        let mut partial = 0;
+        let mut full = 0;
+        let mut resident = 0;
+        let mut max_headroom = 0u8;
+        for g in &st.gpus {
+            let count = g.gpu.job_count();
+            resident += count;
+            if count == 0 {
+                // A busy zero-resident GPU is mid-transition — typically
+                // being claimed by a job (e.g. a whole-GPU tenant whose
+                // repartition has not fired yet). It is neither whole nor
+                // fragmented capacity; count it as full so routers leave
+                // it alone until the transition lands.
+                if g.busy {
+                    full += 1;
+                } else {
+                    empty += 1;
+                }
+                continue;
+            }
+            // Conservative headroom: 7 GPCs minus the smallest feasible
+            // slice of every resident (a job that fits nowhere commits the
+            // whole GPU). Cheaper than the exact `mix_feasible` check and
+            // only used for ranking, never for admission.
+            let committed: u32 = g
+                .gpu
+                .resident_jobs()
+                .iter()
+                .map(|id| u32::from(st.jobs[id].job.min_feasible_slice().map_or(7, |k| k.gpcs())))
+                .sum();
+            let headroom = 7u32.saturating_sub(committed) as u8;
+            if count >= 7 || headroom == 0 {
+                full += 1;
+            } else {
+                partial += 1;
+                max_headroom = max_headroom.max(headroom);
+            }
+        }
+        NodeView {
+            node: self.id,
+            num_gpus: st.gpus.len(),
+            live_jobs: self.engine.live_jobs(),
+            queued: st.queue.len(),
+            resident_jobs: resident,
+            empty_gpus: empty,
+            partial_gpus: partial,
+            full_gpus: full,
+            max_partial_headroom: max_headroom,
+            instant_stp: st.instant_stp(),
+        }
+    }
+}
+
+/// The federation: N independent nodes advanced in lock-step virtual time,
+/// with arriving jobs placed by a pluggable [`Router`].
+pub struct FleetEngine {
+    pub nodes: Vec<FleetNode>,
+    threads: usize,
+    gpus_per_node: usize,
+}
+
+impl FleetEngine {
+    /// Build a fleet of `cfg.nodes` nodes, each with its own
+    /// `policy_name` instance seeded from the shared `seed`
+    /// ([`crate::scheduler::node_seed`]).
+    pub fn new(cfg: &FleetConfig, policy_name: &str, seed: u64) -> Result<FleetEngine> {
+        anyhow::ensure!(cfg.nodes > 0, "fleet needs at least one node");
+        anyhow::ensure!(cfg.gpus_per_node > 0, "nodes need at least one GPU");
+        let node_cfg = SystemConfig { num_gpus: cfg.gpus_per_node, ..cfg.node_cfg.clone() };
+        let mut nodes = Vec::with_capacity(cfg.nodes);
+        for id in 0..cfg.nodes {
+            let mut policy =
+                crate::scheduler::build_policy(policy_name, crate::scheduler::node_seed(seed, id))?;
+            let mut engine = Engine::new(node_cfg.clone());
+            policy.init(&mut engine.st);
+            nodes.push(FleetNode { id, engine, policy, arrivals: 0 });
+        }
+        let threads = if cfg.threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            cfg.threads
+        };
+        Ok(FleetEngine { nodes, threads, gpus_per_node: cfg.gpus_per_node })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Jobs arrived but not completed, fleet-wide.
+    pub fn live_jobs(&self) -> usize {
+        self.nodes.iter().map(|n| n.engine.live_jobs()).sum()
+    }
+
+    /// The lock-step clock (nodes only diverge during the final drain).
+    pub fn now(&self) -> f64 {
+        self.nodes.iter().map(|n| n.engine.st.now).fold(0.0, f64::max)
+    }
+
+    /// Routing snapshots for every node, indexed by node id.
+    pub fn views(&self) -> Vec<NodeView> {
+        self.nodes.iter().map(FleetNode::view).collect()
+    }
+
+    /// Advance every node to virtual time `t` in lock-step, fanning the
+    /// independent node event loops across up to `threads` OS threads.
+    /// Nodes share nothing, so the result is identical for any thread
+    /// count.
+    pub fn advance_all_to(&mut self, t: f64) {
+        self.parallel_over_nodes(|node| node.advance_to(t));
+    }
+
+    /// Run every node until it is idle (no live jobs) — the post-arrivals
+    /// drain of a trace run.
+    pub fn drain(&mut self) {
+        self.parallel_over_nodes(FleetNode::run_until_idle);
+    }
+
+    fn parallel_over_nodes(&mut self, f: impl Fn(&mut FleetNode) + Send + Sync) {
+        let threads = self.threads.min(self.nodes.len()).max(1);
+        if threads <= 1 {
+            for node in &mut self.nodes {
+                f(node);
+            }
+            return;
+        }
+        let chunk = self.nodes.len().div_ceil(threads);
+        let f = &f;
+        std::thread::scope(|s| {
+            for nodes in self.nodes.chunks_mut(chunk) {
+                s.spawn(move || {
+                    for node in nodes {
+                        f(node);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Route `job` through `router` (observing fresh node views) and
+    /// submit it to the chosen node. Returns the node id.
+    pub fn route_and_submit(&mut self, router: &mut dyn Router, job: Job) -> usize {
+        let views = self.views();
+        let node = router.route(&job, &views).min(self.nodes.len() - 1);
+        self.nodes[node].submit(job);
+        node
+    }
+
+    /// Jobs routed to each node so far (indexed by node id).
+    pub fn arrivals_per_node(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.arrivals).collect()
+    }
+
+    /// Consume the fleet, aggregating every node's metrics.
+    pub fn finish(self) -> FleetMetrics {
+        let gpus = self.gpus_per_node;
+        FleetMetrics::aggregate(
+            self.nodes.into_iter().map(|n| n.engine.finish()).collect(),
+            gpus,
+        )
+    }
+}
+
+/// Replay a job trace through a fleet: advance all nodes to each arrival
+/// instant in lock-step, route the job, and after the last arrival drain
+/// every node to completion. The fleet-scale analogue of [`crate::sim::run`].
+pub fn run_fleet(
+    cfg: &FleetConfig,
+    policy_name: &str,
+    seed: u64,
+    router: &mut dyn Router,
+    trace: &[Job],
+) -> Result<FleetMetrics> {
+    let mut fleet = FleetEngine::new(cfg, policy_name, seed)?;
+    let mut arrivals: Vec<Job> = trace.to_vec();
+    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap().then(a.id.cmp(&b.id)));
+    for job in arrivals {
+        fleet.advance_all_to(job.arrival);
+        fleet.route_and_submit(router, job);
+    }
+    fleet.drain();
+    Ok(fleet.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_rejects_degenerate_shapes() {
+        let bad = FleetConfig { nodes: 0, ..Default::default() };
+        assert!(FleetEngine::new(&bad, "miso", 0).is_err());
+        let bad = FleetConfig { gpus_per_node: 0, ..Default::default() };
+        assert!(FleetEngine::new(&bad, "miso", 0).is_err());
+        let ok = FleetConfig { nodes: 2, gpus_per_node: 1, threads: 1, ..Default::default() };
+        let fleet = FleetEngine::new(&ok, "miso", 0).unwrap();
+        assert_eq!(fleet.num_nodes(), 2);
+        assert_eq!(fleet.views().len(), 2);
+        assert_eq!(fleet.views()[1].num_gpus, 1);
+        assert_eq!(fleet.live_jobs(), 0);
+    }
+
+    #[test]
+    fn fresh_node_view_is_all_empty() {
+        let cfg = FleetConfig { nodes: 1, gpus_per_node: 4, threads: 1, ..Default::default() };
+        let fleet = FleetEngine::new(&cfg, "miso", 1).unwrap();
+        let views = fleet.views();
+        let v = &views[0];
+        assert_eq!(v.empty_gpus, 4);
+        assert_eq!(v.partial_gpus, 0);
+        assert_eq!(v.full_gpus, 0);
+        assert_eq!(v.queued + v.live_jobs + v.resident_jobs, 0);
+    }
+}

@@ -1,0 +1,299 @@
+//! Pluggable job→node placement policies for the fleet layer.
+//!
+//! Routers see only [`NodeView`] heartbeats — load counters and MIG-shape
+//! summaries a real cluster gateway could maintain — never the nodes'
+//! internal state, so every policy here is implementable against real
+//! per-node MISO controllers unchanged.
+
+use super::NodeView;
+use crate::workload::Job;
+use anyhow::Result;
+use std::cmp::Reverse;
+
+/// A fleet placement policy: pick the node an arriving job is handed to.
+///
+/// `Send` so the live fleet controller can own a router on its thread.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose a node for `job`. `views` is non-empty, indexed by node id,
+    /// and freshly snapshotted at the arrival instant. Must return a valid
+    /// index into `views` (the engine clamps defensively).
+    fn route(&mut self, job: &Job, views: &[NodeView]) -> usize;
+}
+
+/// The canonical router names, in reporting order.
+pub const ROUTER_NAMES: [&str; 3] = ["round-robin", "least-loaded", "frag-aware"];
+
+/// Build a router by name (see [`ROUTER_NAMES`]).
+pub fn make_router(name: &str) -> Result<Box<dyn Router>> {
+    Ok(match name {
+        "round-robin" => Box::new(RoundRobin::new()),
+        "least-loaded" => Box::new(LeastLoaded),
+        "frag-aware" => Box::new(FragAware),
+        other => anyhow::bail!(
+            "unknown router '{other}' (round-robin | least-loaded | frag-aware)"
+        ),
+    })
+}
+
+/// Cycle through nodes regardless of their state — the baseline every
+/// load-aware policy must beat.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _job: &Job, views: &[NodeView]) -> usize {
+        let node = self.next % views.len();
+        self.next = self.next.wrapping_add(1);
+        views[node].node
+    }
+}
+
+/// Send the job to the node with the fewest live jobs (resident + queued),
+/// breaking ties by resident count then node id — the fleet-level analogue
+/// of MISO's own least-loaded GPU placement rule.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Router for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&mut self, _job: &Job, views: &[NodeView]) -> usize {
+        views
+            .iter()
+            .min_by_key(|v| (v.live_jobs, v.resident_jobs, v.node))
+            .expect("non-empty views")
+            .node
+    }
+}
+
+/// MIG-fragmentation-aware routing (after arXiv:2511.18906): score nodes
+/// by slice-shape fit rather than raw load.
+///
+/// * **Large jobs** (smallest feasible slice ≥ 4 GPCs — they monopolize a
+///   GPU or nearly so) go to the node with the most *whole* (empty) GPUs,
+///   so they start without waiting for a node to defragment.
+/// * **Small jobs** join a node whose already-fragmented GPUs still have
+///   headroom — consuming capacity whole-GPU tenants cannot use anyway and
+///   leaving empty GPUs empty — but at *shallow* depth: among fitting
+///   fragmented nodes the one with the fewest residents wins, and nodes
+///   already averaging ≥ 3 residents per touched GPU are passed over while
+///   fresh capacity exists (beyond ~3-way co-location the per-job slices
+///   get small enough that packing deeper costs more throughput than it
+///   saves fragmentation — the same sweet spot behind the paper's 3-job
+///   MPS cap).
+/// * Saturated fleet: fall back to least-loaded.
+///
+/// Only nodes with an empty controller queue count as having usable
+/// shape — FCFS queueing behind earlier arrivals would void the fit.
+#[derive(Debug, Default)]
+pub struct FragAware;
+
+/// Max residents per *touched* (non-empty) GPU before a node stops
+/// attracting more small jobs while fresh capacity exists elsewhere.
+const PACK_DEPTH: usize = 3;
+
+impl Router for FragAware {
+    fn name(&self) -> &'static str {
+        "frag-aware"
+    }
+
+    fn route(&mut self, job: &Job, views: &[NodeView]) -> usize {
+        let need = job.min_feasible_slice().map_or(7, |k| k.gpcs());
+
+        if need >= 4 {
+            // Whole-GPU-class job: maximize preserved empty GPUs.
+            return views
+                .iter()
+                .min_by_key(|v| (Reverse(v.empty_gpus), v.live_jobs, v.node))
+                .expect("non-empty views")
+                .node;
+        }
+
+        // Small job: shallowest fitting fragmented node below the depth cap.
+        if let Some(v) = views
+            .iter()
+            .filter(|v| v.queued == 0 && v.partial_gpus > 0 && v.max_partial_headroom >= need)
+            .filter(|v| {
+                let touched = (v.num_gpus - v.empty_gpus).max(1);
+                v.resident_jobs < PACK_DEPTH * touched
+            })
+            .min_by_key(|v| (v.resident_jobs, Reverse(v.partial_gpus), v.node))
+        {
+            return v.node;
+        }
+        // No shallow fragmented fit: open a fresh GPU on the emptiest node
+        // (costs the least relative future large-job capacity).
+        if let Some(v) = views
+            .iter()
+            .filter(|v| v.queued == 0 && v.empty_gpus > 0)
+            .min_by_key(|v| (Reverse(v.empty_gpus), v.live_jobs, v.node))
+        {
+            return v.node;
+        }
+        // No fresh capacity: any fitting fragmented node, least loaded.
+        if let Some(v) = views
+            .iter()
+            .filter(|v| v.partial_gpus > 0 && v.max_partial_headroom >= need)
+            .min_by_key(|v| (v.live_jobs, v.node))
+        {
+            return v.node;
+        }
+        // Saturated: plain least-loaded.
+        views
+            .iter()
+            .min_by_key(|v| (v.live_jobs, v.node))
+            .expect("non-empty views")
+            .node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelFamily, WorkloadSpec};
+
+    fn view(node: usize) -> NodeView {
+        NodeView {
+            node,
+            num_gpus: 2,
+            live_jobs: 0,
+            queued: 0,
+            resident_jobs: 0,
+            empty_gpus: 2,
+            partial_gpus: 0,
+            full_gpus: 0,
+            max_partial_headroom: 0,
+            instant_stp: 0.0,
+        }
+    }
+
+    fn small_job(id: u64) -> Job {
+        let mut spec = WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0));
+        spec.mem_mb = 2_000.0;
+        let mut j = Job::new(id, spec, 0.0, 100.0);
+        j.requirements.min_memory_mb = 2_000.0;
+        j
+    }
+
+    fn big_job(id: u64) -> Job {
+        let mut j = small_job(id);
+        j.requirements.min_slice_gpcs = 7;
+        j
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let views: Vec<NodeView> = (0..3).map(view).collect();
+        let mut rr = RoundRobin::new();
+        let picks: Vec<usize> =
+            (0..7u64).map(|i| rr.route(&small_job(i), &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_fewest_live_jobs() {
+        let mut views: Vec<NodeView> = (0..3).map(view).collect();
+        views[0].live_jobs = 5;
+        views[1].live_jobs = 2;
+        views[2].live_jobs = 2;
+        views[2].resident_jobs = 1;
+        // Tie on live jobs between 1 and 2 → fewer residents wins... node 1
+        // has 0 residents.
+        assert_eq!(LeastLoaded.route(&small_job(0), &views), 1);
+    }
+
+    #[test]
+    fn frag_aware_sends_large_jobs_to_emptiest_node() {
+        let mut views: Vec<NodeView> = (0..3).map(view).collect();
+        views[0].empty_gpus = 0;
+        views[1].empty_gpus = 1;
+        views[2].empty_gpus = 2;
+        assert_eq!(FragAware.route(&big_job(0), &views), 2);
+    }
+
+    #[test]
+    fn frag_aware_packs_small_jobs_onto_fragmented_nodes() {
+        let mut views: Vec<NodeView> = (0..3).map(view).collect();
+        // Nodes 1 and 2 are fragmented with headroom; node 0 is pristine.
+        // The shallower fragmented node (fewer residents) wins; pristine
+        // empty GPUs are left for whole-GPU tenants.
+        views[1].empty_gpus = 1;
+        views[1].partial_gpus = 1;
+        views[1].max_partial_headroom = 4;
+        views[1].resident_jobs = 2;
+        views[2].empty_gpus = 1;
+        views[2].partial_gpus = 1;
+        views[2].max_partial_headroom = 4;
+        views[2].resident_jobs = 1;
+        assert_eq!(FragAware.route(&small_job(0), &views), 2, "shallowest fragmented fit wins");
+
+        // A queue on node 2 voids its fit.
+        views[2].queued = 3;
+        assert_eq!(FragAware.route(&small_job(0), &views), 1);
+    }
+
+    #[test]
+    fn frag_aware_depth_cap_diverts_to_fresh_capacity() {
+        let mut views: Vec<NodeView> = (0..2).map(view).collect();
+        // Node 0: single touched GPU already at 3 residents (depth cap).
+        views[0].empty_gpus = 1;
+        views[0].partial_gpus = 1;
+        views[0].max_partial_headroom = 3;
+        views[0].resident_jobs = 3;
+        // Node 1: all empty.
+        assert_eq!(
+            FragAware.route(&small_job(0), &views),
+            1,
+            "capped node must not keep attracting small jobs"
+        );
+
+        // With no fresh capacity anywhere, the capped node is used anyway.
+        views[1].empty_gpus = 0;
+        views[1].full_gpus = 2;
+        views[0].empty_gpus = 0;
+        views[0].full_gpus = 1;
+        assert_eq!(FragAware.route(&small_job(0), &views), 0);
+    }
+
+    #[test]
+    fn frag_aware_small_job_falls_back_to_empty_then_least_loaded() {
+        // No partial GPUs anywhere → emptiest node.
+        let mut views: Vec<NodeView> = (0..2).map(view).collect();
+        views[0].empty_gpus = 1;
+        views[1].empty_gpus = 2;
+        assert_eq!(FragAware.route(&small_job(0), &views), 1);
+
+        // Fully saturated → least loaded.
+        for v in &mut views {
+            v.empty_gpus = 0;
+            v.full_gpus = 2;
+        }
+        views[0].live_jobs = 9;
+        views[1].live_jobs = 4;
+        assert_eq!(FragAware.route(&small_job(0), &views), 1);
+    }
+
+    #[test]
+    fn make_router_covers_names() {
+        for name in ROUTER_NAMES {
+            assert_eq!(make_router(name).unwrap().name(), name);
+        }
+        assert!(make_router("random").is_err());
+    }
+}

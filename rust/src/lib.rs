@@ -8,8 +8,12 @@
 //! * **Layer 3 (this crate)** — the cluster coordinator: MIG partition
 //!   model, simulated A100 substrate, MPS profiling, the Algorithm-1
 //!   partition optimizer, scheduling policies (MISO / NoPart / OptSta /
-//!   Oracle / MPS-only), a discrete-event cluster simulator, and a live
-//!   TCP controller/server mode.
+//!   Oracle / MPS-only), a discrete-event cluster simulator, a live
+//!   TCP controller/server mode, and the **fleet layer** ([`fleet`]): a
+//!   multi-node federation that advances many per-node MISO engines in
+//!   lock-step virtual time (parallel across OS threads) and places
+//!   arriving jobs with pluggable routers — round-robin, least-loaded,
+//!   and MIG-fragmentation-aware.
 //! * **Layer 2 (python/compile, build time only)** — the U-Net autoencoder
 //!   performance predictor in JAX, AOT-lowered to HLO text.
 //! * **Layer 1 (python/compile/kernels, build time only)** — Pallas kernels
@@ -18,11 +22,13 @@
 //! At runtime the learned MPS→MIG predictor executes *inside Rust* via the
 //! PJRT CPU client ([`runtime`]); Python is never on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory, the experiment index, the
+//! substitutions made for the offline build environment, and the perf
+//! anchors the benches assert against.
 
 pub mod config;
 pub mod experiments;
+pub mod fleet;
 pub mod gpu;
 pub mod metrics;
 pub mod mig;

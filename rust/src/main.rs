@@ -1,13 +1,17 @@
-//! `repro` — the MISO reproduction CLI.
+//! `miso` — the MISO reproduction CLI.
 //!
 //! Subcommands:
 //! * `gen-data`    — emit MPS→MIG training data (JSONL) from the simulated
 //!   hardware for `python/compile/train.py` (paper Sec. 4.1: 400 mixes per
 //!   job count 1..=7, i.e. 2800 mixes).
 //! * `simulate`    — run one cluster simulation with a chosen policy.
+//! * `fleet`       — run a multi-node fleet simulation: N nodes in
+//!   lock-step virtual time, arriving jobs placed by a pluggable router
+//!   (round-robin | least-loaded | frag-aware | all).
 //! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3).
 //! * `serve`       — run the live controller + per-GPU server APIs (Fig. 6)
-//!   on a TCP port with simulated GPUs in scaled wall-clock time.
+//!   on a TCP port with simulated GPUs in scaled wall-clock time; with
+//!   `--nodes N > 1`, serve a whole fleet behind one gateway port.
 //! * `list`        — list available experiments.
 //!
 //! No external CLI crate is available offline; parsing is by hand.
@@ -28,14 +32,17 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <command> [flags]\n\
+        "usage: miso <command> [flags]\n\
          \n\
          commands:\n\
            gen-data    --out FILE [--mixes-per-count N] [--seed S] [--clean]\n\
            simulate    --policy P [--gpus N] [--jobs N] [--lambda S] [--seed S]\n\
                        (P = miso | miso-unet | nopart | optsta | oracle | mps-only | miso-migprof)\n\
+           fleet       [--nodes N] [--gpus N] [--router R] [--policy P] [--jobs N]\n\
+                       [--lambda S] [--seed S] [--threads T] [--skewed]\n\
+                       (R = round-robin | least-loaded | frag-aware | all)\n\
            experiment  --id ID [--trials N] [--out FILE]\n\
-           serve       [--port P] [--gpus N] [--time-scale X]\n\
+           serve       [--port P] [--gpus N] [--time-scale X] [--nodes N] [--router R]\n\
            list"
     );
     std::process::exit(2);
@@ -88,16 +95,29 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "gen-data" => gen_data(&flags),
         "simulate" => simulate(&flags),
+        "fleet" => fleet(&flags),
         "experiment" => miso::experiments::run_experiment(
             flags.get("id").context("--id required")?,
             flags.num("trials", 0usize)?,
             flags.get("out"),
         ),
-        "serve" => miso::server::serve(
-            flags.num("port", 7100u16)?,
-            flags.num("gpus", 4usize)?,
-            flags.num("time-scale", 60.0f64)?,
-        ),
+        "serve" => {
+            let port = flags.num("port", 7100u16)?;
+            let gpus = flags.num("gpus", 4usize)?;
+            let time_scale = flags.num("time-scale", 60.0f64)?;
+            let nodes = flags.num("nodes", 1usize)?;
+            if nodes > 1 {
+                miso::server::serve_fleet(
+                    port,
+                    nodes,
+                    gpus,
+                    time_scale,
+                    flags.get("router").unwrap_or("frag-aware"),
+                )
+            } else {
+                miso::server::serve(port, gpus, time_scale)
+            }
+        }
         "list" => {
             for (id, desc) in miso::experiments::catalog() {
                 println!("{id:<16} {desc}");
@@ -124,7 +144,7 @@ fn make_policy(name: &str, seed: u64) -> Result<Box<dyn Policy>> {
         "nopart" => Box::new(NoPartPolicy::new()),
         "oracle" => Box::new(MisoPolicy::oracle()),
         "mps-only" => Box::new(MpsOnlyPolicy::new()),
-        "optsta" => bail!("optsta needs offline search; use `repro experiment --id fig10`"),
+        "optsta" => bail!("optsta needs offline search; use `miso experiment --id fig10`"),
         other => bail!("unknown policy '{other}'"),
     })
 }
@@ -164,6 +184,79 @@ fn simulate(flags: &Flags) -> Result<()> {
         miso::util::stats::percentile_sorted(&sorted_rel(&m), 0.9));
     println!("lifecycle         : queue {q:.1}% | mps {mps:.1}% | ckpt {ckpt:.1}% | exec {exec:.1}% | idle {idle:.1}%");
     println!("sim wall time     : {wall:.2} s");
+    Ok(())
+}
+
+/// Multi-node fleet simulation: generate one trace, replay it through one
+/// or all routers, and report fleet + per-node figures of merit. Runs are
+/// fully deterministic given `--seed` (the printed digest is bit-stable
+/// across repetitions and `--threads` values).
+fn fleet(flags: &Flags) -> Result<()> {
+    use miso::fleet::{make_router, run_fleet, FleetConfig, ROUTER_NAMES};
+
+    let nodes = flags.num("nodes", 4usize)?;
+    let gpus = flags.num("gpus", 8usize)?;
+    let jobs = flags.num("jobs", 200usize)?;
+    let seed = flags.num("seed", 0u64)?;
+    let threads = flags.num("threads", 0usize)?;
+    let policy = flags.get("policy").unwrap_or("miso");
+    let router_arg = flags.get("router").unwrap_or("all");
+    // Default λ keeps per-GPU offered load at the testbed's level
+    // (8 GPUs at λ = 60 s) as the fleet grows.
+    let default_lambda = 60.0 * 8.0 / (nodes.max(1) * gpus.max(1)) as f64;
+    let lambda = flags.num("lambda", default_lambda)?;
+
+    let trace_cfg = miso::workload::TraceConfig {
+        num_jobs: jobs,
+        mean_interarrival_s: lambda,
+        seed,
+        size_skew: if flags.flag("skewed") { 0.15 } else { 0.0 },
+        ..Default::default()
+    };
+    let trace = TraceGenerator::new(trace_cfg).generate();
+    let fleet_cfg = FleetConfig {
+        nodes,
+        gpus_per_node: gpus,
+        threads,
+        node_cfg: SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() },
+    };
+
+    println!("fleet             : {nodes} nodes × {gpus} GPUs ({} total)", nodes * gpus);
+    println!("policy            : {policy}");
+    println!("trace             : {jobs} jobs, λ = {lambda:.2} s, seed {seed}");
+
+    let routers: Vec<&str> = match router_arg {
+        "all" => ROUTER_NAMES.to_vec(),
+        one => vec![one],
+    };
+    let per_node = routers.len() == 1;
+    for name in routers {
+        let mut router = make_router(name)?;
+        let t0 = std::time::Instant::now();
+        let m = run_fleet(&fleet_cfg, policy, seed ^ 0xF1EE7, router.as_mut(), &trace)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
+        println!("\nrouter {name}");
+        println!("  avg JCT         : {:.1} s", m.avg_jct());
+        println!("  p99 JCT         : {:.1} s", m.p99_jct());
+        println!("  avg queue       : {:.1} s", m.avg_queue_s());
+        println!("  makespan        : {:.1} s", m.makespan());
+        println!("  mean node util  : {:.3}", m.mean_utilization());
+        println!(
+            "  lifecycle       : queue {q:.1}% | mps {mps:.1}% | ckpt {ckpt:.1}% | exec {exec:.1}% | idle {idle:.1}%"
+        );
+        println!("  digest          : {:#018x}", m.digest());
+        println!("  sim wall time   : {wall:.2} s");
+        if per_node {
+            println!("  node  jobs  avg JCT (s)  avg queue (s)   util");
+            for s in m.node_summaries() {
+                println!(
+                    "  {:>4}  {:>4}  {:>11.1}  {:>13.1}  {:>5.3}",
+                    s.node, s.jobs, s.avg_jct, s.avg_queue_s, s.utilization
+                );
+            }
+        }
+    }
     Ok(())
 }
 

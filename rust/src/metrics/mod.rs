@@ -129,6 +129,37 @@ impl RunMetrics {
     }
 }
 
+impl RunMetrics {
+    /// Order-sensitive FNV-1a fingerprint over the exact bit patterns of
+    /// every job record. Two runs are behaviourally identical iff their
+    /// digests match — the determinism oracle for the fleet layer's
+    /// cross-thread-count tests.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for r in &self.records {
+            h = fnv1a(h, r.id);
+            for v in [
+                r.arrival,
+                r.completion,
+                r.exclusive_s,
+                r.queue_s,
+                r.mig_exec_s,
+                r.mps_s,
+                r.checkpoint_s,
+                r.idle_s,
+            ] {
+                h = fnv1a(h, v.to_bits());
+            }
+        }
+        h
+    }
+}
+
+fn fnv1a(mut h: u64, v: u64) -> u64 {
+    h ^= v;
+    h.wrapping_mul(0x0000_0100_0000_01b3)
+}
+
 fn mean(it: impl Iterator<Item = f64>) -> f64 {
     let (mut sum, mut n) = (0.0, 0usize);
     for v in it {
@@ -136,6 +167,140 @@ fn mean(it: impl Iterator<Item = f64>) -> f64 {
         n += 1;
     }
     if n == 0 { 0.0 } else { sum / n as f64 }
+}
+
+/// Per-node roll-up inside a [`FleetMetrics`] report.
+#[derive(Debug, Clone)]
+pub struct NodeSummary {
+    pub node: usize,
+    /// Jobs routed to (and completed on) this node.
+    pub jobs: usize,
+    pub avg_jct: f64,
+    pub avg_queue_s: f64,
+    /// Time-averaged STP over the node's busy interval (Eq. 1).
+    pub avg_stp: f64,
+    /// `avg_stp` normalized by the node's GPU count ∈ [0, ~1+]: the
+    /// fraction of the node's exclusive-full-GPU capacity doing useful
+    /// work (can exceed 1 when co-location beats exclusive execution).
+    pub utilization: f64,
+}
+
+/// Fleet-level aggregation of per-node [`RunMetrics`]: cluster-wide
+/// avg/p99 JCT, queue-time breakdown, and per-node utilization — the
+/// figures of merit for multi-node routing policies ([`crate::fleet`]).
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// One `RunMetrics` per node, indexed by node id.
+    pub per_node: Vec<RunMetrics>,
+    pub gpus_per_node: usize,
+}
+
+impl FleetMetrics {
+    pub fn aggregate(per_node: Vec<RunMetrics>, gpus_per_node: usize) -> FleetMetrics {
+        FleetMetrics { per_node, gpus_per_node }
+    }
+
+    /// All job records across the fleet, node-major.
+    pub fn records(&self) -> impl Iterator<Item = &JobRecord> + '_ {
+        self.per_node.iter().flat_map(|m| m.records.iter())
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.per_node.iter().map(|m| m.records.len()).sum()
+    }
+
+    pub fn avg_jct(&self) -> f64 {
+        mean(self.records().map(JobRecord::jct))
+    }
+
+    /// 99th-percentile JCT across every job in the fleet (tail latency —
+    /// the metric node-level averages hide).
+    pub fn p99_jct(&self) -> f64 {
+        self.percentile_jct(0.99)
+    }
+
+    pub fn percentile_jct(&self, q: f64) -> f64 {
+        let mut v: Vec<f64> = self.records().map(JobRecord::jct).collect();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::percentile_sorted(&v, q)
+    }
+
+    pub fn avg_queue_s(&self) -> f64 {
+        mean(self.records().map(|r| r.queue_s))
+    }
+
+    /// First arrival to last completion across the whole fleet.
+    pub fn makespan(&self) -> f64 {
+        let mut start = f64::INFINITY;
+        let mut end = 0.0f64;
+        for r in self.records() {
+            start = start.min(r.arrival);
+            end = end.max(r.completion);
+        }
+        if start.is_finite() { end - start } else { 0.0 }
+    }
+
+    /// Fleet-wide lifecycle breakdown as percentages of mean JCT
+    /// (queue, mps, checkpoint, mig_exec, idle) — Fig. 12b at fleet scale.
+    pub fn breakdown_pct(&self) -> (f64, f64, f64, f64, f64) {
+        let (mut q, mut mp, mut c, mut e, mut i) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for r in self.records() {
+            q += r.queue_s;
+            mp += r.mps_s;
+            c += r.checkpoint_s;
+            e += r.mig_exec_s;
+            i += r.idle_s;
+        }
+        let total = q + mp + c + e + i;
+        if total == 0.0 {
+            return (0.0, 0.0, 0.0, 0.0, 0.0);
+        }
+        let f = 100.0 / total;
+        (q * f, mp * f, c * f, e * f, i * f)
+    }
+
+    /// Mean per-node utilization (each node's time-averaged STP over its
+    /// GPU count; empty nodes count as 0).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.per_node.is_empty() {
+            return 0.0;
+        }
+        let g = self.gpus_per_node.max(1) as f64;
+        self.per_node.iter().map(|m| m.avg_stp() / g).sum::<f64>() / self.per_node.len() as f64
+    }
+
+    /// Per-node roll-ups, indexed by node id.
+    pub fn node_summaries(&self) -> Vec<NodeSummary> {
+        let g = self.gpus_per_node.max(1) as f64;
+        self.per_node
+            .iter()
+            .enumerate()
+            .map(|(node, m)| NodeSummary {
+                node,
+                jobs: m.records.len(),
+                avg_jct: m.avg_jct(),
+                avg_queue_s: mean(m.records.iter().map(|r| r.queue_s)),
+                avg_stp: m.avg_stp(),
+                utilization: m.avg_stp() / g,
+            })
+            .collect()
+    }
+
+    /// Fleet-wide determinism fingerprint: folds every node's
+    /// [`RunMetrics::digest`] keyed by node id. Identical across two runs
+    /// iff every job landed on the same node with bit-identical lifecycle
+    /// accounting.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for (i, m) in self.per_node.iter().enumerate() {
+            h = fnv1a(h, i as u64);
+            h = fnv1a(h, m.digest());
+        }
+        h
+    }
 }
 
 /// Builder used by the simulator: accumulates per-job stage times and STP
@@ -241,6 +406,48 @@ mod tests {
         };
         let (q, mp, c, e, i) = m.breakdown_pct();
         assert!((q + mp + c + e + i - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_aggregation_and_digest() {
+        let node0 = RunMetrics {
+            records: vec![rec(0.0, 100.0, 50.0, 10.0), rec(5.0, 205.0, 50.0, 0.0)],
+            stp_samples: vec![(0.0, 1.0), (10.0, 1.0)],
+        };
+        let node1 = RunMetrics {
+            records: vec![rec(2.0, 52.0, 25.0, 0.0)],
+            stp_samples: vec![(0.0, 2.0), (10.0, 2.0)],
+        };
+        let f = FleetMetrics::aggregate(vec![node0.clone(), node1.clone()], 4);
+        assert_eq!(f.total_jobs(), 3);
+        assert!((f.avg_jct() - (100.0 + 200.0 + 50.0) / 3.0).abs() < 1e-9);
+        assert!((f.avg_queue_s() - 10.0 / 3.0).abs() < 1e-9);
+        assert_eq!(f.makespan(), 205.0);
+        let (q, mp, c, e, i) = f.breakdown_pct();
+        assert!((q + mp + c + e + i - 100.0).abs() < 1e-9);
+        // p99 sits between the largest and second-largest JCT.
+        assert!(f.p99_jct() > 100.0 && f.p99_jct() <= 200.0);
+
+        let sums = f.node_summaries();
+        assert_eq!(sums.len(), 2);
+        assert_eq!(sums[0].jobs, 2);
+        assert!((sums[1].utilization - 2.0 / 4.0).abs() < 1e-9);
+
+        // Digest: stable across identical inputs, sensitive to node order.
+        let same = FleetMetrics::aggregate(vec![node0.clone(), node1.clone()], 4);
+        assert_eq!(f.digest(), same.digest());
+        let swapped = FleetMetrics::aggregate(vec![node1, node0], 4);
+        assert_ne!(f.digest(), swapped.digest());
+    }
+
+    #[test]
+    fn empty_fleet_is_safe() {
+        let f = FleetMetrics::aggregate(vec![], 8);
+        assert_eq!(f.total_jobs(), 0);
+        assert_eq!(f.avg_jct(), 0.0);
+        assert_eq!(f.p99_jct(), 0.0);
+        assert_eq!(f.makespan(), 0.0);
+        assert_eq!(f.mean_utilization(), 0.0);
     }
 
     #[test]

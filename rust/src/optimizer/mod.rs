@@ -113,7 +113,7 @@ fn best_assignment(tables: &[SpeedupTable], cfg: &MigConfig) -> Option<(Vec<usiz
     // slice set `mask`; parent pointers reconstruct the assignment.
     // Stack-allocated (m ≤ 7 ⇒ ≤ 128 states): this routine runs inside the
     // scheduler's hot loop and heap churn dominated the profile before
-    // (EXPERIMENTS.md §Perf).
+    // (DESIGN.md §Perf).
     let mut kinds = [SliceKind::G1; 7];
     for (k, p) in kinds.iter_mut().zip(&cfg.slices) {
         *k = p.kind;

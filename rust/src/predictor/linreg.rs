@@ -2,7 +2,7 @@
 //! Sec. 4.1 "Memory considerations": the other slices predict 2g/1g with
 //! R² ≈ 0.96 on the authors' A100 measurements).
 //!
-//! **Substrate deviation** (documented in DESIGN.md + EXPERIMENTS.md): on
+//! **Substrate deviation** (documented in DESIGN.md §Substitutions): on
 //! our analytic hardware model the linear head reaches R² ≈ 0.73 (k2 ≈
 //! 0.81, k1 ≈ 0.70), not the paper's 0.96: the substrate's harmonic-mean
 //! speed curves have mix-ratio-dependent curvature between the 4/8-cache

@@ -32,8 +32,12 @@ use crate::workload::{Job, WorkloadSpec};
 
 /// Estimates per-job MIG speedup tables for a co-located mix.
 ///
-/// Not `Send`: the PJRT client underneath [`UNetPredictor`] is
-/// single-threaded (`Rc`-based); each server thread owns its own predictor.
+/// Consumers that cross threads (the fleet layer's per-node policies)
+/// require `dyn Predictor + Send`, which every in-tree predictor
+/// satisfies — including [`UNetPredictor`]: the PJRT client underneath it
+/// is single-threaded (`Rc`-based), so compiled executables live in
+/// thread-local caches and the predictor itself carries only plain state
+/// (see [`crate::runtime`]).
 pub trait Predictor {
     fn name(&self) -> &'static str;
 

@@ -7,6 +7,14 @@
 //! reassigns ids). This module loads that text, compiles it once on the
 //! PJRT CPU client, and executes it with `f32` buffers. Python is never on
 //! the request path.
+//!
+//! The XLA bindings are gated behind the `pjrt` cargo feature because the
+//! offline build environment ships no `xla` crate (DESIGN.md
+//! §Substitutions). Without the feature this module compiles a stub whose
+//! [`HloExecutable::load`] fails with an explanatory error, so every
+//! artifact-dependent path (the U-Net predictor, `tests/runtime_hlo.rs`)
+//! degrades to a clean "skipped: no artifacts/runtime" instead of a broken
+//! build.
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -19,67 +27,134 @@ pub fn artifacts_dir() -> PathBuf {
 }
 
 /// A compiled HLO module ready for repeated execution.
+///
+/// Holds only the artifact path: the xla crate's client and executables
+/// are `Rc`-based (single-threaded), so each thread compiles and caches
+/// its own copy on first use ([`pjrt_cache::with_compiled`]). That keeps
+/// `HloExecutable` (and everything built on it, e.g. the U-Net predictor
+/// inside a fleet node's `Send` policy) freely movable across threads.
+#[cfg(feature = "pjrt")]
 pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
     path: PathBuf,
 }
 
-// The xla crate's client is `Rc`-based (single-threaded); keep one per
-// thread. Compilation caches inside the client, executions share it.
-fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
-    thread_local! {
-        static CLIENT: std::cell::OnceCell<xla::PjRtClient> =
-            const { std::cell::OnceCell::new() };
-    }
-    CLIENT.with(|cell| {
-        if cell.get().is_none() {
-            let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-            let _ = cell.set(c);
+#[cfg(feature = "pjrt")]
+mod pjrt_cache {
+    use super::*;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    // One PJRT CPU client per thread; compilation caches inside the client.
+    fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+        thread_local! {
+            static CLIENT: std::cell::OnceCell<xla::PjRtClient> =
+                const { std::cell::OnceCell::new() };
         }
-        f(cell.get().unwrap())
-    })
+        CLIENT.with(|cell| {
+            if cell.get().is_none() {
+                let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+                let _ = cell.set(c);
+            }
+            f(cell.get().unwrap())
+        })
+    }
+
+    /// Run `f` with the thread-local compiled executable for `path`,
+    /// parsing + compiling it on this thread the first time.
+    pub fn with_compiled<T>(
+        path: &Path,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+    ) -> Result<T> {
+        thread_local! {
+            static CACHE: RefCell<HashMap<PathBuf, xla::PjRtLoadedExecutable>> =
+                RefCell::new(HashMap::new());
+        }
+        CACHE.with(|cache| {
+            let mut cache = cache.borrow_mut();
+            if !cache.contains_key(path) {
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = with_client(|c| {
+                    c.compile(&comp)
+                        .with_context(|| format!("compiling {}", path.display()))
+                })?;
+                cache.insert(path.to_path_buf(), exe);
+            }
+            f(&cache[path])
+        })
+    }
 }
 
+#[cfg(feature = "pjrt")]
 impl HloExecutable {
-    /// Load HLO text from `path` and compile it.
+    /// Load HLO text from `path` and compile it (on the calling thread —
+    /// parse/compile errors surface here; other threads recompile lazily).
     pub fn load(path: impl AsRef<Path>) -> Result<HloExecutable> {
         let path = path.as_ref().to_path_buf();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|c| {
-            c.compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        })?;
-        Ok(HloExecutable { exe, path })
+        pjrt_cache::with_compiled(&path, |_| Ok(()))?;
+        Ok(HloExecutable { path })
     }
 
     /// Execute with f32 tensor inputs `(data, shape)`; returns the flattened
     /// f32 elements of each tuple output. The JAX lowering uses
     /// `return_tuple=True`, so the single on-device result is a tuple.
     pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                let lit = xla::Literal::vec1(data);
-                lit.reshape(shape)
-                    .with_context(|| format!("reshaping input to {shape:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.decompose_tuple()?;
-        tuple
-            .into_iter()
-            .map(|lit| {
-                // Outputs may be f32 or (rarely) f64 depending on lowering;
-                // convert to f32 vectors.
-                lit.to_vec::<f32>().context("reading f32 output")
-            })
-            .collect()
+        pjrt_cache::with_compiled(&self.path, |exe| {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    let lit = xla::Literal::vec1(data);
+                    lit.reshape(shape)
+                        .with_context(|| format!("reshaping input to {shape:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let mut result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+                .to_literal_sync()?;
+            let tuple = result.decompose_tuple()?;
+            tuple
+                .into_iter()
+                .map(|lit| {
+                    // Outputs may be f32 or (rarely) f64 depending on
+                    // lowering; convert to f32 vectors.
+                    lit.to_vec::<f32>().context("reading f32 output")
+                })
+                .collect()
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Stub compiled-HLO handle: same API surface as the PJRT-backed version,
+/// but loading always fails (see the module docs).
+#[cfg(not(feature = "pjrt"))]
+pub struct HloExecutable {
+    path: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl HloExecutable {
+    /// Always fails: the PJRT/XLA runtime is compiled out.
+    pub fn load(path: impl AsRef<Path>) -> Result<HloExecutable> {
+        anyhow::bail!(
+            "cannot load {}: built without the `pjrt` feature (the XLA \
+             runtime is unavailable in this build; see DESIGN.md \
+             §Substitutions)",
+            path.as_ref().display()
+        )
+    }
+
+    /// Unreachable in practice — no stub `HloExecutable` can be constructed.
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!(
+            "cannot execute {}: built without the `pjrt` feature",
+            self.path.display()
+        )
     }
 
     pub fn path(&self) -> &Path {

@@ -27,7 +27,12 @@ pub enum ProfilingMode {
 }
 
 pub struct MisoPolicy {
-    predictor: Box<dyn Predictor>,
+    /// `Send` so fleet nodes can step their policies on worker threads.
+    /// Every in-tree predictor satisfies it: the simulation predictors are
+    /// plain state, and the PJRT-backed U-Net holds only an artifact path
+    /// (compiled executables live in thread-local caches — see
+    /// `crate::runtime`).
+    predictor: Box<dyn Predictor + Send>,
     mode: ProfilingMode,
     /// Masked speedup tables for jobs whose profile is known.
     tables: HashMap<JobId, SpeedupTable>,
@@ -45,7 +50,7 @@ pub struct MisoPolicy {
 }
 
 impl MisoPolicy {
-    pub fn new(predictor: Box<dyn Predictor>, mode: ProfilingMode) -> MisoPolicy {
+    pub fn new(predictor: Box<dyn Predictor + Send>, mode: ProfilingMode) -> MisoPolicy {
         MisoPolicy {
             predictor,
             mode,

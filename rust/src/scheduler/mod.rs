@@ -11,6 +11,11 @@
 //!   ablation of Fig. 12 via [`ProfilingMode`].
 //! * [`MpsOnlyPolicy`] — the Fig. 15 baseline: up to 3 jobs per GPU under
 //!   equal-share MPS, no MIG.
+//!
+//! [`build_policy`] + [`node_seed`] construct per-node policy instances for
+//! the fleet layer ([`crate::fleet`]): every node gets its own policy,
+//! seeded deterministically from one shared fleet seed, and `Send` so node
+//! stepping can fan out across OS threads.
 
 mod miso;
 mod mpsonly;
@@ -21,3 +26,60 @@ pub use miso::{MisoPolicy, ProfilingMode};
 pub use mpsonly::MpsOnlyPolicy;
 pub use nopart::NoPartPolicy;
 pub use optsta::{find_best_static, OptStaPolicy};
+
+use crate::sim::Policy;
+
+/// Deterministically derive node `i`'s policy seed from the shared fleet
+/// seed (splitmix64 finalizer — avalanches even for consecutive node ids).
+pub fn node_seed(fleet_seed: u64, node: usize) -> u64 {
+    let mut z = fleet_seed
+        .wrapping_add(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Build one owned, `Send` policy instance by name — the per-node policy
+/// factory of the fleet layer. Policies needing offline search (`optsta`)
+/// or on-disk artifacts (`miso-unet`) are not constructible here; the
+/// single-node `simulate` path covers those.
+pub fn build_policy(name: &str, seed: u64) -> anyhow::Result<Box<dyn Policy + Send>> {
+    Ok(match name {
+        "miso" => Box::new(MisoPolicy::paper(seed)),
+        "oracle" => Box::new(MisoPolicy::oracle()),
+        "miso-migprof" => Box::new(MisoPolicy::new(
+            Box::new(crate::predictor::OraclePredictor),
+            ProfilingMode::MigSequential,
+        )),
+        "nopart" => Box::new(NoPartPolicy::new()),
+        "mps-only" => Box::new(MpsOnlyPolicy::new()),
+        other => anyhow::bail!(
+            "unknown fleet policy '{other}' (miso | oracle | miso-migprof | nopart | mps-only)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_seeds_distinct_and_deterministic() {
+        let seeds: Vec<u64> = (0..64).map(|i| node_seed(42, i)).collect();
+        let again: Vec<u64> = (0..64).map(|i| node_seed(42, i)).collect();
+        assert_eq!(seeds, again);
+        let unique: std::collections::HashSet<_> = seeds.iter().collect();
+        assert_eq!(unique.len(), seeds.len(), "per-node seeds must not collide");
+        assert_ne!(node_seed(1, 0), node_seed(2, 0), "fleet seed must matter");
+    }
+
+    #[test]
+    fn build_policy_covers_fleet_names() {
+        for name in ["miso", "oracle", "miso-migprof", "nopart", "mps-only"] {
+            assert!(build_policy(name, 7).is_ok(), "{name}");
+        }
+        assert!(build_policy("optsta", 7).is_err());
+        assert!(build_policy("bogus", 7).is_err());
+    }
+}

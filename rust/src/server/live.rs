@@ -6,10 +6,11 @@
 //! Protocol (one request per line, one JSON reply per line):
 //!
 //! ```text
-//! SUBMIT <family> <batch_index 0..3> <exclusive_seconds>   -> {"ok":true,"job":<id>}
+//! SUBMIT <family> <batch_index 0..3> <exclusive_seconds>   -> {"ok":true,"job":<id>,"node":<n>}
 //! STATUS                                                   -> cluster snapshot
 //! JOBS                                                     -> per-job states
 //! METRICS                                                  -> aggregate metrics so far
+//! FLEET                                                    -> per-node snapshots
 //! QUIT                                                     -> closes the connection
 //! ```
 //!
@@ -17,9 +18,16 @@
 //! substrates) update job completion / partition state centrally; the
 //! controller decides placement; the MISO policy drives MPS profiling and
 //! MIG repartitioning. Python is nowhere in this path.
+//!
+//! With [`serve_fleet`]/[`start_fleet`] the same protocol fronts a whole
+//! [`crate::fleet::FleetEngine`]: SUBMIT routes the job through the
+//! configured fleet router, and FLEET exposes every node's snapshot (a
+//! single-node server answers FLEET with a one-element list, so gateway
+//! clients need no mode detection).
 
+use crate::fleet::{make_router, FleetConfig, FleetEngine, Router};
 use crate::scheduler::MisoPolicy;
-use crate::sim::{Engine, JobState, Policy};
+use crate::sim::{Engine, GpuSim, JobState, Policy};
 use crate::util::json::Value;
 use crate::workload::{Job, ModelFamily, WorkloadSpec};
 use crate::SystemConfig;
@@ -37,6 +45,7 @@ enum Request {
     Status { reply: Sender<String> },
     Jobs { reply: Sender<String> },
     Metrics { reply: Sender<String> },
+    Fleet { reply: Sender<String> },
 }
 
 /// Handle to a running live server (used by tests and `examples/live_serve`).
@@ -91,34 +100,98 @@ pub fn start(port: u16, gpus: usize, time_scale: f64) -> Result<LiveServer> {
     // --- listener thread: accepts connections, one handler thread each ---
     let stop_l = stop.clone();
     let listener_handle = std::thread::spawn(move || {
-        while !stop_l.load(Ordering::SeqCst) {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    let tx = tx.clone();
-                    std::thread::spawn(move || {
-                        let _ = handle_connection(stream, tx);
-                    });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(10));
-                }
-                Err(_) => break,
-            }
-        }
+        accept_loop(listener, tx, stop_l);
     });
 
     Ok(LiveServer { addr, stop, controller: Some(controller), listener: Some(listener_handle) })
 }
 
-/// Blocking entrypoint for `repro serve`.
+/// Accept connections until shutdown, one handler thread per connection
+/// (shared by the single-node and fleet gateways).
+fn accept_loop(listener: TcpListener, tx: Sender<Request>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, tx);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Start a fleet gateway on `port` (0 = ephemeral): `nodes` simulated
+/// MISO nodes of `gpus_per_node` A100s each, SUBMITs placed by the named
+/// fleet router, all advancing at `time_scale` × wall-clock.
+pub fn start_fleet(
+    port: u16,
+    nodes: usize,
+    gpus_per_node: usize,
+    time_scale: f64,
+    router: &str,
+) -> Result<LiveServer> {
+    anyhow::ensure!(nodes > 0, "need at least one node");
+    anyhow::ensure!(gpus_per_node > 0, "need at least one GPU per node");
+    anyhow::ensure!(time_scale > 0.0, "time scale must be positive");
+    make_router(router)?; // validate the name before spawning threads
+    let listener = TcpListener::bind(("127.0.0.1", port)).context("binding TCP listener")?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Request>();
+
+    let stop_c = stop.clone();
+    let router = router.to_string();
+    let controller = std::thread::spawn(move || {
+        controller_loop_fleet(rx, stop_c, nodes, gpus_per_node, time_scale, router);
+    });
+
+    let stop_l = stop.clone();
+    let listener_handle = std::thread::spawn(move || {
+        accept_loop(listener, tx, stop_l);
+    });
+
+    Ok(LiveServer { addr, stop, controller: Some(controller), listener: Some(listener_handle) })
+}
+
+/// Blocking entrypoint for `miso serve`.
 pub fn serve(port: u16, gpus: usize, time_scale: f64) -> Result<()> {
     let server = start(port, gpus, time_scale)?;
     println!(
         "MISO live controller on {} — {gpus} simulated A100s, virtual time ×{time_scale}",
         server.addr()
     );
-    println!("protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | QUIT");
+    println!(
+        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | QUIT"
+    );
     // Block until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// Blocking entrypoint for `miso serve --nodes N` (N > 1).
+pub fn serve_fleet(
+    port: u16,
+    nodes: usize,
+    gpus_per_node: usize,
+    time_scale: f64,
+    router: &str,
+) -> Result<()> {
+    let server = start_fleet(port, nodes, gpus_per_node, time_scale, router)?;
+    println!(
+        "MISO fleet gateway on {} — {nodes} nodes × {gpus_per_node} A100s, router {router}, virtual time ×{time_scale}",
+        server.addr()
+    );
+    println!(
+        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | QUIT"
+    );
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
@@ -148,9 +221,15 @@ fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, ti
                     let id = job.id;
                     next_id += 1;
                     engine.submit(&mut policy, job);
+                    // "node" is always present so gateway clients need no
+                    // single-node vs fleet mode detection.
                     let _ = reply.send(
-                        Value::obj([("ok", Value::Bool(true)), ("job", Value::num(id.0 as f64))])
-                            .to_string(),
+                        Value::obj([
+                            ("ok", Value::Bool(true)),
+                            ("job", Value::num(id.0 as f64)),
+                            ("node", Value::num(0.0)),
+                        ])
+                        .to_string(),
                     );
                 }
                 Request::Status { reply } => {
@@ -162,37 +241,179 @@ fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, ti
                 Request::Metrics { reply } => {
                     let _ = reply.send(metrics_json(&engine).to_string());
                 }
+                Request::Fleet { reply } => {
+                    // Uniform gateway protocol: a single node answers FLEET
+                    // with a one-element node list.
+                    let nodes = Value::arr(vec![node_json(0, &engine)]);
+                    let _ = reply.send(Value::obj([("nodes", nodes)]).to_string());
+                }
             }
         }
         std::thread::sleep(Duration::from_millis(5));
     }
 }
 
+/// Fleet-gateway controller: owns a [`FleetEngine`] + router; every node
+/// advances to the same scaled wall-clock instant before requests are
+/// served, and SUBMIT places jobs through the router.
+fn controller_loop_fleet(
+    rx: Receiver<Request>,
+    stop: Arc<AtomicBool>,
+    nodes: usize,
+    gpus_per_node: usize,
+    time_scale: f64,
+    router_name: String,
+) {
+    let cfg = FleetConfig {
+        nodes,
+        gpus_per_node,
+        // Live mode advances in small wall-clock ticks; thread fan-out per
+        // tick would cost more than it saves.
+        threads: 1,
+        node_cfg: crate::SystemConfig::testbed(),
+    };
+    let mut fleet = FleetEngine::new(&cfg, "miso", 0x11FE).expect("fleet construction");
+    let mut router: Box<dyn Router> = make_router(&router_name).expect("router construction");
+    let mut next_id: u64 = 0;
+    let started = Instant::now();
+
+    while !stop.load(Ordering::SeqCst) {
+        let target = started.elapsed().as_secs_f64() * time_scale;
+        if target > fleet.now() {
+            fleet.advance_all_to(target);
+        }
+
+        while let Ok(req) = rx.try_recv() {
+            match req {
+                Request::Submit { family, batch, work_s, reply } => {
+                    let spec = WorkloadSpec::new(family, batch.min(3), (0.0, 0.0));
+                    let job = Job::new(next_id, spec, fleet.now(), work_s.max(1.0));
+                    let id = job.id;
+                    next_id += 1;
+                    let node = fleet.route_and_submit(router.as_mut(), job);
+                    let _ = reply.send(
+                        Value::obj([
+                            ("ok", Value::Bool(true)),
+                            ("job", Value::num(id.0 as f64)),
+                            ("node", Value::num(node as f64)),
+                        ])
+                        .to_string(),
+                    );
+                }
+                Request::Status { reply } => {
+                    let _ = reply.send(fleet_status_json(&fleet, &router_name).to_string());
+                }
+                Request::Jobs { reply } => {
+                    let all: Vec<Value> = fleet
+                        .nodes
+                        .iter()
+                        .flat_map(|n| match jobs_json(&n.engine) {
+                            Value::Arr(v) => v,
+                            _ => vec![],
+                        })
+                        .collect();
+                    let _ = reply.send(Value::arr(all).to_string());
+                }
+                Request::Metrics { reply } => {
+                    let completed: usize = fleet
+                        .nodes
+                        .iter()
+                        .map(|n| {
+                            n.engine
+                                .st
+                                .jobs
+                                .values()
+                                .filter(|j| matches!(j.state, JobState::Done))
+                                .count()
+                        })
+                        .sum();
+                    let stp: f64 = fleet.nodes.iter().map(|n| n.engine.st.instant_stp()).sum();
+                    let _ = reply.send(
+                        Value::obj([
+                            ("now_s", Value::num(fleet.now())),
+                            ("completed", Value::num(completed as f64)),
+                            ("live", Value::num(fleet.live_jobs() as f64)),
+                            ("instant_stp", Value::num(stp)),
+                        ])
+                        .to_string(),
+                    );
+                }
+                Request::Fleet { reply } => {
+                    let nodes: Vec<Value> = fleet
+                        .nodes
+                        .iter()
+                        .map(|n| node_json(n.id, &n.engine))
+                        .collect();
+                    let _ = reply.send(Value::obj([("nodes", Value::arr(nodes))]).to_string());
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn gpu_json(g: &GpuSim) -> Value {
+    let (mode, partition) = match &g.gpu.mode {
+        crate::gpu::GpuMode::Mig { config, .. } => ("mig", format!("{config}")),
+        crate::gpu::GpuMode::Mps { .. } => ("mps", "7g.40gb+MPS".to_string()),
+    };
+    Value::obj([
+        ("id", Value::num(g.gpu.id as f64)),
+        ("mode", Value::str(mode)),
+        ("partition", Value::str(partition)),
+        ("jobs", Value::num(g.gpu.job_count() as f64)),
+        ("busy", Value::Bool(g.busy)),
+    ])
+}
+
 fn status_json(engine: &Engine) -> Value {
-    let gpus: Vec<Value> = engine
-        .st
-        .gpus
-        .iter()
-        .map(|g| {
-            let (mode, partition) = match &g.gpu.mode {
-                crate::gpu::GpuMode::Mig { config, .. } => ("mig", format!("{config}")),
-                crate::gpu::GpuMode::Mps { .. } => ("mps", "7g.40gb+MPS".to_string()),
-            };
-            Value::obj([
-                ("id", Value::num(g.gpu.id as f64)),
-                ("mode", Value::str(mode)),
-                ("partition", Value::str(partition)),
-                ("jobs", Value::num(g.gpu.job_count() as f64)),
-                ("busy", Value::Bool(g.busy)),
-            ])
-        })
-        .collect();
+    let gpus: Vec<Value> = engine.st.gpus.iter().map(gpu_json).collect();
     Value::obj([
         ("now_s", Value::num(engine.st.now)),
         ("queued", Value::num(engine.st.queue.len() as f64)),
         ("live_jobs", Value::num(engine.live_jobs() as f64)),
         ("instant_stp", Value::num(engine.st.instant_stp())),
         ("gpus", Value::arr(gpus)),
+    ])
+}
+
+/// One fleet node's snapshot (the per-node element of a FLEET reply).
+fn node_json(node: usize, engine: &Engine) -> Value {
+    let gpus: Vec<Value> = engine.st.gpus.iter().map(gpu_json).collect();
+    Value::obj([
+        ("node", Value::num(node as f64)),
+        ("now_s", Value::num(engine.st.now)),
+        ("queued", Value::num(engine.st.queue.len() as f64)),
+        ("live_jobs", Value::num(engine.live_jobs() as f64)),
+        ("instant_stp", Value::num(engine.st.instant_stp())),
+        ("gpus", Value::arr(gpus)),
+    ])
+}
+
+/// Fleet-wide STATUS: aggregate counters plus per-node load digests.
+fn fleet_status_json(fleet: &FleetEngine, router: &str) -> Value {
+    let stp: f64 = fleet.nodes.iter().map(|n| n.engine.st.instant_stp()).sum();
+    let queued: usize = fleet.nodes.iter().map(|n| n.engine.st.queue.len()).sum();
+    let loads: Vec<Value> = fleet
+        .views()
+        .iter()
+        .map(|v| {
+            Value::obj([
+                ("node", Value::num(v.node as f64)),
+                ("live_jobs", Value::num(v.live_jobs as f64)),
+                ("empty_gpus", Value::num(v.empty_gpus as f64)),
+                ("partial_gpus", Value::num(v.partial_gpus as f64)),
+            ])
+        })
+        .collect();
+    Value::obj([
+        ("now_s", Value::num(fleet.now())),
+        ("nodes", Value::num(fleet.num_nodes() as f64)),
+        ("router", Value::str(router)),
+        ("queued", Value::num(queued as f64)),
+        ("live_jobs", Value::num(fleet.live_jobs() as f64)),
+        ("instant_stp", Value::num(stp)),
+        ("node_loads", Value::arr(loads)),
     ])
 }
 
@@ -264,6 +485,7 @@ fn handle_connection(stream: TcpStream, tx: Sender<Request>) -> Result<()> {
             ["STATUS"] => request(&tx, |reply| Request::Status { reply }),
             ["JOBS"] => request(&tx, |reply| Request::Jobs { reply }),
             ["METRICS"] => request(&tx, |reply| Request::Metrics { reply }),
+            ["FLEET"] => request(&tx, |reply| Request::Fleet { reply }),
             ["QUIT"] => return Ok(()),
             [] => continue,
             _ => Some(err_json("unknown command")),
@@ -357,6 +579,60 @@ mod tests {
         assert!(resp[0].contains("unknown model"));
         assert!(resp[1].contains("unknown command"));
         server.shutdown();
+    }
+
+    #[test]
+    fn single_node_fleet_command_lists_one_node() {
+        let server = start(0, 2, 60.0).unwrap();
+        let resp = send_line(server.addr(), &["FLEET"]);
+        let v = crate::util::json::parse(&resp[0]).unwrap();
+        let nodes = v.req_arr("nodes").unwrap();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].req_f64("node").unwrap(), 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn fleet_gateway_routes_and_reports_nodes() {
+        let server = start_fleet(0, 3, 1, 240.0, "round-robin").unwrap();
+        let addr = server.addr();
+
+        // Three submissions round-robin across the three nodes.
+        let resp = send_line(
+            addr,
+            &["SUBMIT ResNet50 0 30", "SUBMIT ResNet50 0 30", "SUBMIT ResNet50 0 30", "FLEET"],
+        );
+        let mut nodes_hit = Vec::new();
+        for r in &resp[..3] {
+            let v = crate::util::json::parse(r).unwrap();
+            assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+            nodes_hit.push(v.req_f64("node").unwrap() as usize);
+        }
+        nodes_hit.sort_unstable();
+        assert_eq!(nodes_hit, vec![0, 1, 2]);
+        let fleet = crate::util::json::parse(&resp[3]).unwrap();
+        assert_eq!(fleet.req_arr("nodes").unwrap().len(), 3);
+
+        // STATUS aggregates; all jobs eventually complete.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let resp = send_line(addr, &["METRICS"]);
+            let m = crate::util::json::parse(&resp[0]).unwrap();
+            if m.req_f64("live").unwrap() == 0.0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "fleet jobs never completed: {m}");
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        let resp = send_line(addr, &["STATUS"]);
+        let s = crate::util::json::parse(&resp[0]).unwrap();
+        assert_eq!(s.req_f64("nodes").unwrap(), 3.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn fleet_gateway_rejects_bad_router() {
+        assert!(start_fleet(0, 2, 1, 60.0, "no-such-router").is_err());
     }
 
     #[test]

@@ -5,4 +5,4 @@
 
 mod live;
 
-pub use live::{serve, start, LiveServer};
+pub use live::{serve, serve_fleet, start, start_fleet, LiveServer};

@@ -120,7 +120,7 @@ pub struct ClusterState {
     pub measure_rng: Option<Rng>,
     timers: Vec<Timer>,
     /// Jobs not yet Done — the event loop's iteration set (Done jobs
-    /// would otherwise dominate the per-event scans; EXPERIMENTS.md §Perf).
+    /// would otherwise dominate the per-event scans; DESIGN.md §Perf).
     active: Vec<JobId>,
 }
 
@@ -167,7 +167,7 @@ impl ClusterState {
     /// Feasibility-only, so it uses the exact sorted-dominance check
     /// ([`crate::mig::mix_feasible`]) instead of the Algorithm-1 DP — this
     /// is the controller's hottest path (every queued job × every GPU on
-    /// every drain; see EXPERIMENTS.md §Perf).
+    /// every drain; see DESIGN.md §Perf).
     pub fn can_host_all(&self, gpu: usize, jobs: &[&Job]) -> bool {
         let g = &self.gpus[gpu];
         if g.busy || g.gpu.job_count() + jobs.len() > 7 {
@@ -709,6 +709,25 @@ impl Engine {
         }
     }
 
+    /// Fire internal events until no live jobs remain. This is the
+    /// no-more-arrivals tail of a run, factored out so external clocks —
+    /// [`run`], the live server, and the fleet layer's per-node drain
+    /// ([`crate::fleet`]) — compose `submit`/`advance_to`/`run_until_idle`
+    /// without reimplementing the stall guard.
+    pub fn run_until_idle(&mut self, policy: &mut dyn Policy) {
+        while self.live > 0 {
+            let Some(t) = self.next_event() else {
+                // Deadlock guard: live jobs but no progress and no events.
+                panic!(
+                    "simulation stalled at t={} with {} live jobs (policy bug?)",
+                    self.st.now,
+                    self.live
+                );
+            };
+            self.advance_to(policy, t);
+        }
+    }
+
     /// Consume the engine, returning the collected metrics.
     pub fn finish(self) -> RunMetrics {
         self.st.metrics.finish()
@@ -716,44 +735,29 @@ impl Engine {
 }
 
 /// Run a policy over a job trace; returns the collected metrics.
+///
+/// Composed entirely from the engine's external-clock seam
+/// (`advance_to` + `submit` + `run_until_idle`) — the fleet layer drives
+/// many engines through the same seam in lock-step.
 pub fn run(policy: &mut dyn Policy, trace: &[Job], cfg: SystemConfig) -> RunMetrics {
     let mut eng = Engine::new(cfg);
     policy.init(&mut eng.st);
 
     let mut arrivals: Vec<Job> = trace.to_vec();
     arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+
     let mut next_arrival = 0usize;
-
-    loop {
-        // --- next event time: internal events vs the next arrival ---
-        let mut t_next = f64::INFINITY;
-        if next_arrival < arrivals.len() {
-            t_next = t_next.min(arrivals[next_arrival].arrival);
-        }
-        if let Some(t) = eng.next_event() {
-            t_next = t_next.min(t);
-        }
-        if t_next.is_infinite() {
-            if next_arrival >= arrivals.len() && eng.live_jobs() == 0 {
-                break; // all done
-            }
-            // Deadlock guard: live jobs but no progress and no events.
-            panic!(
-                "simulation stalled at t={} with {} live jobs (policy bug?)",
-                eng.st.now,
-                eng.live_jobs()
-            );
-        }
-
-        eng.advance_to(policy, t_next);
-
-        // --- arrivals due at this instant ---
+    while next_arrival < arrivals.len() {
+        // `advance_to` fires every internal event on the way to the next
+        // arrival instant, in order.
+        eng.advance_to(policy, arrivals[next_arrival].arrival);
         while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= eng.st.now + EPS {
             let job = arrivals[next_arrival].clone();
             next_arrival += 1;
             eng.submit(policy, job);
         }
     }
+    eng.run_until_idle(policy);
 
     eng.finish()
 }

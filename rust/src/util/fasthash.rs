@@ -1,6 +1,6 @@
 //! A fast, non-DoS-resistant hasher for the simulator's internal maps
 //! (FxHash-style multiply-xor). SipHash dominated the scheduler profile
-//! (~22% in `hash_one`/`write`, EXPERIMENTS.md §Perf); keys here are
+//! (~22% in `hash_one`/`write`, DESIGN.md §Perf); keys here are
 //! trusted in-process ids, so the DoS protection buys nothing.
 
 use std::hash::{BuildHasherDefault, Hasher};

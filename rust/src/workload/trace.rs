@@ -27,6 +27,11 @@ pub struct TraceConfig {
     /// Probability that a submission is a multi-instance group of 2–4
     /// identical jobs (Sec. 4.3). 0 by default.
     pub multi_instance_prob: f64,
+    /// Slice-size skew for fleet placement studies: the probability that a
+    /// job is a whole-GPU tenant (QoS floor of 7 GPCs); the remaining jobs
+    /// are resampled toward slice-sized footprints (≤ 1g.5gb). 0 by
+    /// default — paper traces carry no explicit size classes.
+    pub size_skew: f64,
 }
 
 impl Default for TraceConfig {
@@ -39,6 +44,7 @@ impl Default for TraceConfig {
             seed: 0,
             phase_change_prob: 0.0,
             multi_instance_prob: 0.0,
+            size_skew: 0.0,
         }
     }
 }
@@ -52,6 +58,25 @@ impl TraceConfig {
     /// The paper's simulator trace: 1000 jobs, λ = 10 s.
     pub fn cluster(seed: u64) -> TraceConfig {
         TraceConfig { num_jobs: 1000, mean_interarrival_s: 10.0, seed, ..Default::default() }
+    }
+
+    /// Fleet-scale trace: arrival rate scaled by node count so per-node
+    /// offered load stays in the testbed regime (assumes testbed-sized
+    /// 8-GPU nodes; rescale `mean_interarrival_s` for other shapes).
+    pub fn fleet(nodes: usize, num_jobs: usize, seed: u64) -> TraceConfig {
+        TraceConfig {
+            num_jobs,
+            mean_interarrival_s: 60.0 / nodes.max(1) as f64,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Skewed fleet mix for placement studies: ~15% whole-GPU tenants,
+    /// the rest slice-sized — the regime where routing quality (not raw
+    /// capacity) separates fleet placement policies.
+    pub fn fleet_skewed(nodes: usize, num_jobs: usize, seed: u64) -> TraceConfig {
+        TraceConfig { size_skew: 0.15, ..Self::fleet(nodes, num_jobs, seed) }
     }
 }
 
@@ -86,6 +111,26 @@ impl TraceGenerator {
             let work = rng
                 .lognormal(6.3, 1.15)
                 .clamp(self.cfg.min_duration_s, self.cfg.max_duration_s);
+            // Fleet size skew (guarded so default traces stay
+            // bit-identical): a `size_skew` fraction of jobs become
+            // whole-GPU tenants via the QoS floor; the rest are resampled
+            // toward footprints that fit the smallest slice, so MIG
+            // fragmentation — not raw capacity — decides placement quality.
+            let (spec, whole_gpu) = if self.cfg.size_skew > 0.0 {
+                if rng.bool(self.cfg.size_skew) {
+                    (spec, true)
+                } else {
+                    let mut s = spec;
+                    let mut tries = 0;
+                    while s.mem_mb > 4_500.0 && tries < 16 {
+                        s = Self::sample_spec(&mut rng);
+                        tries += 1;
+                    }
+                    (s, false)
+                }
+            } else {
+                (spec, false)
+            };
             let remaining = self.cfg.num_jobs - jobs.len();
             // Short-circuit the feature draws when the probabilities are 0
             // so default traces are bit-identical to the calibrated ones
@@ -103,10 +148,16 @@ impl TraceGenerator {
                     let mut j = Job::new(jobs.len() as u64, spec, t, work);
                     j.group = Some(gid);
                     j.requirements.instances = k as u32;
+                    if whole_gpu {
+                        j.requirements.min_slice_gpcs = 7;
+                    }
                     jobs.push(j);
                 }
             } else {
                 let mut j = Job::new(jobs.len() as u64, spec, t, work);
+                if whole_gpu {
+                    j.requirements.min_slice_gpcs = 7;
+                }
                 if self.cfg.phase_change_prob > 0.0 && rng.bool(self.cfg.phase_change_prob) {
                     // Phase flip somewhere in the middle of the run, to a
                     // freshly sampled behaviour (e.g. warmup -> steady).
@@ -203,6 +254,46 @@ mod tests {
         for m in 1..=7 {
             assert_eq!(TraceGenerator::generate_mix(5, m, 600.0).len(), m);
         }
+    }
+
+    #[test]
+    fn skewed_fleet_mix_has_both_size_classes() {
+        let cfg = TraceConfig { num_jobs: 400, ..TraceConfig::fleet_skewed(4, 400, 13) };
+        let jobs = TraceGenerator::new(cfg).generate();
+        let whole: Vec<_> =
+            jobs.iter().filter(|j| j.requirements.min_slice_gpcs == 7).collect();
+        let frac = whole.len() as f64 / jobs.len() as f64;
+        assert!((0.05..0.30).contains(&frac), "whole-GPU fraction {frac}");
+        // Slice-sized jobs overwhelmingly fit the smallest slices.
+        let small = jobs
+            .iter()
+            .filter(|j| j.requirements.min_slice_gpcs == 0)
+            .filter(|j| j.spec.mem_mb <= 4_500.0)
+            .count();
+        let non_whole = jobs.len() - whole.len();
+        assert!(
+            small as f64 >= 0.9 * non_whole as f64,
+            "only {small}/{non_whole} slice-sized jobs are small-footprint"
+        );
+        // Determinism with the new knobs.
+        let again = TraceGenerator::new(TraceConfig {
+            num_jobs: 400,
+            ..TraceConfig::fleet_skewed(4, 400, 13)
+        })
+        .generate();
+        assert!(jobs
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| a.arrival == b.arrival
+                && a.work == b.work
+                && a.requirements.min_slice_gpcs == b.requirements.min_slice_gpcs));
+    }
+
+    #[test]
+    fn fleet_config_scales_arrival_rate() {
+        assert_eq!(TraceConfig::fleet(1, 100, 0).mean_interarrival_s, 60.0);
+        assert_eq!(TraceConfig::fleet(4, 100, 0).mean_interarrival_s, 15.0);
+        assert_eq!(TraceConfig::fleet(0, 100, 0).mean_interarrival_s, 60.0);
     }
 
     #[test]
