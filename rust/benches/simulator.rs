@@ -1,18 +1,28 @@
-//! Bench: discrete-event simulator throughput. DESIGN.md §Perf target:
+//! Bench: discrete-event simulator throughput. DESIGN.md §Perf targets:
 //! the cluster-scale configuration (40 GPUs, 1000 jobs) must simulate fast
 //! enough that the Fig. 16 repetition study (paper: 1000 trials) is
-//! practical — i.e. thousands of simulated jobs per wall-second.
+//! practical — i.e. thousands of simulated jobs per wall-second — and the
+//! indexed event core must beat the linear-scan reference by ≥ 5× in
+//! per-event job-scan work (or ≥ 2× wall-clock) on a 10k-job trace.
+//!
+//! Writes the measured baseline to `BENCH_simulator.json` (repo root when
+//! run via `cargo bench --bench simulator` from `rust/`, else the current
+//! directory) — the perf-trajectory record future PRs append to.
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, section};
+use harness::{bench, fmt, section};
+use miso::sim::{run, run_instrumented, CoreStats, EventCore};
 use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, OptStaPolicy};
-use miso::sim::run;
+use miso::util::json::Value;
 use miso::workload::{TraceConfig, TraceGenerator};
 use miso::SystemConfig;
+use std::time::Instant;
 
 fn main() {
+    let mut records: Vec<Value> = Vec::new();
+
     section("trace generation");
     bench("generate 1000-job cluster trace", || {
         TraceGenerator::new(TraceConfig::cluster(1)).generate()
@@ -40,4 +50,77 @@ fn main() {
         1000.0 / p50,
         1000.0 * p50 / 60.0
     );
+    records.push(Value::obj([
+        ("kind", Value::str("cluster-trial")),
+        ("jobs", Value::num(1000.0)),
+        ("p50_s", Value::num(p50)),
+        ("jobs_per_s", Value::num(1000.0 / p50)),
+    ]));
+
+    section("event-core comparison: 40 GPUs, 10k jobs (MISO policy)");
+    let huge = TraceGenerator::new(TraceConfig {
+        num_jobs: 10_000,
+        mean_interarrival_s: 10.0,
+        seed: 42,
+        ..Default::default()
+    })
+    .generate();
+    let time_core = |core: EventCore| -> (u64, CoreStats, f64) {
+        let t0 = Instant::now();
+        let (m, stats) = run_instrumented(&mut MisoPolicy::paper(7), &huge, big_cfg.clone(), core);
+        (m.digest(), stats, t0.elapsed().as_secs_f64())
+    };
+    let (scan_digest, scan_stats, scan_s) = time_core(EventCore::Scan);
+    let (idx_digest, idx_stats, idx_s) = time_core(EventCore::Indexed);
+    assert_eq!(scan_digest, idx_digest, "event cores disagree on the 10k trace");
+
+    let scan_work = scan_stats.work_per_event();
+    let idx_work = idx_stats.work_per_event();
+    println!(
+        "scan core   : {:>10}  {:>9} events  {:>12.1} job scans/event",
+        fmt(scan_s),
+        scan_stats.events,
+        scan_work
+    );
+    println!(
+        "indexed core: {:>10}  {:>9} events  {:>12.1} heap ops/event",
+        fmt(idx_s),
+        idx_stats.events,
+        idx_work
+    );
+    println!(
+        "=> {:.1}x less per-event work, {:.2}x wall-clock (digests identical)",
+        scan_work / idx_work.max(1e-9),
+        scan_s / idx_s.max(1e-9)
+    );
+    records.push(Value::obj([
+        ("kind", Value::str("event-core")),
+        ("jobs", Value::num(10_000.0)),
+        ("scan_wall_s", Value::num(scan_s)),
+        ("indexed_wall_s", Value::num(idx_s)),
+        ("scan_work_per_event", Value::num(scan_work)),
+        ("indexed_work_per_event", Value::num(idx_work)),
+        ("work_ratio", Value::num(scan_work / idx_work.max(1e-9))),
+        ("wall_speedup", Value::num(scan_s / idx_s.max(1e-9))),
+    ]));
+
+    // Perf-trajectory record: repo root if we can see it, else cwd.
+    let out = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_simulator.json"
+    } else {
+        "BENCH_simulator.json"
+    };
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0.0, |d| d.as_secs_f64());
+    let doc = Value::obj([
+        ("bench", Value::str("simulator")),
+        ("status", Value::str("measured")),
+        ("unix_time_s", Value::num(unix_s)),
+        ("results", Value::arr(records)),
+    ]);
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote baseline to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
 }

@@ -30,7 +30,10 @@
 //! Determinism: nodes interact only at routing instants, and every node's
 //! event loop is sequential within the node, so fleet results are
 //! bit-identical across runs *and across worker-thread counts* — the
-//! property `tests/fleet.rs` locks in via [`FleetMetrics::digest`].
+//! property `tests/fleet.rs` locks in via [`FleetMetrics::digest`]. The
+//! per-node engines run the indexed event core ([`crate::sim::EventCore`]),
+//! which processes same-instant events in a canonical order precisely so
+//! this digest stays thread-count-independent.
 
 mod router;
 
@@ -69,7 +72,10 @@ impl Default for FleetConfig {
 }
 
 /// The router's view of one node at a routing instant: everything a real
-/// cluster gateway could cheaply learn from a node heartbeat.
+/// cluster gateway could cheaply learn from a node heartbeat. Cheap to
+/// snapshot — `live_jobs`, `queued`, and `instant_stp` are O(1) counters
+/// in the engine (the indexed event core maintains STP incrementally), so
+/// only the per-GPU shape scan costs O(GPUs).
 #[derive(Debug, Clone)]
 pub struct NodeView {
     pub node: usize,

@@ -136,6 +136,14 @@ impl Gpu {
         cost
     }
 
+    /// Reset an *empty* GPU back to the fresh single-7g partition (used
+    /// when every resident completed mid-transition/profiling and the
+    /// device is handed back to the placeable pool).
+    pub fn reset_to_full(&mut self) {
+        debug_assert_eq!(self.job_count(), 0, "reset_to_full on an occupied GPU");
+        *self = Gpu::new(self.id);
+    }
+
     /// Remove a completed/evicted job. No reconfiguration happens here —
     /// the scheduler decides whether to repartition afterwards.
     pub fn remove_job(&mut self, job: JobId) {

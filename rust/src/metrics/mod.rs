@@ -331,7 +331,18 @@ impl MetricsCollector {
         self.record(id).completion = t;
     }
 
+    /// Record an STP sample at virtual time `t`. Samples at the *same*
+    /// instant are coalesced to the latest value — the piecewise-constant
+    /// integral in [`RunMetrics::avg_stp`] is unchanged (a zero-width
+    /// interval contributes nothing) and the sample log stays O(distinct
+    /// event times) instead of O(events) under bursty same-instant firing.
     pub fn sample_stp(&mut self, t: f64, stp: f64) {
+        if let Some(last) = self.stp_samples.last_mut() {
+            if last.0 == t {
+                last.1 = stp;
+                return;
+            }
+        }
         self.stp_samples.push((t, stp));
     }
 

@@ -91,7 +91,7 @@ impl MisoPolicy {
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
-        while let Some(&id) = st.queue.front() {
+        while let Some(id) = st.queue.front() {
             let Some(gpu) = self.pick_gpu(st, id) else {
                 break; // strict FCFS
             };
@@ -110,7 +110,7 @@ impl MisoPolicy {
                         }
                     }
                     if self.tables.contains_key(&id) {
-                        st.queue.retain(|&q| q != id);
+                        st.queue.remove(id);
                         st.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
                         self.repartition(st, gpu, &[id]);
                     } else {
@@ -125,7 +125,7 @@ impl MisoPolicy {
                         // Bounded lookahead keeps the scan O(1) per
                         // profiling start even when the queue is deep.
                         let waiting: Vec<JobId> =
-                            st.queue.iter().copied().skip(1).take(32).collect();
+                            st.queue.iter().skip(1).take(32).collect();
                         for cand in waiting {
                             if self.tables.contains_key(&cand) {
                                 continue; // fast-path jobs are placed directly
@@ -150,7 +150,7 @@ impl MisoPolicy {
                 ProfilingMode::MigSequential => st.begin_mig_profiling(gpu, &[id]),
                 ProfilingMode::Instant => {
                     // Tables materialize immediately (Oracle).
-                    st.queue.retain(|&q| q != id);
+                    st.queue.remove(id);
                     st.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
                     let (ids, specs) = {
                         let (mut ids, mut specs) = st.resident_specs(gpu);
@@ -182,9 +182,32 @@ impl MisoPolicy {
             }
         }
         if ids.is_empty() {
+            // Everyone completed (e.g. inside a profiling window) — hand
+            // the GPU back instead of leaving it busy forever.
+            st.release_gpu_if_empty(gpu);
             return;
         }
-        let tables: Vec<SpeedupTable> = ids.iter().map(|id| self.tables[id]).collect();
+        let mut tables: Vec<SpeedupTable> = Vec::with_capacity(ids.len());
+        for id in &ids {
+            match self.tables.get(id) {
+                Some(t) => tables.push(*t),
+                None => {
+                    // A resident's table is missing (e.g. its shared group
+                    // profile was invalidated by a sibling's phase change
+                    // between fast-path seeding and this repartition).
+                    // Indexing would panic; re-profile the whole mix
+                    // instead, with any not-yet-resident `extra` jobs
+                    // riding along as the round's new jobs. Every call
+                    // site reaches here with no transition in flight
+                    // (drain gates on can_host, the completion/phase paths
+                    // gate on !busy, and on_profiling_done runs after its
+                    // pending was consumed), so profiling can start.
+                    debug_assert!(st.gpus[gpu].pending.is_none());
+                    st.begin_mps_profiling(gpu, extra);
+                    return;
+                }
+            }
+        }
         let Some(plan) = optimize(&tables) else {
             // With placement gating via `can_host` this cannot happen for
             // feasible mixes; fall back to keeping jobs where they are.
@@ -213,11 +236,15 @@ impl Policy for MisoPolicy {
         self.drain(st);
     }
 
-    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, id: JobId) {
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: Option<usize>, id: JobId) {
         self.tables.remove(&id);
         // Repartition so no slice sits idle (Sec. 4.2), then try the queue.
-        if !st.gpus[gpu].busy && st.gpus[gpu].gpu.job_count() > 0 {
-            self.repartition(st, gpu, &[]);
+        // `gpu` is None for zero-work jobs that completed straight out of
+        // the queue — nothing to repartition then.
+        if let Some(g) = gpu {
+            if !st.gpus[g].busy && st.gpus[g].gpu.job_count() > 0 {
+                self.repartition(st, g, &[]);
+            }
         }
         self.drain(st);
     }
@@ -231,6 +258,14 @@ impl Policy for MisoPolicy {
     }
 
     fn on_profiling_done(&mut self, st: &mut ClusterState, gpu: usize) {
+        if st.gpus[gpu].gpu.job_count() == 0 {
+            // Every profiled job completed inside the window; measuring an
+            // empty mix is meaningless (and would assert) — free the GPU.
+            st.release_gpu_if_empty(gpu);
+            self.pending_reprofile.remove(&gpu);
+            self.drain(st);
+            return;
+        }
         let (ids, matrix) = st.measure_matrix(gpu);
         let specs: Vec<_> = ids.iter().map(|id| st.jobs[id].job.spec).collect();
         let tables = self.predictor.predict(&specs, &matrix);

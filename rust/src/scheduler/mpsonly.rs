@@ -16,7 +16,7 @@ impl MpsOnlyPolicy {
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
-        while let Some(&id) = st.queue.front() {
+        while let Some(id) = st.queue.front() {
             let job_mem = st.jobs[&id].job.spec.mem_mb;
             let pick = (0..st.gpus.len())
                 .filter(|&g| {
@@ -31,7 +31,14 @@ impl MpsOnlyPolicy {
                 })
                 .min_by_key(|&g| st.gpus[g].gpu.job_count());
             match pick {
-                Some(g) => st.join_mps_permanent(g, id),
+                // join enforces the sim-level 7-resident cap; a refusal
+                // (cap hit despite our own 3-job limit) keeps the job
+                // queued and blocks the FCFS head.
+                Some(g) => {
+                    if !st.join_mps_permanent(g, id) {
+                        break;
+                    }
+                }
                 None => break,
             }
         }
@@ -53,8 +60,10 @@ impl Policy for MpsOnlyPolicy {
         self.drain(st);
     }
 
-    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, _id: JobId) {
-        st.refresh_permanent_mps_speeds(gpu);
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: Option<usize>, _id: JobId) {
+        if let Some(g) = gpu {
+            st.refresh_permanent_mps_speeds(g);
+        }
         self.drain(st);
     }
 

@@ -13,7 +13,7 @@ impl NoPartPolicy {
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
-        while let Some(&id) = st.queue.front() {
+        while let Some(id) = st.queue.front() {
             let free = (0..st.gpus.len())
                 .find(|&g| !st.gpus[g].busy && st.gpus[g].gpu.job_count() == 0);
             match free {
@@ -36,7 +36,7 @@ impl Policy for NoPartPolicy {
         self.drain(st);
     }
 
-    fn on_completion(&mut self, st: &mut ClusterState, _gpu: usize, _id: JobId) {
+    fn on_completion(&mut self, st: &mut ClusterState, _gpu: Option<usize>, _id: JobId) {
         self.drain(st);
     }
 

@@ -37,7 +37,7 @@ impl OptStaPolicy {
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
-        'queue: while let Some(&id) = st.queue.front() {
+        'queue: while let Some(id) = st.queue.front() {
             // Pick the GPU offering the smallest fitting free slice.
             let job = st.jobs[&id].job.clone();
             let mut best: Option<(usize, u8)> = None; // (gpu, gpcs)
@@ -68,8 +68,15 @@ impl OptStaPolicy {
             let GpuMode::Mig { config, assignment } = &st.gpus[gpu].gpu.mode else {
                 return;
             };
+            // Iterate residents in slice order, not HashMap order: with a
+            // strict '>' tie-break, equal-gain candidates (identical specs
+            // on same-kind slices) must resolve deterministically or runs
+            // diverge bit-for-bit (event-core parity, fleet digests).
+            let mut residents: Vec<(usize, JobId)> =
+                assignment.iter().map(|(&s, &j)| (s, j)).collect();
+            residents.sort_unstable();
             let mut best_move: Option<(JobId, usize, f64)> = None;
-            for (&si, &id) in assignment.iter() {
+            for &(si, id) in &residents {
                 let cur_kind = config.slices[si].kind;
                 let spec = st.jobs[&id].job.spec;
                 let cur = mig_speed(&spec, cur_kind);
@@ -126,9 +133,11 @@ impl Policy for OptStaPolicy {
         self.drain(st);
     }
 
-    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, _id: JobId) {
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: Option<usize>, _id: JobId) {
         self.drain(st);
-        self.migrate_up(st, gpu);
+        if let Some(g) = gpu {
+            self.migrate_up(st, g);
+        }
         self.drain(st);
     }
 

@@ -315,18 +315,8 @@ fn controller_loop_fleet(
                     let _ = reply.send(Value::arr(all).to_string());
                 }
                 Request::Metrics { reply } => {
-                    let completed: usize = fleet
-                        .nodes
-                        .iter()
-                        .map(|n| {
-                            n.engine
-                                .st
-                                .jobs
-                                .values()
-                                .filter(|j| matches!(j.state, JobState::Done))
-                                .count()
-                        })
-                        .sum();
+                    let completed: usize =
+                        fleet.nodes.iter().map(|n| n.engine.completed_jobs()).sum();
                     let stp: f64 = fleet.nodes.iter().map(|n| n.engine.st.instant_stp()).sum();
                     let _ = reply.send(
                         Value::obj([
@@ -438,7 +428,9 @@ fn jobs_json(engine: &Engine) -> Value {
                     ("model", Value::str(j.job.spec.family.name())),
                     ("state", Value::str(state)),
                     ("speed", Value::num(j.state.speed())),
-                    ("remaining_s", Value::num(j.remaining.max(0.0))),
+                    // Progress accrues lazily in the engine; project it to
+                    // the current instant for observers.
+                    ("remaining_s", Value::num(j.remaining_at(engine.st.now))),
                     ("gpu", j.gpu.map_or(Value::Null, |g| Value::num(g as f64))),
                 ]),
             )
@@ -449,12 +441,7 @@ fn jobs_json(engine: &Engine) -> Value {
 }
 
 fn metrics_json(engine: &Engine) -> Value {
-    let completed = engine
-        .st
-        .jobs
-        .values()
-        .filter(|j| matches!(j.state, JobState::Done))
-        .count();
+    let completed = engine.completed_jobs();
     Value::obj([
         ("now_s", Value::num(engine.st.now)),
         ("completed", Value::num(completed as f64)),

@@ -1,0 +1,342 @@
+//! Event cores for the discrete-event engine: how the engine finds the next
+//! internal event (job completion, phase-boundary crossing, GPU timer) and
+//! the set of events due at an instant.
+//!
+//! Two interchangeable implementations sit behind [`EventIndex`]:
+//!
+//! * [`EventCore::Scan`] — the reference core: linear scans over the active
+//!   job set and the timer list. O(active + timers) per event, obviously
+//!   correct, kept as the oracle for the old-vs-new parity tests.
+//! * [`EventCore::Indexed`] — binary-heap event queues with *lazy
+//!   invalidation*: every job carries an epoch counter bumped whenever its
+//!   scheduled times change; heap entries stamped with an older epoch are
+//!   stale and discarded on pop. A speed change is therefore O(log n)
+//!   (bump + push) instead of forcing a full rescan. O(log n) per event.
+//!
+//! Both cores read the same *stored* per-job event times
+//! (`JobSim::complete_at` / `JobSim::phase_at`, written only by
+//! `ClusterState::reschedule`) and the same timer list, and never do
+//! arithmetic of their own — so they produce bit-identical simulations by
+//! construction, and the parity tests in `tests/proptests.rs` pin the
+//! invalidation logic (the risky part) against the exhaustive scans.
+
+use super::{JobSim, Timer, TimerKind, EPS};
+use crate::util::{FastMap, FastSet};
+use crate::workload::JobId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Which event core an engine runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventCore {
+    /// Linear-scan reference core (parity oracle; O(active) per event).
+    Scan,
+    /// Heap-indexed core with lazy epoch invalidation (O(log n) per event).
+    Indexed,
+}
+
+/// Event-core instrumentation, reported by `benches/simulator.rs` to
+/// quantify the scan→heap win (DESIGN.md §Perf).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CoreStats {
+    /// Engine loop iterations (one per processed instant).
+    pub events: u64,
+    /// Job entries examined by linear scans (Scan core only).
+    pub job_scans: u64,
+    /// Heap insertions (Indexed core only).
+    pub heap_pushes: u64,
+    /// Heap removals, including stale entries discarded lazily.
+    pub heap_pops: u64,
+}
+
+impl CoreStats {
+    /// Mean per-event work: scanned job entries (Scan) or heap operations
+    /// (Indexed) per processed instant. Counts *all* scheduling queries,
+    /// including the `next_event` calls `run_until_idle` issues between
+    /// `advance_to` invocations — the Scan core genuinely pays a full
+    /// rescan for each of those, the Indexed core an amortized peek — so
+    /// this is total search work per event, not just the in-loop scan.
+    pub fn work_per_event(&self) -> f64 {
+        let work = self.job_scans + self.heap_pushes + self.heap_pops;
+        work as f64 / self.events.max(1) as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum JobEventKind {
+    Complete,
+    Phase,
+}
+
+/// Heap entry for a job event. Ordered so the *earliest* time pops first
+/// (reversed comparison — `BinaryHeap` is a max-heap), with the insertion
+/// sequence number as a deterministic tie-break.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct JobEntry {
+    at: f64,
+    seq: u64,
+    epoch: u64,
+    id: JobId,
+    kind: JobEventKind,
+}
+
+impl PartialEq for JobEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for JobEntry {}
+impl PartialOrd for JobEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for JobEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Heap entry for a GPU timer (same reversed ordering).
+#[derive(Debug, Clone, Copy)]
+pub(super) struct TimerEntry {
+    at: f64,
+    seq: u64,
+    timer: Timer,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+fn timer_rank(kind: TimerKind) -> u8 {
+    match kind {
+        TimerKind::TransitionDone => 0,
+        TimerKind::ProfilingDone => 1,
+    }
+}
+
+/// The pluggable event index (see module docs).
+pub(super) enum EventIndex {
+    Scan,
+    Indexed {
+        jobs: BinaryHeap<JobEntry>,
+        timers: BinaryHeap<TimerEntry>,
+        seq: u64,
+    },
+}
+
+impl EventIndex {
+    pub(super) fn new(core: EventCore) -> EventIndex {
+        match core {
+            EventCore::Scan => EventIndex::Scan,
+            EventCore::Indexed => EventIndex::Indexed {
+                jobs: BinaryHeap::new(),
+                timers: BinaryHeap::new(),
+                seq: 0,
+            },
+        }
+    }
+
+    pub(super) fn core(&self) -> EventCore {
+        match self {
+            EventIndex::Scan => EventCore::Scan,
+            EventIndex::Indexed { .. } => EventCore::Indexed,
+        }
+    }
+
+    /// A job's scheduled times changed (epoch already bumped by the
+    /// caller): push fresh entries; older-epoch entries become stale.
+    pub(super) fn on_reschedule(
+        &mut self,
+        id: JobId,
+        epoch: u64,
+        complete_at: f64,
+        phase_at: f64,
+        stats: &mut CoreStats,
+    ) {
+        let EventIndex::Indexed { jobs, seq, .. } = self else { return };
+        if complete_at.is_finite() {
+            *seq += 1;
+            jobs.push(JobEntry { at: complete_at, seq: *seq, epoch, id, kind: JobEventKind::Complete });
+            stats.heap_pushes += 1;
+        }
+        if phase_at.is_finite() {
+            *seq += 1;
+            jobs.push(JobEntry { at: phase_at, seq: *seq, epoch, id, kind: JobEventKind::Phase });
+            stats.heap_pushes += 1;
+        }
+    }
+
+    /// A GPU timer was armed. Timers are never cancelled, so they need no
+    /// invalidation — each entry pops exactly once.
+    pub(super) fn on_timer(&mut self, t: Timer, stats: &mut CoreStats) {
+        let EventIndex::Indexed { timers, seq, .. } = self else { return };
+        *seq += 1;
+        timers.push(TimerEntry { at: t.at, seq: *seq, timer: t });
+        stats.heap_pushes += 1;
+    }
+
+    /// Earliest pending event time (∞ when nothing is scheduled).
+    pub(super) fn next_time(
+        &mut self,
+        jobs: &FastMap<JobId, JobSim>,
+        active: &FastSet<JobId>,
+        timers: &[Timer],
+        stats: &mut CoreStats,
+    ) -> f64 {
+        match self {
+            EventIndex::Scan => {
+                let mut t = f64::INFINITY;
+                for timer in timers {
+                    t = t.min(timer.at);
+                }
+                for id in active {
+                    let j = &jobs[id];
+                    t = t.min(j.complete_at).min(j.phase_at);
+                }
+                stats.job_scans += active.len() as u64;
+                t
+            }
+            EventIndex::Indexed { jobs: heap, timers: theap, .. } => {
+                // Discard stale entries until the top is live.
+                while let Some(top) = heap.peek() {
+                    let live = jobs.get(&top.id).is_some_and(|j| j.epoch == top.epoch);
+                    if live {
+                        break;
+                    }
+                    heap.pop();
+                    stats.heap_pops += 1;
+                }
+                let tj = heap.peek().map_or(f64::INFINITY, |e| e.at);
+                let tt = theap.peek().map_or(f64::INFINITY, |e| e.at);
+                tj.min(tt)
+            }
+        }
+    }
+
+    /// Job events due at `now` (within the engine's EPS slop), as
+    /// (phase crossings, completions), each sorted by job id so both cores
+    /// process the instant in one canonical order.
+    pub(super) fn due_jobs(
+        &mut self,
+        now: f64,
+        jobs: &FastMap<JobId, JobSim>,
+        active: &FastSet<JobId>,
+        stats: &mut CoreStats,
+    ) -> (Vec<JobId>, Vec<JobId>) {
+        let mut phases = Vec::new();
+        let mut completions = Vec::new();
+        match self {
+            EventIndex::Scan => {
+                stats.job_scans += active.len() as u64;
+                for id in active {
+                    let j = &jobs[id];
+                    if j.phase_at <= now + EPS {
+                        phases.push(*id);
+                    }
+                    if j.complete_at <= now + EPS {
+                        completions.push(*id);
+                    }
+                }
+            }
+            EventIndex::Indexed { jobs: heap, .. } => {
+                while let Some(top) = heap.peek() {
+                    if top.at > now + EPS {
+                        break;
+                    }
+                    let e = heap.pop().unwrap();
+                    stats.heap_pops += 1;
+                    let live = jobs.get(&e.id).is_some_and(|j| j.epoch == e.epoch);
+                    if !live {
+                        continue;
+                    }
+                    match e.kind {
+                        JobEventKind::Phase => phases.push(e.id),
+                        JobEventKind::Complete => completions.push(e.id),
+                    }
+                }
+            }
+        }
+        phases.sort_unstable();
+        completions.sort_unstable();
+        (phases, completions)
+    }
+
+    /// Timers due at `now`, removed from the source-of-truth `timers` vec
+    /// and returned in canonical (time, gpu, kind) order.
+    pub(super) fn due_timers(
+        &mut self,
+        now: f64,
+        timers: &mut Vec<Timer>,
+        stats: &mut CoreStats,
+    ) -> Vec<Timer> {
+        let mut due: Vec<Timer> = Vec::new();
+        match self {
+            EventIndex::Scan => {
+                let mut rest = Vec::with_capacity(timers.len());
+                for t in timers.drain(..) {
+                    if t.at <= now + EPS {
+                        due.push(t);
+                    } else {
+                        rest.push(t);
+                    }
+                }
+                *timers = rest;
+            }
+            EventIndex::Indexed { timers: theap, .. } => {
+                while let Some(top) = theap.peek() {
+                    if top.at > now + EPS {
+                        break;
+                    }
+                    let e = theap.pop().unwrap();
+                    stats.heap_pops += 1;
+                    due.push(e.timer);
+                    // Mirror the removal in the source-of-truth vec (at most
+                    // one in-flight timer per GPU, so the match is unique).
+                    if let Some(pos) = timers
+                        .iter()
+                        .position(|t| t.gpu == e.timer.gpu && t.kind == e.timer.kind && t.at == e.timer.at)
+                    {
+                        timers.swap_remove(pos);
+                    }
+                }
+            }
+        }
+        due.sort_unstable_by(|a, b| {
+            a.at.total_cmp(&b.at)
+                .then_with(|| a.gpu.cmp(&b.gpu))
+                .then_with(|| timer_rank(a.kind).cmp(&timer_rank(b.kind)))
+        });
+        due
+    }
+
+    /// Amortized garbage collection: when stale entries dominate the heap
+    /// (long live-server sessions with many speed changes), rebuild it from
+    /// the live entries only.
+    pub(super) fn maybe_compact(&mut self, jobs_map: &FastMap<JobId, JobSim>, active_len: usize) {
+        let EventIndex::Indexed { jobs, .. } = self else { return };
+        // Each active job has at most 2 live entries; a heap much larger
+        // than that is mostly tombstones.
+        if jobs.len() > 64 && jobs.len() > 8 * active_len.max(8) {
+            let live: Vec<JobEntry> = jobs
+                .drain()
+                .filter(|e| jobs_map.get(&e.id).is_some_and(|j| j.epoch == e.epoch))
+                .collect();
+            *jobs = BinaryHeap::from(live);
+        }
+    }
+}

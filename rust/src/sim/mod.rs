@@ -12,6 +12,26 @@
 //!
 //! Lifecycle accounting matches Fig. 12's stages: queue, MPS (progressing),
 //! checkpoint (stopped), MIG execution, idle.
+//!
+//! # Event core (DESIGN.md §Perf)
+//!
+//! Because speeds are piecewise-constant, every future event is known the
+//! moment a job's state is set: its completion instant and (if it carries a
+//! phase change) its boundary-crossing instant. [`ClusterState::reschedule`]
+//! stores both on the job and feeds them to the pluggable event index
+//! ([`EventCore`]): the default [`EventCore::Indexed`] core keeps them in
+//! binary heaps with lazy epoch invalidation (O(log n) per event), while
+//! [`EventCore::Scan`] recomputes by linear scan (O(active) per event) and
+//! serves as the parity oracle. Stage times accrue *lazily* — settled only
+//! when a job's state changes ([`ClusterState::touch`]) — and the
+//! cluster-wide instantaneous STP is an incrementally maintained
+//! accumulator, so an event costs O(log n), not O(active jobs).
+
+mod events;
+mod queue;
+
+pub use events::{CoreStats, EventCore};
+pub use queue::JobQueue;
 
 use crate::config::SystemConfig;
 use crate::gpu::{Gpu, GpuMode};
@@ -19,9 +39,10 @@ use crate::metrics::{MetricsCollector, RunMetrics};
 use crate::mig::{MigConfig, SliceKind};
 use crate::perfmodel::{mig_speed, mps_speeds, MPS_LEVELS};
 use crate::predictor::features::{profile_mps_matrix, MpsMatrix};
-use crate::util::Rng;
+use crate::util::{FastSet, Rng};
 use crate::workload::{Job, JobId, WorkloadSpec};
-use std::collections::{HashMap, VecDeque};
+use events::EventIndex;
+use std::collections::HashMap;
 
 const EPS: f64 = 1e-7;
 
@@ -29,10 +50,23 @@ const EPS: f64 = 1e-7;
 #[derive(Debug, Clone)]
 pub struct JobSim {
     pub job: Job,
-    /// Remaining work in exclusive-full-GPU seconds.
-    pub remaining: f64,
+    /// Remaining work in exclusive-full-GPU seconds, exact as of
+    /// `accrued_to` — **stale between state changes** under lazy accrual.
+    /// Crate-private on purpose: external observers must use
+    /// [`JobSim::remaining_at`], which projects to the current instant.
+    pub(crate) remaining: f64,
     pub state: JobState,
     pub gpu: Option<usize>,
+    /// Instant up to which `remaining` and the metrics stage buckets have
+    /// been settled (lazy accrual — DESIGN.md §Perf).
+    accrued_to: f64,
+    /// Scheduled completion instant (∞ = none pending).
+    complete_at: f64,
+    /// Scheduled phase-boundary crossing instant (∞ = none pending).
+    phase_at: f64,
+    /// Bumped by every reschedule; event-heap entries stamped with an older
+    /// epoch are stale and discarded lazily.
+    epoch: u64,
 }
 
 impl JobSim {
@@ -42,6 +76,13 @@ impl JobSim {
         self.job
             .phase
             .map(|p| self.job.work * (1.0 - p.at_work_fraction))
+    }
+
+    /// Projected remaining work at `now` (for observers like the live
+    /// server; the stored `remaining` is only exact as of the job's last
+    /// state change).
+    pub fn remaining_at(&self, now: f64) -> f64 {
+        (self.remaining - self.state.speed() * (now - self.accrued_to).max(0.0)).max(0.0)
     }
 }
 
@@ -113,19 +154,30 @@ pub struct ClusterState {
     pub cfg: SystemConfig,
     pub gpus: Vec<GpuSim>,
     pub jobs: crate::util::FastMap<JobId, JobSim>,
-    /// FCFS queue (head = next to place).
-    pub queue: VecDeque<JobId>,
+    /// FCFS queue (head = next to place) with O(1) tombstone removal.
+    pub queue: JobQueue,
     pub metrics: MetricsCollector,
     /// Noise source for MPS measurement (None = noise-free profiling).
     pub measure_rng: Option<Rng>,
+    /// Event-core instrumentation counters.
+    pub stats: CoreStats,
+    /// In-flight GPU timers (source of truth; the indexed core mirrors
+    /// them into its heap).
     timers: Vec<Timer>,
-    /// Jobs not yet Done — the event loop's iteration set (Done jobs
-    /// would otherwise dominate the per-event scans; DESIGN.md §Perf).
-    active: Vec<JobId>,
+    /// Jobs not yet Done — the scan core's iteration set.
+    active: FastSet<JobId>,
+    /// Incrementally maintained cluster STP (Eq. 1); updated on every speed
+    /// change so reading it is O(1) instead of O(active).
+    stp: f64,
+    events: EventIndex,
 }
 
 impl ClusterState {
     pub fn new(cfg: SystemConfig) -> ClusterState {
+        Self::with_core(cfg, EventCore::Indexed)
+    }
+
+    pub fn with_core(cfg: SystemConfig, core: EventCore) -> ClusterState {
         let gpus = (0..cfg.num_gpus)
             .map(|i| GpuSim { gpu: Gpu::new(i), pending: None, busy: false })
             .collect();
@@ -134,12 +186,20 @@ impl ClusterState {
             cfg,
             gpus,
             jobs: crate::util::FastMap::default(),
-            queue: VecDeque::new(),
+            queue: JobQueue::new(),
             metrics: MetricsCollector::new(),
             measure_rng: Some(Rng::seed_from_u64(0x5eed)),
+            stats: CoreStats::default(),
             timers: Vec::new(),
-            active: Vec::new(),
+            active: FastSet::default(),
+            stp: 0.0,
+            events: EventIndex::new(core),
         }
+    }
+
+    /// Which event core this state runs on.
+    pub fn event_core(&self) -> EventCore {
+        self.events.core()
     }
 
     // ---------- queries ----------
@@ -194,9 +254,115 @@ impl ClusterState {
     }
 
     /// Cluster-wide instantaneous STP (Eq. 1): sum of normalized speeds of
-    /// all jobs currently progressing.
+    /// all jobs currently progressing. O(1) — incrementally maintained.
     pub fn instant_stp(&self) -> f64 {
-        self.active.iter().map(|id| self.jobs[id].state.speed()).sum()
+        // Clamp: incremental add/subtract can leave a −1e-16 residue.
+        self.stp.max(0.0)
+    }
+
+    // ---------- event-core internals ----------
+
+    /// Settle a job's lazily-accrued progress and stage time up to `now`.
+    /// Invariant: called before any read-modify of `remaining` or any state
+    /// change, so `remaining` is exact whenever it matters.
+    fn touch(&mut self, id: JobId) {
+        let now = self.now;
+        let (state, dt) = {
+            let js = self.jobs.get_mut(&id).unwrap();
+            let dt = now - js.accrued_to;
+            js.accrued_to = now;
+            if dt <= 0.0 {
+                return;
+            }
+            if let JobState::MigRun { speed } | JobState::MpsRun { speed } | JobState::Idle { speed } =
+                js.state
+            {
+                js.remaining -= speed * dt;
+            }
+            (js.state, dt)
+        };
+        match state {
+            JobState::Queued => self.metrics.record(id).queue_s += dt,
+            JobState::MigRun { .. } => self.metrics.record(id).mig_exec_s += dt,
+            JobState::MpsRun { .. } => self.metrics.record(id).mps_s += dt,
+            JobState::Blocked => self.metrics.record(id).checkpoint_s += dt,
+            JobState::Idle { .. } => self.metrics.record(id).idle_s += dt,
+            JobState::Done => {}
+        }
+    }
+
+    /// Change a job's state: settle accrual, swap the state, fold the speed
+    /// delta into the STP accumulator, and re-arm its scheduled events.
+    /// Every state mutation in the simulator funnels through here so the
+    /// event index can never go stale.
+    fn set_state(&mut self, id: JobId, state: JobState) {
+        self.touch(id);
+        let (old_speed, new_speed) = {
+            let js = self.jobs.get_mut(&id).unwrap();
+            let old = js.state.speed();
+            js.state = state;
+            (old, state.speed())
+        };
+        self.stp += new_speed - old_speed;
+        self.reschedule(id);
+    }
+
+    /// Recompute a job's scheduled completion / phase-crossing instants
+    /// from its settled `remaining` and current speed, bump its epoch
+    /// (invalidating any heap entries), and push fresh index entries.
+    fn reschedule(&mut self, id: JobId) {
+        let now = self.now;
+        let (epoch, complete_at, phase_at) = {
+            let js = self.jobs.get_mut(&id).unwrap();
+            js.epoch += 1;
+            if matches!(js.state, JobState::Done) {
+                js.complete_at = f64::INFINITY;
+                js.phase_at = f64::INFINITY;
+                return;
+            }
+            let sp = js.state.speed();
+            js.complete_at = if js.remaining <= EPS {
+                // Zero work left — completes now even if still queued or
+                // checkpointed (the engine no longer requires a GPU).
+                now
+            } else if sp > 0.0 {
+                now + js.remaining / sp
+            } else {
+                f64::INFINITY
+            };
+            js.phase_at = match js.phase_boundary() {
+                Some(b) if js.remaining > EPS => {
+                    if js.remaining <= b + EPS {
+                        now // boundary reached while stopped — fire on restart
+                    } else if sp > 0.0 {
+                        now + (js.remaining - b) / sp
+                    } else {
+                        f64::INFINITY
+                    }
+                }
+                _ => f64::INFINITY,
+            };
+            (js.epoch, js.complete_at, js.phase_at)
+        };
+        self.events.on_reschedule(id, epoch, complete_at, phase_at, &mut self.stats);
+    }
+
+    /// Arm a GPU timer (source-of-truth vec + indexed heap).
+    fn push_timer(&mut self, t: Timer) {
+        self.timers.push(t);
+        self.events.on_timer(t, &mut self.stats);
+    }
+
+    fn next_internal_event(&mut self) -> f64 {
+        self.events.next_time(&self.jobs, &self.active, &self.timers, &mut self.stats)
+    }
+
+    fn due_job_events(&mut self) -> (Vec<JobId>, Vec<JobId>) {
+        self.events.due_jobs(self.now, &self.jobs, &self.active, &mut self.stats)
+    }
+
+    fn due_timers(&mut self) -> Vec<Timer> {
+        self.events.due_timers(self.now, &mut self.timers, &mut self.stats)
     }
 
     // ---------- mechanics (what the real server API exposes) ----------
@@ -222,10 +388,9 @@ impl ClusterState {
         };
         assignment.insert(si, id);
         let speed = mig_speed(&job.spec, kind);
-        let js = self.jobs.get_mut(&id).unwrap();
-        js.gpu = Some(gpu);
-        js.state = JobState::MigRun { speed };
-        self.queue.retain(|&q| q != id);
+        self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
+        self.queue.remove(id);
+        self.set_state(id, JobState::MigRun { speed });
         true
     }
 
@@ -247,7 +412,7 @@ impl ClusterState {
         assignment.insert(to_slice, id);
         let kind = config.slices[to_slice].kind;
         let spec = self.jobs[&id].job.spec;
-        self.jobs.get_mut(&id).unwrap().state = JobState::MigRun { speed: mig_speed(&spec, kind) };
+        self.set_state(id, JobState::MigRun { speed: mig_speed(&spec, kind) });
     }
 
     /// Begin the transition into MPS profiling mode: optionally pull new
@@ -258,19 +423,19 @@ impl ClusterState {
     pub fn begin_mps_profiling(&mut self, gpu: usize, new_jobs: &[JobId]) {
         let had_residents = self.gpus[gpu].gpu.job_count() > 0;
         for &id in new_jobs {
-            self.queue.retain(|&q| q != id);
-            let js = self.jobs.get_mut(&id).unwrap();
-            js.gpu = Some(gpu);
-            js.state = JobState::Blocked;
+            self.queue.remove(id);
+            self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
+            self.set_state(id, JobState::Blocked);
         }
-        let g = &mut self.gpus[gpu];
         let mut cost = self.cfg.mig_reconfig_s;
         if had_residents {
             cost += self.cfg.checkpoint_s;
         }
         // Residents get checkpointed; new jobs just wait for the reset.
-        for id in g.gpu.resident_jobs() {
-            self.jobs.get_mut(&id).unwrap().state = JobState::Blocked;
+        let mut residents = self.gpus[gpu].gpu.resident_jobs();
+        residents.sort_unstable();
+        for id in residents {
+            self.set_state(id, JobState::Blocked);
         }
         let g = &mut self.gpus[gpu];
         match &mut g.gpu.mode {
@@ -284,7 +449,7 @@ impl ClusterState {
         debug_assert!(g.pending.is_none(), "overlapping transitions on a GPU");
         g.busy = true;
         g.pending = Some(Pending::ToMps { profile_s: self.cfg.mps_profile_total_s() });
-        self.timers.push(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
+        self.push_timer(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
     }
 
     /// Begin the transition into a new MIG partition. `assignment` maps
@@ -298,34 +463,37 @@ impl ClusterState {
         new_jobs: &[JobId],
     ) {
         for &id in new_jobs {
-            self.queue.retain(|&q| q != id);
-            let js = self.jobs.get_mut(&id).unwrap();
-            js.gpu = Some(gpu);
+            self.queue.remove(id);
+            self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
         }
         let had_residents = self.gpus[gpu].gpu.job_count() > 0;
         let mut cost = self.cfg.mig_reconfig_s;
         if had_residents {
             cost += self.cfg.checkpoint_s;
         }
-        for &id in assignment.values() {
-            self.jobs.get_mut(&id).unwrap().state = JobState::Blocked;
+        let mut blocked: Vec<JobId> = assignment.values().copied().collect();
+        blocked.sort_unstable();
+        for id in blocked {
+            self.set_state(id, JobState::Blocked);
         }
         let g = &mut self.gpus[gpu];
         debug_assert!(g.pending.is_none(), "overlapping transitions on GPU {gpu}");
         g.busy = true;
         g.pending = Some(Pending::ToMig { config, assignment });
-        self.timers.push(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
+        self.push_timer(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
     }
 
     /// Enter permanent MPS co-location with equal thread caps (MPS-only
     /// baseline). New jobs join without disrupting residents (that is MPS's
-    /// selling point), so no overhead is charged.
-    pub fn join_mps_permanent(&mut self, gpu: usize, id: JobId) {
-        self.queue.retain(|&q| q != id);
-        {
-            let js = self.jobs.get_mut(&id).unwrap();
-            js.gpu = Some(gpu);
+    /// selling point), so no overhead is charged. Returns false — leaving
+    /// the job queued — when the GPU is already at the 7-resident cap the
+    /// MIG-based paths enforce via `can_host`.
+    pub fn join_mps_permanent(&mut self, gpu: usize, id: JobId) -> bool {
+        if self.gpus[gpu].gpu.job_count() >= 7 {
+            return false;
         }
+        self.queue.remove(id);
+        self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
         let g = &mut self.gpus[gpu];
         match &mut g.gpu.mode {
             GpuMode::Mps { jobs, .. } => jobs.push(id),
@@ -334,6 +502,7 @@ impl ClusterState {
             }
         }
         self.refresh_permanent_mps_speeds(gpu);
+        true
     }
 
     /// Recompute speeds for a permanent-MPS GPU (equal caps over residents).
@@ -346,7 +515,7 @@ impl ClusterState {
         let caps = vec![cap.max(0.14); ids.len()];
         let speeds = crate::perfmodel::mps_speeds_caps(&specs, &caps);
         for (id, sp) in ids.iter().zip(speeds) {
-            self.jobs.get_mut(id).unwrap().state = JobState::MpsRun { speed: sp };
+            self.set_state(*id, JobState::MpsRun { speed: sp });
         }
     }
 
@@ -356,14 +525,14 @@ impl ClusterState {
     /// slice changes.
     pub fn begin_mig_profiling(&mut self, gpu: usize, new_jobs: &[JobId]) {
         for &id in new_jobs {
-            self.queue.retain(|&q| q != id);
-            let js = self.jobs.get_mut(&id).unwrap();
-            js.gpu = Some(gpu);
-            js.state = JobState::Blocked;
+            self.queue.remove(id);
+            self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
+            self.set_state(id, JobState::Blocked);
         }
-        let g = &mut self.gpus[gpu];
-        for id in g.gpu.resident_jobs() {
-            self.jobs.get_mut(&id).unwrap().state = JobState::Blocked;
+        let mut residents = self.gpus[gpu].gpu.resident_jobs();
+        residents.sort_unstable();
+        for id in residents {
+            self.set_state(id, JobState::Blocked);
         }
         let g = &mut self.gpus[gpu];
         match &mut g.gpu.mode {
@@ -375,6 +544,11 @@ impl ClusterState {
             GpuMode::Mps { jobs, .. } => jobs.extend_from_slice(new_jobs),
         }
         let m = g.gpu.job_count() as f64;
+        if m == 0.0 {
+            // Nothing to profile (all candidates completed already).
+            g.gpu.reset_to_full();
+            return;
+        }
         // Per job: 3 slices × window + 3 GPU resets + 1 checkpoint swap.
         let per_job = 3.0 * self.cfg.mps_profile_per_level_s
             + 3.0 * self.cfg.mig_reconfig_s
@@ -394,8 +568,7 @@ impl ClusterState {
         let g = &mut self.gpus[gpu];
         g.busy = true;
         g.pending = Some(Pending::ToMigProfiling { total_s: total, avg_speed: mean_speed * run_frac });
-        self.timers
-            .push(Timer { at: self.now + self.cfg.mig_reconfig_s, gpu, kind: TimerKind::TransitionDone });
+        self.push_timer(Timer { at: self.now + self.cfg.mig_reconfig_s, gpu, kind: TimerKind::TransitionDone });
     }
 
     /// Measure the MPS profile matrix of a GPU currently in MPS mode, with
@@ -410,15 +583,38 @@ impl ClusterState {
         (ids, matrix)
     }
 
+    /// Hand an empty, idle-pending GPU back to the placeable pool: reset it
+    /// to the fresh single-7g partition and clear `busy`. Returns false if
+    /// the GPU still hosts jobs or has a transition in flight. Policies use
+    /// this when every job on a GPU completed mid-profiling — previously
+    /// such a GPU stayed `busy` forever and could stall the whole run.
+    pub fn release_gpu_if_empty(&mut self, gpu: usize) -> bool {
+        let g = &mut self.gpus[gpu];
+        if g.gpu.job_count() > 0 || g.pending.is_some() {
+            return false;
+        }
+        g.gpu.reset_to_full();
+        g.busy = false;
+        true
+    }
+
     // ---------- internals ----------
 
     fn fire_transition(&mut self, gpu: usize) {
         let pending = self.gpus[gpu].pending.take().expect("transition without pending");
         match pending {
             Pending::ToMps { profile_s } => {
+                let (ids, specs) = self.resident_specs(gpu);
+                if ids.is_empty() {
+                    // Every candidate completed during the checkpoint window
+                    // — nothing to profile; hand the GPU back instead of
+                    // running a profiling round on an empty device (the
+                    // engine fires `on_transition_done` since !busy).
+                    self.release_gpu_if_empty(gpu);
+                    return;
+                }
                 // Jobs progress during profiling at the mean speed across
                 // the three MPS levels (the profiler cycles through them).
-                let (ids, specs) = self.resident_specs(gpu);
                 let mut padded = specs.clone();
                 while padded.len() < 7 {
                     padded.push(WorkloadSpec::dummy());
@@ -430,9 +626,9 @@ impl ClusterState {
                     }
                 }
                 for (i, id) in ids.iter().enumerate() {
-                    self.jobs.get_mut(id).unwrap().state = JobState::MpsRun { speed: mean[i] };
+                    self.set_state(*id, JobState::MpsRun { speed: mean[i] });
                 }
-                self.timers.push(Timer {
+                self.push_timer(Timer {
                     at: self.now + profile_s,
                     gpu,
                     kind: TimerKind::ProfilingDone,
@@ -444,13 +640,15 @@ impl ClusterState {
                 // blocked with ~zero remaining work); drop them from the
                 // snapshot so they are not resurrected onto a slice.
                 assignment.retain(|_, id| !matches!(self.jobs[id].state, JobState::Done));
-                for (&si, id) in &assignment {
+                let mut entries: Vec<(usize, JobId)> =
+                    assignment.iter().map(|(&si, &id)| (si, id)).collect();
+                entries.sort_unstable();
+                for (si, id) in entries {
                     let kind = config.slices[si].kind;
-                    let spec = self.jobs[id].job.spec;
+                    let spec = self.jobs[&id].job.spec;
                     let speed = mig_speed(&spec, kind);
-                    let js = self.jobs.get_mut(id).unwrap();
-                    js.state = JobState::MigRun { speed };
-                    js.gpu = Some(gpu);
+                    self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
+                    self.set_state(id, JobState::MigRun { speed });
                 }
                 self.gpus[gpu].gpu.mode = GpuMode::Mig { config, assignment };
                 self.gpus[gpu].busy = false;
@@ -461,10 +659,14 @@ impl ClusterState {
             }
             Pending::ToMigProfiling { total_s, avg_speed } => {
                 let (ids, _) = self.resident_specs(gpu);
-                for id in ids {
-                    self.jobs.get_mut(&id).unwrap().state = JobState::Idle { speed: avg_speed };
+                if ids.is_empty() {
+                    self.release_gpu_if_empty(gpu);
+                    return;
                 }
-                self.timers.push(Timer {
+                for id in ids {
+                    self.set_state(id, JobState::Idle { speed: avg_speed });
+                }
+                self.push_timer(Timer {
                     at: self.now + total_s,
                     gpu,
                     kind: TimerKind::ProfilingDone,
@@ -483,8 +685,10 @@ pub trait Policy {
     /// A new job entered the queue (already registered in `st.jobs`).
     fn on_arrival(&mut self, st: &mut ClusterState, id: JobId);
 
-    /// `id` finished and has been removed from its GPU.
-    fn on_completion(&mut self, st: &mut ClusterState, gpu: usize, id: JobId);
+    /// `id` finished. `gpu` is the GPU it was removed from — `None` when a
+    /// zero-work job completed straight out of the queue without ever being
+    /// placed.
+    fn on_completion(&mut self, st: &mut ClusterState, gpu: Option<usize>, id: JobId);
 
     /// A profiling window (MPS or sequential-MIG) completed on `gpu`.
     fn on_profiling_done(&mut self, st: &mut ClusterState, gpu: usize);
@@ -517,13 +721,21 @@ pub struct Engine {
     pub st: ClusterState,
     /// Jobs arrived but not yet done.
     live: usize,
+    /// Jobs ever submitted (completed = submitted − live).
+    submitted: usize,
 }
 
 impl Engine {
     pub fn new(cfg: SystemConfig) -> Engine {
-        let mut st = ClusterState::new(cfg);
+        Self::with_core(cfg, EventCore::Indexed)
+    }
+
+    /// Build an engine on an explicit event core (the Scan core exists for
+    /// parity testing and instrumentation; production paths use Indexed).
+    pub fn with_core(cfg: SystemConfig, core: EventCore) -> Engine {
+        let mut st = ClusterState::with_core(cfg, core);
         st.metrics.sample_stp(0.0, 0.0);
-        Engine { st, live: 0 }
+        Engine { st, live: 0, submitted: 0 }
     }
 
     /// Number of jobs arrived but not completed.
@@ -531,182 +743,186 @@ impl Engine {
         self.live
     }
 
-    /// Earliest pending *internal* event (timer expiry or job completion)
-    /// strictly relevant at or after `now`. `None` when nothing is pending.
-    pub fn next_event(&self) -> Option<f64> {
-        let mut t_next = f64::INFINITY;
-        for t in &self.st.timers {
-            t_next = t_next.min(t.at);
-        }
-        for id in &self.st.active {
-            let j = &self.st.jobs[id];
-            let sp = j.state.speed();
-            if sp > 0.0 && j.remaining > 0.0 {
-                t_next = t_next.min(self.st.now + j.remaining / sp);
-                if let Some(b) = j.phase_boundary() {
-                    if j.remaining > b {
-                        t_next = t_next.min(self.st.now + (j.remaining - b) / sp);
-                    }
-                }
-            }
-        }
-        t_next.is_finite().then_some(t_next)
+    /// Number of jobs ever submitted.
+    pub fn submitted_jobs(&self) -> usize {
+        self.submitted
+    }
+
+    /// Number of completed jobs — O(1), no job-table scan.
+    pub fn completed_jobs(&self) -> usize {
+        self.submitted - self.live
+    }
+
+    /// Event-core instrumentation counters.
+    pub fn stats(&self) -> CoreStats {
+        self.st.stats
+    }
+
+    /// Earliest pending *internal* event (timer expiry, job completion, or
+    /// phase crossing). `None` when nothing is pending. `&mut` because the
+    /// indexed core discards stale heap entries while peeking.
+    pub fn next_event(&mut self) -> Option<f64> {
+        let t = self.st.next_internal_event();
+        t.is_finite().then_some(t)
     }
 
     /// Inject a job arriving *now* (live mode) or at `job.arrival == now`
     /// (trace replay). Registers it, queues it, and notifies the policy.
     pub fn submit(&mut self, policy: &mut dyn Policy, job: Job) {
         self.live += 1;
+        self.submitted += 1;
         self.st.metrics.on_arrival(job.id, self.st.now, job.work);
         let id = job.id;
+        let now = self.st.now;
         self.st.jobs.insert(
             id,
-            JobSim { remaining: job.work, job, state: JobState::Queued, gpu: None },
+            JobSim {
+                remaining: job.work,
+                job,
+                state: JobState::Queued,
+                gpu: None,
+                accrued_to: now,
+                complete_at: f64::INFINITY,
+                phase_at: f64::INFINITY,
+                epoch: 0,
+            },
         );
-        self.st.active.push(id);
+        self.st.active.insert(id);
         self.st.queue.push_back(id);
+        // Schedules an immediate completion for zero-work submissions.
+        self.st.reschedule(id);
         policy.on_arrival(&mut self.st, id);
         let stp = self.st.instant_stp();
         self.st.metrics.sample_stp(self.st.now, stp);
     }
 
     /// Advance virtual time to `t_target`, firing every internal event on
-    /// the way (completions, transition/profiling timers) in order.
+    /// the way (completions, phase crossings, transition/profiling timers)
+    /// in order.
     pub fn advance_to(&mut self, policy: &mut dyn Policy, t_target: f64) {
-        let st = &mut self.st;
         loop {
-            // Next internal event, capped at the target.
-            let mut t_next = t_target;
-            for t in &st.timers {
-                t_next = t_next.min(t.at);
-            }
-            for id in &st.active {
-                let j = &st.jobs[id];
-                let sp = j.state.speed();
-                if sp > 0.0 && j.remaining > 0.0 {
-                    t_next = t_next.min(st.now + j.remaining / sp);
-                    if let Some(b) = j.phase_boundary() {
-                        if j.remaining > b {
-                            t_next = t_next.min(st.now + (j.remaining - b) / sp);
-                        }
-                    }
-                }
-            }
-            let t_next = t_next.max(st.now);
-            let dt = t_next - st.now;
-
-            // --- advance time: accrue stages + progress ---
-            if dt > 0.0 {
-                let ids: Vec<JobId> = st.active.clone();
-                for id in ids {
-                    let j = st.jobs.get_mut(&id).unwrap();
-                    match j.state {
-                        JobState::Queued => st.metrics.record(id).queue_s += dt,
-                        JobState::MigRun { speed } => {
-                            st.metrics.record(id).mig_exec_s += dt;
-                            st.jobs.get_mut(&id).unwrap().remaining -= speed * dt;
-                        }
-                        JobState::MpsRun { speed } => {
-                            st.metrics.record(id).mps_s += dt;
-                            st.jobs.get_mut(&id).unwrap().remaining -= speed * dt;
-                        }
-                        JobState::Blocked => st.metrics.record(id).checkpoint_s += dt,
-                        JobState::Idle { speed } => {
-                            st.metrics.record(id).idle_s += dt;
-                            st.jobs.get_mut(&id).unwrap().remaining -= speed * dt;
-                        }
-                        JobState::Done => {}
-                    }
-                }
-            }
-            st.now = t_next;
-
-            // --- phase changes (Sec. 4.3) ---
-            let crossed: Vec<JobId> = st
-                .active
-                .iter()
-                .filter(|id| {
-                    let j = &st.jobs[*id];
-                    matches!(j.phase_boundary(), Some(b) if j.remaining <= b + EPS)
-                        && j.remaining > EPS
-                })
-                .copied()
-                .collect();
-            for id in crossed {
-                let j = st.jobs.get_mut(&id).unwrap();
-                let next_spec = j.job.phase.take().unwrap().next_spec;
-                let old_speed = j.state.speed();
-                j.job.spec = next_spec;
-                // The job's speed on its current slice changes immediately
-                // (this is the observable signal MISO's monitoring sees).
-                let gpu = j.gpu;
-                if let (Some(g), JobState::MigRun { .. }) = (gpu, j.state) {
-                    if let Some(kind) = st.gpus[g].gpu.slice_of(id) {
-                        let sp = mig_speed(&next_spec, kind);
-                        st.jobs.get_mut(&id).unwrap().state = JobState::MigRun { speed: sp };
-                    }
-                }
-                if let (Some(g), JobState::MpsRun { .. }) = (gpu, st.jobs[&id].state) {
-                    // Permanent-MPS co-location: the whole GPU's contention
-                    // pattern shifts.
-                    if !st.gpus[g].busy {
-                        st.refresh_permanent_mps_speeds(g);
-                    }
-                }
-                let new_speed = st.jobs[&id].state.speed();
-                if let Some(g) = gpu {
-                    policy.on_phase_change(st, g, id, old_speed, new_speed);
-                }
-            }
-
-            // --- completions ---
-            let finished: Vec<(JobId, usize)> = st
-                .active
-                .iter()
-                .filter_map(|id| {
-                    let j = &st.jobs[id];
-                    (j.remaining <= EPS && j.gpu.is_some()).then(|| (*id, j.gpu.unwrap()))
-                })
-                .collect();
-            for (id, gpu) in finished {
-                let j = st.jobs.get_mut(&id).unwrap();
-                j.state = JobState::Done;
-                j.remaining = 0.0;
-                st.gpus[gpu].gpu.remove_job(id);
-                st.metrics.on_completion(id, st.now);
-                if let Some(pos) = st.active.iter().position(|&a| a == id) {
-                    st.active.swap_remove(pos);
-                }
-                self.live -= 1;
-                policy.on_completion(st, gpu, id);
-            }
-
-            // --- timers ---
-            let due: Vec<Timer> = {
-                let (due, rest): (Vec<Timer>, Vec<Timer>) =
-                    st.timers.iter().copied().partition(|t| t.at <= st.now + EPS);
-                st.timers = rest;
-                due
+            let t_next = {
+                let st = &mut self.st;
+                st.events.maybe_compact(&st.jobs, st.active.len());
+                st.next_internal_event().min(t_target).max(st.now)
             };
+            // Lazy accrual: nothing per-job happens on a plain time step —
+            // stage times and progress are settled when a job's state
+            // changes (`touch`), not on every event.
+            self.st.now = t_next;
+            self.st.stats.events += 1;
+
+            // --- phase changes (Sec. 4.3), then completions, at this
+            //     instant, each in canonical job-id order ---
+            let (phases, completions) = self.st.due_job_events();
+            for id in phases {
+                self.process_phase_crossing(policy, id);
+            }
+            for id in completions {
+                self.process_completion(policy, id);
+            }
+
+            // --- timers: collected *after* completions so a zero-delay
+            //     transition pushed by a completion handler fires within
+            //     this instant ---
+            let due = self.st.due_timers();
             for t in due {
                 match t.kind {
                     TimerKind::TransitionDone => {
-                        st.fire_transition(t.gpu);
-                        if !st.gpus[t.gpu].busy {
-                            policy.on_transition_done(st, t.gpu);
+                        self.st.fire_transition(t.gpu);
+                        if !self.st.gpus[t.gpu].busy {
+                            policy.on_transition_done(&mut self.st, t.gpu);
                         }
                     }
-                    TimerKind::ProfilingDone => policy.on_profiling_done(st, t.gpu),
+                    TimerKind::ProfilingDone => policy.on_profiling_done(&mut self.st, t.gpu),
                 }
             }
 
-            let stp = st.instant_stp();
-            st.metrics.sample_stp(st.now, stp);
+            let stp = self.st.instant_stp();
+            self.st.metrics.sample_stp(self.st.now, stp);
 
             if t_next >= t_target - EPS {
                 return;
             }
         }
+    }
+
+    /// Handle a due phase-boundary crossing for `id`.
+    fn process_phase_crossing(&mut self, policy: &mut dyn Policy, id: JobId) {
+        let st = &mut self.st;
+        st.touch(id);
+        {
+            let j = &st.jobs[&id];
+            if matches!(j.state, JobState::Done) || j.job.phase.is_none() {
+                return;
+            }
+            let b = j.phase_boundary().unwrap();
+            if j.remaining > b + EPS || j.remaining <= EPS {
+                // Spurious wake-up: the boundary is not actually reached
+                // (stale event) or the job is about to complete — re-arm.
+                st.reschedule(id);
+                return;
+            }
+        }
+        let (next_spec, old_speed, gpu) = {
+            let j = st.jobs.get_mut(&id).unwrap();
+            let next_spec = j.job.phase.take().unwrap().next_spec;
+            let old_speed = j.state.speed();
+            j.job.spec = next_spec;
+            (next_spec, old_speed, j.gpu)
+        };
+        // The job's speed on its current slice changes immediately
+        // (this is the observable signal MISO's monitoring sees).
+        match (gpu, st.jobs[&id].state) {
+            (Some(g), JobState::MigRun { .. }) => {
+                if let Some(kind) = st.gpus[g].gpu.slice_of(id) {
+                    let sp = mig_speed(&next_spec, kind);
+                    st.set_state(id, JobState::MigRun { speed: sp });
+                } else {
+                    st.reschedule(id);
+                }
+            }
+            (Some(g), JobState::MpsRun { .. }) if !st.gpus[g].busy => {
+                // Permanent-MPS co-location: the whole GPU's contention
+                // pattern shifts (this reschedules `id` too).
+                st.refresh_permanent_mps_speeds(g);
+            }
+            // Boundary consumed with no speed change — clear the event.
+            _ => st.reschedule(id),
+        }
+        let new_speed = st.jobs[&id].state.speed();
+        if let Some(g) = gpu {
+            policy.on_phase_change(st, g, id, old_speed, new_speed);
+        }
+    }
+
+    /// Handle a due completion for `id`.
+    fn process_completion(&mut self, policy: &mut dyn Policy, id: JobId) {
+        let st = &mut self.st;
+        st.touch(id);
+        {
+            let j = &st.jobs[&id];
+            if matches!(j.state, JobState::Done) {
+                return;
+            }
+            if j.remaining > EPS {
+                // Spurious wake-up (stale event) — re-arm from fresh state.
+                st.reschedule(id);
+                return;
+            }
+        }
+        let gpu = st.jobs[&id].gpu;
+        st.jobs.get_mut(&id).unwrap().remaining = 0.0;
+        st.set_state(id, JobState::Done);
+        if let Some(g) = gpu {
+            st.gpus[g].gpu.remove_job(id);
+        }
+        // A zero-work job may complete straight out of the queue.
+        st.queue.remove(id);
+        st.active.remove(&id);
+        st.metrics.on_completion(id, st.now);
+        self.live -= 1;
+        policy.on_completion(st, gpu, id);
     }
 
     /// Fire internal events until no live jobs remain. This is the
@@ -740,7 +956,28 @@ impl Engine {
 /// (`advance_to` + `submit` + `run_until_idle`) — the fleet layer drives
 /// many engines through the same seam in lock-step.
 pub fn run(policy: &mut dyn Policy, trace: &[Job], cfg: SystemConfig) -> RunMetrics {
-    let mut eng = Engine::new(cfg);
+    run_with_core(policy, trace, cfg, EventCore::Indexed)
+}
+
+/// [`run`] on an explicit event core (the Scan core is the parity oracle).
+pub fn run_with_core(
+    policy: &mut dyn Policy,
+    trace: &[Job],
+    cfg: SystemConfig,
+    core: EventCore,
+) -> RunMetrics {
+    run_instrumented(policy, trace, cfg, core).0
+}
+
+/// [`run_with_core`] also returning the event-core instrumentation
+/// counters (used by `benches/simulator.rs` to quantify per-event work).
+pub fn run_instrumented(
+    policy: &mut dyn Policy,
+    trace: &[Job],
+    cfg: SystemConfig,
+    core: EventCore,
+) -> (RunMetrics, CoreStats) {
+    let mut eng = Engine::with_core(cfg, core);
     policy.init(&mut eng.st);
 
     let mut arrivals: Vec<Job> = trace.to_vec();
@@ -759,5 +996,110 @@ pub fn run(policy: &mut dyn Policy, trace: &[Job], cfg: SystemConfig) -> RunMetr
     }
     eng.run_until_idle(policy);
 
-    eng.finish()
+    let stats = eng.stats();
+    (eng.finish(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelFamily;
+
+    /// A policy that never places anything — isolates engine behaviour.
+    struct ParkPolicy;
+    impl Policy for ParkPolicy {
+        fn name(&self) -> &str {
+            "park"
+        }
+        fn on_arrival(&mut self, _: &mut ClusterState, _: JobId) {}
+        fn on_completion(&mut self, _: &mut ClusterState, _: Option<usize>, _: JobId) {}
+        fn on_profiling_done(&mut self, _: &mut ClusterState, _: usize) {}
+    }
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0))
+    }
+
+    #[test]
+    fn zero_work_job_completes_while_queued() {
+        // Regression: a job whose remaining work is 0 while Queued used to
+        // fail the `gpu.is_some()` completion filter and stall the engine
+        // into the run_until_idle panic.
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        eng.submit(&mut p, Job::new(0, spec(), 0.0, 0.0));
+        assert_eq!(eng.live_jobs(), 1);
+        eng.run_until_idle(&mut p);
+        assert_eq!(eng.live_jobs(), 0);
+        assert_eq!(eng.completed_jobs(), 1);
+        let m = eng.finish();
+        assert_eq!(m.records.len(), 1);
+        assert_eq!(m.records[0].completion, m.records[0].arrival);
+    }
+
+    #[test]
+    fn permanent_mps_enforces_seven_job_cap() {
+        // Regression: the MPS-only join path had no resident cap while
+        // every MIG path capped at 7 via can_host.
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        for i in 0..9u64 {
+            eng.submit(&mut p, Job::new(i, spec(), 0.0, 100.0));
+        }
+        let mut accepted = 0;
+        for i in 0..9u64 {
+            if eng.st.join_mps_permanent(0, JobId(i)) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 7, "eighth and ninth joins must be refused");
+        assert_eq!(eng.st.gpus[0].gpu.job_count(), 7);
+        assert_eq!(eng.st.queue.len(), 2, "overflow stays queued");
+        // Residents progress and finish; the two parked jobs stay queued
+        // (run_until_idle would rightly flag them as a stall).
+        eng.advance_to(&mut p, 1e9);
+        assert_eq!(eng.live_jobs(), 2, "only the queued overflow remains");
+    }
+
+    #[test]
+    fn release_gpu_if_empty_requires_empty_and_idle() {
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        eng.submit(&mut p, Job::new(0, spec(), 0.0, 100.0));
+        assert!(eng.st.release_gpu_if_empty(0), "fresh GPU is releasable");
+        eng.st.begin_mps_profiling(0, &[JobId(0)]);
+        assert!(!eng.st.release_gpu_if_empty(0), "transition in flight");
+        assert!(eng.st.gpus[0].busy);
+    }
+
+    #[test]
+    fn scan_and_indexed_cores_agree_on_a_trace() {
+        use crate::scheduler::MisoPolicy;
+        let trace = crate::workload::TraceGenerator::new(crate::workload::TraceConfig {
+            num_jobs: 30,
+            mean_interarrival_s: 20.0,
+            max_duration_s: 900.0,
+            min_duration_s: 60.0,
+            seed: 3,
+            ..Default::default()
+        })
+        .generate();
+        let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+        let a = run_with_core(&mut MisoPolicy::paper(9), &trace, cfg.clone(), EventCore::Scan);
+        let b = run_with_core(&mut MisoPolicy::paper(9), &trace, cfg, EventCore::Indexed);
+        assert_eq!(a.digest(), b.digest(), "event cores must be bit-identical");
+    }
+
+    #[test]
+    fn remaining_at_projects_progress() {
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        eng.submit(&mut p, Job::new(0, spec(), 0.0, 100.0));
+        assert!(eng.st.assign_to_free_slice(0, JobId(0)));
+        // Full 7g slice → speed 1. Advance 40 s without a state change: the
+        // stored `remaining` is stale, the projection is not.
+        eng.advance_to(&mut p, 40.0);
+        let js = &eng.st.jobs[&JobId(0)];
+        assert!((js.remaining_at(eng.st.now) - 60.0).abs() < 1e-6);
+    }
 }

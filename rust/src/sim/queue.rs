@@ -1,0 +1,161 @@
+//! FCFS controller queue with O(1) tombstone removal.
+//!
+//! Placement paths used to run `VecDeque::retain` on every dequeue — O(queue)
+//! per placed job, O(queue²) per drain under congestion (DESIGN.md §Perf).
+//! [`JobQueue`] instead drops the id from a membership set in O(1) and leaves
+//! the slot behind as a tombstone, discarded lazily when it reaches the head.
+
+use crate::util::FastSet;
+use crate::workload::JobId;
+use std::collections::VecDeque;
+
+/// FCFS queue of job ids (head = next to place) with O(1) removal from the
+/// middle via tombstones.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    /// FCFS slots; entries absent from `members` are tombstones.
+    slots: VecDeque<JobId>,
+    /// Live membership — the source of truth for `len`/`contains`.
+    members: FastSet<JobId>,
+    /// Removed ids whose slot has not yet been compacted away. Only needed
+    /// to keep a re-enqueued id from resurrecting its old slot.
+    tombstoned: FastSet<JobId>,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// Number of live (still-queued) jobs.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn contains(&self, id: JobId) -> bool {
+        self.members.contains(&id)
+    }
+
+    /// Enqueue at the tail. No-op if `id` is already queued.
+    pub fn push_back(&mut self, id: JobId) {
+        if self.prepare_insert(id) {
+            self.slots.push_back(id);
+        }
+    }
+
+    /// Enqueue at the head (used to restore a job pulled out of the queue
+    /// by a placement that had to be abandoned). No-op if already queued.
+    pub fn push_front(&mut self, id: JobId) {
+        if self.prepare_insert(id) {
+            self.slots.push_front(id);
+        }
+    }
+
+    /// Insert into the membership set, purging a stale tombstone slot if
+    /// the id was queued and removed before. Returns false if already live.
+    fn prepare_insert(&mut self, id: JobId) -> bool {
+        if !self.members.insert(id) {
+            return false;
+        }
+        if self.tombstoned.remove(&id) {
+            // Rare path (re-enqueue after removal): drop the old slot so the
+            // id cannot appear twice in FCFS order.
+            self.slots.retain(|&q| q != id);
+        }
+        true
+    }
+
+    /// Head of the queue (earliest live entry), compacting tombstones.
+    pub fn front(&mut self) -> Option<JobId> {
+        while let Some(&head) = self.slots.front() {
+            if self.members.contains(&head) {
+                return Some(head);
+            }
+            self.slots.pop_front();
+            self.tombstoned.remove(&head);
+        }
+        None
+    }
+
+    /// O(1) removal: drop membership and leave the slot as a tombstone.
+    /// Returns whether `id` was queued.
+    pub fn remove(&mut self, id: JobId) -> bool {
+        if self.members.remove(&id) {
+            self.tombstoned.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Live entries in FCFS order.
+    pub fn iter(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.slots.iter().copied().filter(|id| self.members.contains(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(q: &JobQueue) -> Vec<u64> {
+        q.iter().map(|id| id.0).collect()
+    }
+
+    #[test]
+    fn fcfs_order_and_len() {
+        let mut q = JobQueue::new();
+        for i in 0..5 {
+            q.push_back(JobId(i));
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(ids(&q), vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.front(), Some(JobId(0)));
+    }
+
+    #[test]
+    fn middle_removal_is_tombstoned_not_shifted() {
+        let mut q = JobQueue::new();
+        for i in 0..4 {
+            q.push_back(JobId(i));
+        }
+        assert!(q.remove(JobId(1)));
+        assert!(!q.remove(JobId(1)), "double removal is a no-op");
+        assert_eq!(q.len(), 3);
+        assert!(!q.contains(JobId(1)));
+        assert_eq!(ids(&q), vec![0, 2, 3]);
+        // Head removal + front() compacts through tombstones.
+        assert!(q.remove(JobId(0)));
+        assert_eq!(q.front(), Some(JobId(2)));
+        assert_eq!(ids(&q), vec![2, 3]);
+    }
+
+    #[test]
+    fn drain_to_empty() {
+        let mut q = JobQueue::new();
+        q.push_back(JobId(7));
+        assert_eq!(q.front(), Some(JobId(7)));
+        q.remove(JobId(7));
+        assert_eq!(q.front(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reenqueue_after_removal_does_not_duplicate() {
+        let mut q = JobQueue::new();
+        q.push_back(JobId(1));
+        q.push_back(JobId(2));
+        q.remove(JobId(1));
+        // Old slot for 1 is still a tombstone; re-enqueue must not revive it.
+        q.push_front(JobId(1));
+        assert_eq!(ids(&q), vec![1, 2]);
+        assert_eq!(q.len(), 2);
+        // Duplicate pushes are no-ops.
+        q.push_back(JobId(1));
+        assert_eq!(ids(&q), vec![1, 2]);
+    }
+}

@@ -40,6 +40,11 @@ impl Hasher for FastHasher {
 /// Drop-in `HashMap` with the fast hasher.
 pub type FastMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FastHasher>>;
 
+/// Drop-in `HashSet` with the fast hasher (the simulator's active-job set:
+/// O(1) insert/remove where a `Vec` + `swap_remove` cost O(n) per
+/// completion).
+pub type FastSet<T> = std::collections::HashSet<T, BuildHasherDefault<FastHasher>>;
+
 #[cfg(test)]
 mod tests {
     use super::*;

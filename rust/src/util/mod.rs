@@ -9,6 +9,6 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 
-pub use fasthash::FastMap;
+pub use fasthash::{FastMap, FastSet};
 pub use rng::Rng;
 pub use stats::Summary;

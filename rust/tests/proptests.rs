@@ -9,9 +9,9 @@ use miso::optimizer::{optimize, optimize_bruteforce, SpeedupTable};
 use miso::perfmodel::{mig_speed, mps_speeds, MpsLevel};
 use miso::predictor::features::profile_mps_matrix;
 use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, OptStaPolicy};
-use miso::sim::{run, Policy};
+use miso::sim::{run, run_with_core, ClusterState, EventCore, Policy};
 use miso::util::Rng;
-use miso::workload::{TraceConfig, TraceGenerator, WorkloadSpec};
+use miso::workload::{Job, JobId, TraceConfig, TraceGenerator, WorkloadSpec};
 use miso::SystemConfig;
 
 /// Run `f` on `cases` seeded cases; panic with the seed on failure.
@@ -296,6 +296,136 @@ fn prop_oracle_weakly_dominates_overhead_free_miso() {
             oracle.avg_jct(),
             miso_m.avg_jct()
         );
+    });
+}
+
+// ---------------------------------------------------------------- event core
+
+/// A generated trace with adversarial features folded in: zero-work jobs
+/// (complete before they can be placed — the historical stall) and mid-run
+/// phase changes (speed changes that stress lazy event invalidation).
+fn adversarial_trace(rng: &mut Rng) -> Vec<Job> {
+    let mut trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 16 + rng.below(24),
+        mean_interarrival_s: 5.0 + rng.f64() * 60.0,
+        max_duration_s: 900.0,
+        min_duration_s: 60.0,
+        phase_change_prob: 0.3,
+        seed: rng.next_u64(),
+        ..Default::default()
+    })
+    .generate();
+    for (i, j) in trace.iter_mut().enumerate() {
+        if i % 5 == 0 {
+            j.work = 0.0;
+            j.phase = None; // a zero-work job has no mid-run boundary
+        }
+    }
+    trace
+}
+
+fn all_policies(seed: u64) -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(NoPartPolicy::new()),
+        Box::new(OptStaPolicy::abacus()),
+        Box::new(MisoPolicy::paper(seed)),
+        Box::new(MisoPolicy::oracle()),
+        Box::new(MpsOnlyPolicy::new()),
+    ]
+}
+
+#[test]
+fn prop_adversarial_traces_never_stall_any_policy() {
+    // Stall regression (run by CI as a named step): random traces with
+    // zero-work and phase-change jobs must complete under every policy —
+    // the engine used to panic "simulation stalled" when a queued job's
+    // remaining work hit zero before placement.
+    for_all("no-stall", 10, |rng| {
+        let trace = adversarial_trace(rng);
+        let cfg = SystemConfig {
+            num_gpus: 1 + rng.below(4),
+            checkpoint_s: rng.f64() * 20.0,
+            mig_reconfig_s: rng.f64() * 6.0,
+            ..SystemConfig::testbed()
+        };
+        for mut p in all_policies(rng.next_u64()) {
+            let m = run(p.as_mut(), &trace, cfg.clone());
+            assert_eq!(m.records.len(), trace.len(), "{} lost jobs", p.name());
+            for r in &m.records {
+                assert!(
+                    r.completion >= r.arrival,
+                    "{}: job {} never completed",
+                    p.name(),
+                    r.id
+                );
+                assert!(
+                    (r.stage_sum() - r.jct()).abs() < 1e-3,
+                    "{}: job {} stages {} != jct {}",
+                    p.name(),
+                    r.id,
+                    r.stage_sum(),
+                    r.jct()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_event_cores_agree_bit_for_bit() {
+    // Old-vs-new parity: the heap-indexed core must reproduce the linear
+    // scan core's RunMetrics digest exactly, on traces that exercise lazy
+    // invalidation hard (phase changes, zero-work jobs, checkpoints).
+    for_all("event-core-parity", 8, |rng| {
+        let trace = adversarial_trace(rng);
+        let cfg = SystemConfig {
+            num_gpus: 1 + rng.below(4),
+            checkpoint_s: rng.f64() * 20.0,
+            ..SystemConfig::testbed()
+        };
+        let seed = rng.next_u64();
+        let scan = all_policies(seed);
+        let indexed = all_policies(seed);
+        for (mut a, mut b) in scan.into_iter().zip(indexed) {
+            let m_scan = run_with_core(a.as_mut(), &trace, cfg.clone(), EventCore::Scan);
+            let m_idx = run_with_core(b.as_mut(), &trace, cfg.clone(), EventCore::Indexed);
+            assert_eq!(
+                m_scan.digest(),
+                m_idx.digest(),
+                "{}: scan vs indexed cores disagree",
+                a.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_zero_work_jobs_complete_even_when_never_placed() {
+    // Direct stall regression: a policy that refuses to place anything
+    // must still see zero-work jobs drain (they complete out of the queue).
+    struct ParkPolicy;
+    impl Policy for ParkPolicy {
+        fn name(&self) -> &str {
+            "park"
+        }
+        fn on_arrival(&mut self, _: &mut ClusterState, _: JobId) {}
+        fn on_completion(&mut self, _: &mut ClusterState, _: Option<usize>, _: JobId) {}
+        fn on_profiling_done(&mut self, _: &mut ClusterState, _: usize) {}
+    }
+    for_all("zero-work-park", 20, |rng| {
+        let n = 1 + rng.below(8) as u64;
+        let mut t = 0.0;
+        let trace: Vec<Job> = (0..n)
+            .map(|i| {
+                t += rng.f64() * 30.0;
+                Job::new(i, TraceGenerator::sample_spec(rng), t, 0.0)
+            })
+            .collect();
+        let m = run(&mut ParkPolicy, &trace, SystemConfig::testbed());
+        assert_eq!(m.records.len(), trace.len());
+        for r in &m.records {
+            assert_eq!(r.completion, r.arrival, "zero-work job {} has zero JCT", r.id);
+        }
     });
 }
 
