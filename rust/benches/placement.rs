@@ -1,0 +1,187 @@
+//! Bench: placement-core drain throughput — indexed placement queries
+//! ([`miso::sim::PlacementIndex`]) vs the naive all-GPU feasibility rescan
+//! the pre-index drains ran, at 8–64 GPUs with deep queues (DESIGN.md
+//! §Perf). The acceptance bar: the indexed drain beats the naive scan on
+//! the 64-GPU deep-queue configuration (asserted below, since both sides
+//! must also agree on every pick before timing starts).
+//!
+//! Writes the measured baseline to `BENCH_placement.json` (repo root when
+//! run via `cargo bench --bench placement` from `rust/`, else the current
+//! directory) — the perf-trajectory record future PRs append to.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use miso::mig::ALL_CONFIGS;
+use miso::scheduler::MisoPolicy;
+use miso::sim::{run, ClusterState, Engine, Policy};
+use miso::util::json::Value;
+use miso::workload::{Job, JobId, TraceConfig, TraceGenerator, WorkloadSpec};
+use miso::SystemConfig;
+
+/// A policy that parks everything — residents and the queue are staged
+/// manually so the drain queries can be timed in isolation.
+struct ParkPolicy;
+impl Policy for ParkPolicy {
+    fn name(&self) -> &str {
+        "park"
+    }
+    fn on_arrival(&mut self, _: &mut ClusterState, _: JobId) {}
+    fn on_completion(&mut self, _: &mut ClusterState, _: Option<usize>, _: JobId) {}
+    fn on_profiling_done(&mut self, _: &mut ClusterState, _: usize) {}
+}
+
+/// A slice-sized job (fits 1g.5gb) with enough work that nothing
+/// completes while the drain queries are being timed.
+fn small_job(id: u64) -> Job {
+    let mut j = Job::new(id, WorkloadSpec::mlp(), 0.0, 10_000.0);
+    j.requirements.min_memory_mb = 2_000.0;
+    j
+}
+
+/// Cluster of `gpus` GPUs, each (1g×7)-partitioned with
+/// `residents_per_gpu` small residents, plus `queued` waiting jobs whose
+/// QoS floors are mixed so queries hit different spare buckets.
+fn build_state(gpus: usize, residents_per_gpu: usize, queued: usize) -> Engine {
+    let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
+    let mut eng = Engine::new(cfg);
+    let mut park = ParkPolicy;
+    let seven_way = ALL_CONFIGS
+        .iter()
+        .find(|c| c.gpc_multiset() == vec![1; 7])
+        .expect("7×1g config")
+        .clone();
+    let mut next = 0u64;
+    for g in 0..gpus {
+        eng.st.install_partition(g, seven_way.clone());
+        for _ in 0..residents_per_gpu {
+            eng.submit(&mut park, small_job(next));
+            assert!(eng.st.assign_to_free_slice(g, JobId(next)));
+            next += 1;
+        }
+    }
+    for i in 0..queued {
+        let mut j = small_job(next);
+        j.requirements.min_slice_gpcs = [0u8, 0, 0, 2, 0, 3, 0, 7][i % 8];
+        eng.submit(&mut park, j);
+        next += 1;
+    }
+    eng
+}
+
+/// The pre-index pick: exact mix-feasibility rescan over every GPU,
+/// least-loaded tie-break — the query the old drains ran per queued job.
+fn naive_pick(st: &ClusterState, id: JobId) -> Option<usize> {
+    let job = &st.jobs[&id].job;
+    (0..st.gpus.len())
+        .filter(|&g| st.can_host_all(g, &[job]))
+        .min_by_key(|&g| st.gpus[g].residents().len())
+}
+
+/// The indexed pick: spare-bucket lookup.
+fn indexed_pick(st: &ClusterState, id: JobId) -> Option<usize> {
+    st.jobs[&id]
+        .job
+        .min_feasible_slice()
+        .and_then(|k| st.placement().least_loaded_host(k.gpcs()))
+}
+
+fn naive_drain(st: &ClusterState, ids: &[JobId]) -> usize {
+    ids.iter().filter(|&&id| naive_pick(st, id).is_some()).count()
+}
+
+fn indexed_drain(st: &ClusterState, ids: &[JobId]) -> usize {
+    ids.iter().filter(|&&id| indexed_pick(st, id).is_some()).count()
+}
+
+fn main() {
+    let mut records: Vec<Value> = Vec::new();
+    const QUEUE: usize = 512;
+    const RESIDENTS: usize = 3;
+
+    section("drain feasibility pass: indexed vs naive (deep queue)");
+    let mut speedup_at_64 = 0.0;
+    for &gpus in &[8usize, 16, 32, 64] {
+        let eng = build_state(gpus, RESIDENTS, QUEUE);
+        let ids: Vec<JobId> = eng.st.queue.iter().collect();
+        assert_eq!(ids.len(), QUEUE);
+
+        // Both sides must agree on every pick before timing means anything
+        // (same helpers the timed drains below call).
+        for &id in &ids {
+            assert_eq!(
+                naive_pick(&eng.st, id),
+                indexed_pick(&eng.st, id),
+                "picks disagree at {gpus} GPUs for job {id}"
+            );
+        }
+
+        let naive_p50 = bench(&format!("naive scan    {gpus:>2} GPUs × {QUEUE} queued"), || {
+            naive_drain(&eng.st, &ids)
+        });
+        let idx_p50 = bench(&format!("indexed       {gpus:>2} GPUs × {QUEUE} queued"), || {
+            indexed_drain(&eng.st, &ids)
+        });
+        let speedup = naive_p50 / idx_p50.max(1e-12);
+        println!("=> {speedup:.1}x at {gpus} GPUs");
+        if gpus == 64 {
+            speedup_at_64 = speedup;
+        }
+        records.push(Value::obj([
+            ("kind", Value::str("drain")),
+            ("gpus", Value::num(gpus as f64)),
+            ("queued", Value::num(QUEUE as f64)),
+            ("residents_per_gpu", Value::num(RESIDENTS as f64)),
+            ("naive_p50_s", Value::num(naive_p50)),
+            ("indexed_p50_s", Value::num(idx_p50)),
+            ("speedup", Value::num(speedup)),
+        ]));
+    }
+    assert!(
+        speedup_at_64 > 1.0,
+        "indexed drain must beat the naive scan on the 64-GPU deep-queue config (got {speedup_at_64:.2}x)"
+    );
+
+    section("end-to-end MISO under congestion (drains dominate)");
+    for &gpus in &[8usize, 32] {
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 1_000,
+            mean_interarrival_s: 3.0,
+            seed: 42,
+            ..Default::default()
+        })
+        .generate();
+        let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
+        let p50 = bench(&format!("MISO {gpus:>2} GPUs, 1000 jobs, λ=3 s"), || {
+            run(&mut MisoPolicy::paper(7), &trace, cfg.clone())
+        });
+        records.push(Value::obj([
+            ("kind", Value::str("end-to-end")),
+            ("gpus", Value::num(gpus as f64)),
+            ("jobs", Value::num(1_000.0)),
+            ("p50_s", Value::num(p50)),
+            ("jobs_per_s", Value::num(1_000.0 / p50)),
+        ]));
+    }
+
+    // Perf-trajectory record: repo root if we can see it, else cwd.
+    let out = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_placement.json"
+    } else {
+        "BENCH_placement.json"
+    };
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0.0, |d| d.as_secs_f64());
+    let doc = Value::obj([
+        ("bench", Value::str("placement")),
+        ("status", Value::str("measured")),
+        ("unix_time_s", Value::num(unix_s)),
+        ("results", Value::arr(records)),
+    ]);
+    match std::fs::write(out, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote baseline to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

@@ -31,9 +31,9 @@
 //! event loop is sequential within the node, so fleet results are
 //! bit-identical across runs *and across worker-thread counts* — the
 //! property `tests/fleet.rs` locks in via [`FleetMetrics::digest`]. The
-//! per-node engines run the indexed event core ([`crate::sim::EventCore`]),
-//! which processes same-instant events in a canonical order precisely so
-//! this digest stays thread-count-independent.
+//! per-node engines process same-instant events in a canonical order
+//! (DESIGN.md §Perf) precisely so this digest stays
+//! thread-count-independent.
 
 mod router;
 
@@ -74,8 +74,10 @@ impl Default for FleetConfig {
 /// The router's view of one node at a routing instant: everything a real
 /// cluster gateway could cheaply learn from a node heartbeat. Cheap to
 /// snapshot — `live_jobs`, `queued`, and `instant_stp` are O(1) counters
-/// in the engine (the indexed event core maintains STP incrementally), so
-/// only the per-GPU shape scan costs O(GPUs).
+/// in the engine, and the shape facts (spare capacity, free slices) are
+/// O(1) reads from the node's placement index
+/// ([`crate::sim::PlacementIndex`]), so a snapshot costs O(GPUs) with no
+/// per-GPU feasibility math and no allocation per GPU.
 #[derive(Debug, Clone)]
 pub struct NodeView {
     pub node: usize,
@@ -89,15 +91,33 @@ pub struct NodeView {
     /// GPUs with no residents and no transition in flight — whole GPUs a
     /// large job could claim.
     pub empty_gpus: usize,
-    /// GPUs already fragmented (some residents, but ≥ 1 GPC of headroom
-    /// and < 7 jobs) — where small jobs pack for free.
+    /// GPUs already fragmented (some residents but spare capacity left) —
+    /// where small jobs pack without costing whole-GPU inventory.
     pub partial_gpus: usize,
-    /// GPUs with no remaining headroom.
+    /// GPUs with no spare capacity (or mid-transition while empty).
     pub full_gpus: usize,
-    /// Largest per-GPU GPC headroom among the partial GPUs (0 if none).
-    pub max_partial_headroom: u8,
+    /// Largest exact max-spare slice (GPCs) among the partial GPUs — how
+    /// big a job could still join an occupied GPU after the node's
+    /// controller repartitions around its residents (0 if none).
+    pub max_spare_gpcs: u8,
+    /// Free MIG slices by kind (1g, 2g, 3g, 4g, 7g) exposed by the current
+    /// partitions of *occupied*, placeable GPUs — real fragmentation a job
+    /// could occupy immediately, straight from the placement index.
+    pub free_slices: [usize; 5],
     /// Instantaneous cluster STP of the node (Eq. 1).
     pub instant_stp: f64,
+}
+
+impl NodeView {
+    /// Whether the node exposes a free MIG slice of at least `min_gpcs`
+    /// GPCs on an occupied GPU — capacity a small job could take
+    /// immediately, with no reconfiguration.
+    pub fn has_free_slice(&self, min_gpcs: u8) -> bool {
+        crate::mig::SCHEDULABLE_SLICES
+            .iter()
+            .enumerate()
+            .any(|(i, k)| k.gpcs() >= min_gpcs && self.free_slices[i] > 0)
+    }
 }
 
 /// One datacenter node: engine + owned policy instance.
@@ -132,13 +152,15 @@ impl FleetNode {
     /// Snapshot the node for routing.
     pub fn view(&self) -> NodeView {
         let st = &self.engine.st;
+        let pl = st.placement();
         let mut empty = 0;
         let mut partial = 0;
         let mut full = 0;
         let mut resident = 0;
-        let mut max_headroom = 0u8;
+        let mut max_spare = 0u8;
+        let mut free_slices = [0usize; 5];
         for g in &st.gpus {
-            let count = g.gpu.job_count();
+            let count = g.residents().len();
             resident += count;
             if count == 0 {
                 // A busy zero-resident GPU is mid-transition — typically
@@ -153,22 +175,22 @@ impl FleetNode {
                 }
                 continue;
             }
-            // Conservative headroom: 7 GPCs minus the smallest feasible
-            // slice of every resident (a job that fits nowhere commits the
-            // whole GPU). Cheaper than the exact `mix_feasible` check and
-            // only used for ranking, never for admission.
-            let committed: u32 = g
-                .gpu
-                .resident_jobs()
-                .iter()
-                .map(|id| u32::from(st.jobs[id].job.min_feasible_slice().map_or(7, |k| k.gpcs())))
-                .sum();
-            let headroom = 7u32.saturating_sub(committed) as u8;
-            if count >= 7 || headroom == 0 {
+            // Exact spare capacity from the placement index (the facts are
+            // maintained through busy windows): the largest slice a new
+            // job could still get after repartitioning around the current
+            // residents. Replaces the committed-GPC headroom proxy.
+            let spare = pl.spare_gpcs(g.gpu.id);
+            if count >= 7 || spare == 0 {
                 full += 1;
             } else {
                 partial += 1;
-                max_headroom = max_headroom.max(headroom);
+                max_spare = max_spare.max(spare);
+            }
+            // Real fragmentation: free slices the current partition of an
+            // occupied, placeable GPU exposes right now (busy GPUs report
+            // zero by construction).
+            for (i, k) in crate::mig::SCHEDULABLE_SLICES.iter().enumerate() {
+                free_slices[i] += usize::from(pl.free_slices_of(g.gpu.id, *k));
             }
         }
         NodeView {
@@ -180,7 +202,8 @@ impl FleetNode {
             empty_gpus: empty,
             partial_gpus: partial,
             full_gpus: full,
-            max_partial_headroom: max_headroom,
+            max_spare_gpcs: max_spare,
+            free_slices,
             instant_stp: st.instant_stp(),
         }
     }
@@ -345,5 +368,7 @@ mod tests {
         assert_eq!(v.partial_gpus, 0);
         assert_eq!(v.full_gpus, 0);
         assert_eq!(v.queued + v.live_jobs + v.resident_jobs, 0);
+        assert_eq!(v.free_slices, [0; 5], "fragment slices only count occupied GPUs");
+        assert_eq!(v.max_spare_gpcs, 0);
     }
 }

@@ -83,20 +83,25 @@ impl Router for LeastLoaded {
 }
 
 /// MIG-fragmentation-aware routing (after arXiv:2511.18906): score nodes
-/// by slice-shape fit rather than raw load.
+/// by slice-shape fit rather than raw load, on the *real* fragmentation
+/// signals the per-node placement index exports through [`NodeView`] —
+/// free-slice counts and exact max-spare capacity, not the
+/// committed-GPC/resident-count proxy this router originally used.
 ///
 /// * **Large jobs** (smallest feasible slice ≥ 4 GPCs — they monopolize a
 ///   GPU or nearly so) go to the node with the most *whole* (empty) GPUs,
 ///   so they start without waiting for a node to defragment.
-/// * **Small jobs** join a node whose already-fragmented GPUs still have
-///   headroom — consuming capacity whole-GPU tenants cannot use anyway and
-///   leaving empty GPUs empty — but at *shallow* depth: among fitting
-///   fragmented nodes the one with the fewest residents wins, and nodes
-///   already averaging ≥ 3 residents per touched GPU are passed over while
-///   fresh capacity exists (beyond ~3-way co-location the per-job slices
-///   get small enough that packing deeper costs more throughput than it
-///   saves fragmentation — the same sweet spot behind the paper's 3-job
-///   MPS cap).
+/// * **Small jobs** pack onto fragmented nodes, preferring one exposing a
+///   **free slice** the job could occupy immediately (no reset), then one
+///   whose occupied GPUs still have **spare capacity** after the node's
+///   controller repartitions — consuming capacity whole-GPU tenants
+///   cannot use anyway and leaving empty GPUs empty. Packing stays at
+///   *shallow* depth: among fitting fragmented nodes the one with the
+///   fewest residents wins, and nodes already averaging ≥ 3 residents per
+///   touched GPU are passed over while fresh capacity exists (beyond
+///   ~3-way co-location the per-job slices get small enough that packing
+///   deeper costs more throughput than it saves fragmentation — the same
+///   sweet spot behind the paper's 3-job MPS cap).
 /// * Saturated fleet: fall back to least-loaded.
 ///
 /// Only nodes with an empty controller queue count as having usable
@@ -126,13 +131,26 @@ impl Router for FragAware {
         }
 
         // Small job: shallowest fitting fragmented node below the depth cap.
+        let shallow = |v: &&NodeView| {
+            let touched = (v.num_gpus - v.empty_gpus).max(1);
+            v.resident_jobs < PACK_DEPTH * touched
+        };
+        // (a) A node with a *free slice* the job could take immediately —
+        //     real fragmentation, zero disruption.
         if let Some(v) = views
             .iter()
-            .filter(|v| v.queued == 0 && v.partial_gpus > 0 && v.max_partial_headroom >= need)
-            .filter(|v| {
-                let touched = (v.num_gpus - v.empty_gpus).max(1);
-                v.resident_jobs < PACK_DEPTH * touched
-            })
+            .filter(|v| v.queued == 0 && v.has_free_slice(need))
+            .filter(shallow)
+            .min_by_key(|v| (v.resident_jobs, Reverse(v.partial_gpus), v.node))
+        {
+            return v.node;
+        }
+        // (b) A node whose occupied GPUs still have exact spare capacity
+        //     for the job once its controller repartitions.
+        if let Some(v) = views
+            .iter()
+            .filter(|v| v.queued == 0 && v.partial_gpus > 0 && v.max_spare_gpcs >= need)
+            .filter(shallow)
             .min_by_key(|v| (v.resident_jobs, Reverse(v.partial_gpus), v.node))
         {
             return v.node;
@@ -149,7 +167,7 @@ impl Router for FragAware {
         // No fresh capacity: any fitting fragmented node, least loaded.
         if let Some(v) = views
             .iter()
-            .filter(|v| v.partial_gpus > 0 && v.max_partial_headroom >= need)
+            .filter(|v| v.partial_gpus > 0 && (v.has_free_slice(need) || v.max_spare_gpcs >= need))
             .min_by_key(|v| (v.live_jobs, v.node))
         {
             return v.node;
@@ -178,7 +196,8 @@ mod tests {
             empty_gpus: 2,
             partial_gpus: 0,
             full_gpus: 0,
-            max_partial_headroom: 0,
+            max_spare_gpcs: 0,
+            free_slices: [0; 5],
             instant_stp: 0.0,
         }
     }
@@ -230,16 +249,16 @@ mod tests {
     #[test]
     fn frag_aware_packs_small_jobs_onto_fragmented_nodes() {
         let mut views: Vec<NodeView> = (0..3).map(view).collect();
-        // Nodes 1 and 2 are fragmented with headroom; node 0 is pristine.
-        // The shallower fragmented node (fewer residents) wins; pristine
-        // empty GPUs are left for whole-GPU tenants.
+        // Nodes 1 and 2 are fragmented with spare capacity; node 0 is
+        // pristine. The shallower fragmented node (fewer residents) wins;
+        // pristine empty GPUs are left for whole-GPU tenants.
         views[1].empty_gpus = 1;
         views[1].partial_gpus = 1;
-        views[1].max_partial_headroom = 4;
+        views[1].max_spare_gpcs = 4;
         views[1].resident_jobs = 2;
         views[2].empty_gpus = 1;
         views[2].partial_gpus = 1;
-        views[2].max_partial_headroom = 4;
+        views[2].max_spare_gpcs = 4;
         views[2].resident_jobs = 1;
         assert_eq!(FragAware.route(&small_job(0), &views), 2, "shallowest fragmented fit wins");
 
@@ -249,12 +268,36 @@ mod tests {
     }
 
     #[test]
+    fn frag_aware_prefers_real_free_slices_over_spare_capacity() {
+        let mut views: Vec<NodeView> = (0..3).map(view).collect();
+        // Node 1: spare capacity after a repartition and *fewer* residents
+        // — it would win on the spare path. Node 2: an actual free 2g
+        // slice the job can occupy immediately, which outranks capacity
+        // that first needs a reconfiguration.
+        views[1].empty_gpus = 1;
+        views[1].partial_gpus = 1;
+        views[1].max_spare_gpcs = 4;
+        views[1].resident_jobs = 1;
+        views[2].empty_gpus = 1;
+        views[2].partial_gpus = 1;
+        views[2].max_spare_gpcs = 2;
+        views[2].resident_jobs = 2;
+        views[2].free_slices = [0, 1, 0, 0, 0]; // one free 2g.10gb
+        assert!(views[2].has_free_slice(1));
+        assert_eq!(
+            FragAware.route(&small_job(0), &views),
+            2,
+            "an immediately assignable slice beats repartition potential"
+        );
+    }
+
+    #[test]
     fn frag_aware_depth_cap_diverts_to_fresh_capacity() {
         let mut views: Vec<NodeView> = (0..2).map(view).collect();
         // Node 0: single touched GPU already at 3 residents (depth cap).
         views[0].empty_gpus = 1;
         views[0].partial_gpus = 1;
-        views[0].max_partial_headroom = 3;
+        views[0].max_spare_gpcs = 3;
         views[0].resident_jobs = 3;
         // Node 1: all empty.
         assert_eq!(

@@ -88,6 +88,11 @@ impl Gpu {
     /// universe: the largest slice kind `k` such that some valid config has
     /// `job_count + 1` slices with one slice ≥ k... conservatively, the
     /// largest slice in any (m+1)-way config (m = current job count).
+    ///
+    /// Count-based and residents-blind, so it over-estimates for
+    /// constrained mixes; the simulator's placement decisions use the
+    /// *exact* per-resident spare maintained by
+    /// [`crate::sim::PlacementIndex`] instead.
     pub fn max_spare_slice(&self) -> Option<SliceKind> {
         let m = self.job_count();
         if m >= 7 {

@@ -83,11 +83,12 @@ impl MisoPolicy {
     }
 
     /// Least-loaded GPU that can host the job (Sec. 4.3's placement rule).
+    /// An indexed lookup over feasible candidates only — the placement
+    /// index's exact max-spare-slice buckets replace the all-GPU
+    /// `can_host` rescan (DESIGN.md §Perf; parity pinned in `tests/`).
     fn pick_gpu(&self, st: &ClusterState, id: JobId) -> Option<usize> {
-        let job = &st.jobs[&id].job;
-        (0..st.gpus.len())
-            .filter(|&g| st.can_host(g, job))
-            .min_by_key(|&g| st.gpus[g].gpu.job_count())
+        let min_gpcs = st.jobs[&id].job.min_feasible_slice()?.gpcs();
+        st.placement().least_loaded_host(min_gpcs)
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
@@ -130,9 +131,11 @@ impl MisoPolicy {
                             if self.tables.contains_key(&cand) {
                                 continue; // fast-path jobs are placed directly
                             }
-                            if (0..st.gpus.len())
-                                .any(|g| g != gpu && st.can_host(g, &st.jobs[&cand].job))
-                            {
+                            let elsewhere = st.jobs[&cand]
+                                .job
+                                .min_feasible_slice()
+                                .map_or(false, |k| st.placement().has_other_host(k.gpcs(), gpu));
+                            if elsewhere {
                                 continue; // drain will place it elsewhere
                             }
                             let jobs: Vec<&crate::workload::Job> = batch

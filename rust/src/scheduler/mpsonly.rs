@@ -18,18 +18,25 @@ impl MpsOnlyPolicy {
     fn drain(&mut self, st: &mut ClusterState) {
         while let Some(id) = st.queue.front() {
             let job_mem = st.jobs[&id].job.spec.mem_mb;
-            let pick = (0..st.gpus.len())
-                .filter(|&g| {
-                    let cnt = st.gpus[g].gpu.job_count();
-                    if cnt >= self.max_per_gpu {
-                        return false;
-                    }
-                    // aggregate footprint must fit the 40 GB card
-                    let (_, specs) = st.resident_specs(g);
-                    let used: f64 = specs.iter().map(|s| s.mem_mb).sum();
-                    used + job_mem <= 40_000.0
-                })
-                .min_by_key(|&g| st.gpus[g].gpu.job_count());
+            // Indexed: walk GPUs in (resident count, id) order and stop at
+            // the per-GPU cap — only under-cap candidates are visited, and
+            // the footprint sum reads the cached resident list (no clone).
+            let mut pick = None;
+            for (count, g) in st.placement().hosts_by_load() {
+                if count as usize >= self.max_per_gpu {
+                    break; // ordered by load: everything later is fuller
+                }
+                // aggregate footprint must fit the 40 GB card
+                let used: f64 = st.gpus[g]
+                    .residents()
+                    .iter()
+                    .map(|jid| st.jobs[jid].job.spec.mem_mb)
+                    .sum();
+                if used + job_mem <= 40_000.0 {
+                    pick = Some(g);
+                    break;
+                }
+            }
             match pick {
                 // join enforces the sim-level 7-resident cap; a refusal
                 // (cap hit despite our own 3-job limit) keeps the job

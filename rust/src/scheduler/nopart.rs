@@ -14,9 +14,9 @@ impl NoPartPolicy {
 
     fn drain(&mut self, st: &mut ClusterState) {
         while let Some(id) = st.queue.front() {
-            let free = (0..st.gpus.len())
-                .find(|&g| !st.gpus[g].busy && st.gpus[g].gpu.job_count() == 0);
-            match free {
+            // Indexed: lowest-id empty placeable GPU (spare = 7g ⟺ empty),
+            // replacing the all-GPU rescan per queued job.
+            match st.placement().first_empty_gpu() {
                 Some(g) => {
                     let ok = st.assign_to_free_slice(g, id);
                     debug_assert!(ok, "empty unpartitioned GPU must accept any job");

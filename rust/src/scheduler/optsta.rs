@@ -14,7 +14,6 @@ use crate::mig::MigConfig;
 use crate::perfmodel::mig_speed;
 use crate::sim::{ClusterState, Policy};
 use crate::workload::{Job, JobId};
-use std::collections::HashMap;
 
 pub struct OptStaPolicy {
     config: MigConfig,
@@ -37,26 +36,20 @@ impl OptStaPolicy {
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
-        'queue: while let Some(id) = st.queue.front() {
-            // Pick the GPU offering the smallest fitting free slice.
-            let job = st.jobs[&id].job.clone();
-            let mut best: Option<(usize, u8)> = None; // (gpu, gpcs)
-            for g in 0..st.gpus.len() {
-                if st.gpus[g].busy {
-                    continue;
-                }
-                if let Some(k) = smallest_fitting_free(st, g, &job) {
-                    if best.map_or(true, |(_, bg)| k < bg) {
-                        best = Some((g, k));
-                    }
-                }
-            }
-            match best {
-                Some((g, _)) => {
+        while let Some(id) = st.queue.front() {
+            // Indexed: the free-slice buckets answer "which GPU offers the
+            // smallest fitting free slice" directly (kinds ascending, ties
+            // by GPU id — the same order the all-GPU rescan produced).
+            let host = st.jobs[&id]
+                .job
+                .min_assignable_slice()
+                .and_then(|k| st.placement().smallest_free_slice_host(k.gpcs()));
+            match host {
+                Some(g) => {
                     let ok = st.assign_to_free_slice(g, id);
                     debug_assert!(ok);
                 }
-                None => break 'queue,
+                None => break,
             }
         }
     }
@@ -71,7 +64,7 @@ impl OptStaPolicy {
             // Iterate residents in slice order, not HashMap order: with a
             // strict '>' tie-break, equal-gain candidates (identical specs
             // on same-kind slices) must resolve deterministically or runs
-            // diverge bit-for-bit (event-core parity, fleet digests).
+            // diverge bit-for-bit (determinism pins, fleet digests).
             let mut residents: Vec<(usize, JobId)> =
                 assignment.iter().map(|(&s, &j)| (s, j)).collect();
             residents.sort_unstable();
@@ -102,18 +95,6 @@ impl OptStaPolicy {
     }
 }
 
-fn smallest_fitting_free(st: &ClusterState, gpu: usize, job: &Job) -> Option<u8> {
-    let GpuMode::Mig { config, assignment } = &st.gpus[gpu].gpu.mode else {
-        return None;
-    };
-    (0..config.len())
-        .filter(|si| !assignment.contains_key(si))
-        .map(|si| config.slices[si].kind)
-        .filter(|k| job.fits(*k) && job.spec.mem_mb <= f64::from(k.memory_mb()))
-        .map(|k| k.gpcs())
-        .min()
-}
-
 impl Policy for OptStaPolicy {
     fn name(&self) -> &str {
         "optsta"
@@ -121,11 +102,10 @@ impl Policy for OptStaPolicy {
 
     fn init(&mut self, st: &mut ClusterState) {
         // Pre-partition every GPU (no cost: happens before the trace).
+        // `install_partition` keeps the free-slice index in sync — writing
+        // `gpu.mode` directly would leave the drain blind to the slices.
         for g in 0..st.gpus.len() {
-            st.gpus[g].gpu.mode = GpuMode::Mig {
-                config: self.config.clone(),
-                assignment: HashMap::new(),
-            };
+            st.install_partition(g, self.config.clone());
         }
     }
 

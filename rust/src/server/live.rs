@@ -14,6 +14,11 @@
 //! QUIT                                                     -> closes the connection
 //! ```
 //!
+//! `JOBS` replies carry every queued/running job but only *recently*
+//! completed ones ([`JOBS_RETENTION_S`] virtual seconds): a long-lived
+//! gateway would otherwise serialize every job ever submitted on each
+//! poll. Aggregate history stays available through `METRICS`.
+//!
 //! The controller mirrors the paper's deployment: GPUs (simulated A100
 //! substrates) update job completion / partition state centrally; the
 //! controller decides placement; the MISO policy drives MPS profiling and
@@ -38,6 +43,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Retention window for completed jobs in `JOBS` replies, in virtual
+/// seconds: jobs that finished longer ago than this are dropped from the
+/// serialization (they remain in the engine's metrics).
+pub const JOBS_RETENTION_S: f64 = 600.0;
 
 /// A request forwarded from a connection thread to the controller.
 enum Request {
@@ -408,10 +418,16 @@ fn fleet_status_json(fleet: &FleetEngine, router: &str) -> Value {
 }
 
 fn jobs_json(engine: &Engine) -> Value {
+    let now = engine.st.now;
     let mut jobs: Vec<(&u64, Value)> = engine
         .st
         .jobs
         .iter()
+        .filter(|(_, j)| {
+            // Retention window: drop long-completed jobs so the reply does
+            // not grow with the server's entire submission history.
+            !matches!(j.state, JobState::Done) || now - j.completed_at <= JOBS_RETENTION_S
+        })
         .map(|(id, j)| {
             let state = match j.state {
                 JobState::Queued => "queued",
@@ -430,7 +446,7 @@ fn jobs_json(engine: &Engine) -> Value {
                     ("speed", Value::num(j.state.speed())),
                     // Progress accrues lazily in the engine; project it to
                     // the current instant for observers.
-                    ("remaining_s", Value::num(j.remaining_at(engine.st.now))),
+                    ("remaining_s", Value::num(j.remaining_at(now))),
                     ("gpu", j.gpu.map_or(Value::Null, |g| Value::num(g as f64))),
                 ]),
             )
@@ -620,6 +636,44 @@ mod tests {
     #[test]
     fn fleet_gateway_rejects_bad_router() {
         assert!(start_fleet(0, 2, 1, 60.0, "no-such-router").is_err());
+    }
+
+    #[test]
+    fn jobs_reply_drops_completed_jobs_past_retention() {
+        // Drive an engine directly (no TCP): a zero-work job completes at
+        // t=0, stays in JOBS replies inside the retention window, and is
+        // dropped from serialization once the window passes.
+        struct Park;
+        impl Policy for Park {
+            fn name(&self) -> &str {
+                "park"
+            }
+            fn on_arrival(&mut self, _: &mut crate::sim::ClusterState, _: crate::workload::JobId) {}
+            fn on_completion(
+                &mut self,
+                _: &mut crate::sim::ClusterState,
+                _: Option<usize>,
+                _: crate::workload::JobId,
+            ) {
+            }
+            fn on_profiling_done(&mut self, _: &mut crate::sim::ClusterState, _: usize) {}
+        }
+        let mut engine = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut policy = Park;
+        let spec = WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0));
+        engine.submit(&mut policy, Job::new(0, spec, 0.0, 0.0));
+        engine.run_until_idle(&mut policy);
+        assert_eq!(engine.completed_jobs(), 1);
+
+        let fresh = jobs_json(&engine).to_string();
+        assert!(fresh.contains("done"), "recent completion must be listed: {fresh}");
+
+        engine.advance_to(&mut policy, JOBS_RETENTION_S + 1.0);
+        let aged = jobs_json(&engine);
+        match aged {
+            Value::Arr(ref v) => assert!(v.is_empty(), "aged-out completion still listed: {aged}"),
+            _ => panic!("JOBS reply must be an array"),
+        }
     }
 
     #[test]

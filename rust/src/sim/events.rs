@@ -1,63 +1,49 @@
-//! Event cores for the discrete-event engine: how the engine finds the next
-//! internal event (job completion, phase-boundary crossing, GPU timer) and
-//! the set of events due at an instant.
+//! The event index of the discrete-event engine: how the engine finds the
+//! next internal event (job completion, phase-boundary crossing, GPU timer)
+//! and the set of events due at an instant.
 //!
-//! Two interchangeable implementations sit behind [`EventIndex`]:
+//! [`EventIndex`] keeps binary-heap event queues with *lazy invalidation*:
+//! every job carries an epoch counter bumped whenever its scheduled times
+//! change; heap entries stamped with an older epoch are stale and discarded
+//! on pop. A speed change is therefore O(log n) (bump + push) instead of
+//! forcing a rescan. GPU timers are **owned outright** by the index — armed
+//! once via [`EventIndex::on_timer`], popped exactly once when due; there is
+//! no parallel source-of-truth vec to keep mirrored (timers are never
+//! cancelled, so they need no invalidation).
 //!
-//! * [`EventCore::Scan`] — the reference core: linear scans over the active
-//!   job set and the timer list. O(active + timers) per event, obviously
-//!   correct, kept as the oracle for the old-vs-new parity tests.
-//! * [`EventCore::Indexed`] — binary-heap event queues with *lazy
-//!   invalidation*: every job carries an epoch counter bumped whenever its
-//!   scheduled times change; heap entries stamped with an older epoch are
-//!   stale and discarded on pop. A speed change is therefore O(log n)
-//!   (bump + push) instead of forcing a full rescan. O(log n) per event.
-//!
-//! Both cores read the same *stored* per-job event times
-//! (`JobSim::complete_at` / `JobSim::phase_at`, written only by
-//! `ClusterState::reschedule`) and the same timer list, and never do
-//! arithmetic of their own — so they produce bit-identical simulations by
-//! construction, and the parity tests in `tests/proptests.rs` pin the
-//! invalidation logic (the risky part) against the exhaustive scans.
+//! The index never does arithmetic of its own: it only searches over the
+//! *stored* per-job event times (`JobSim::complete_at` / `JobSim::phase_at`,
+//! written only by `ClusterState::reschedule`). The linear-scan reference
+//! core (`EventCore::Scan`) that originally served as the parity oracle was
+//! retired after several PRs of bit-identical parity-proptest history; the
+//! invalidation invariants it pinned are documented in DESIGN.md §Perf, and
+//! the placement index has its own naive-scan oracle in `tests/`.
 
 use super::{JobSim, Timer, TimerKind, EPS};
-use crate::util::{FastMap, FastSet};
+use crate::util::FastMap;
 use crate::workload::JobId;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// Which event core an engine runs on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EventCore {
-    /// Linear-scan reference core (parity oracle; O(active) per event).
-    Scan,
-    /// Heap-indexed core with lazy epoch invalidation (O(log n) per event).
-    Indexed,
-}
-
-/// Event-core instrumentation, reported by `benches/simulator.rs` to
-/// quantify the scan→heap win (DESIGN.md §Perf).
+/// Event-index instrumentation, reported by `benches/simulator.rs` to
+/// quantify per-event search work (DESIGN.md §Perf).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CoreStats {
     /// Engine loop iterations (one per processed instant).
     pub events: u64,
-    /// Job entries examined by linear scans (Scan core only).
-    pub job_scans: u64,
-    /// Heap insertions (Indexed core only).
+    /// Heap insertions.
     pub heap_pushes: u64,
     /// Heap removals, including stale entries discarded lazily.
     pub heap_pops: u64,
 }
 
 impl CoreStats {
-    /// Mean per-event work: scanned job entries (Scan) or heap operations
-    /// (Indexed) per processed instant. Counts *all* scheduling queries,
-    /// including the `next_event` calls `run_until_idle` issues between
-    /// `advance_to` invocations — the Scan core genuinely pays a full
-    /// rescan for each of those, the Indexed core an amortized peek — so
-    /// this is total search work per event, not just the in-loop scan.
+    /// Mean per-event search work: heap operations per processed instant.
+    /// Counts *all* scheduling queries, including the `next_event` calls
+    /// `run_until_idle` issues between `advance_to` invocations, so this is
+    /// total search work per event, not just the in-loop pops.
     pub fn work_per_event(&self) -> f64 {
-        let work = self.job_scans + self.heap_pushes + self.heap_pops;
+        let work = self.heap_pushes + self.heap_pops;
         work as f64 / self.events.max(1) as f64
     }
 }
@@ -129,33 +115,17 @@ fn timer_rank(kind: TimerKind) -> u8 {
     }
 }
 
-/// The pluggable event index (see module docs).
-pub(super) enum EventIndex {
-    Scan,
-    Indexed {
-        jobs: BinaryHeap<JobEntry>,
-        timers: BinaryHeap<TimerEntry>,
-        seq: u64,
-    },
+/// The engine's event index (see module docs). Owns both heaps, including
+/// the GPU-timer storage.
+pub(super) struct EventIndex {
+    jobs: BinaryHeap<JobEntry>,
+    timers: BinaryHeap<TimerEntry>,
+    seq: u64,
 }
 
 impl EventIndex {
-    pub(super) fn new(core: EventCore) -> EventIndex {
-        match core {
-            EventCore::Scan => EventIndex::Scan,
-            EventCore::Indexed => EventIndex::Indexed {
-                jobs: BinaryHeap::new(),
-                timers: BinaryHeap::new(),
-                seq: 0,
-            },
-        }
-    }
-
-    pub(super) fn core(&self) -> EventCore {
-        match self {
-            EventIndex::Scan => EventCore::Scan,
-            EventIndex::Indexed { .. } => EventCore::Indexed,
-        }
+    pub(super) fn new() -> EventIndex {
+        EventIndex { jobs: BinaryHeap::new(), timers: BinaryHeap::new(), seq: 0 }
     }
 
     /// A job's scheduled times changed (epoch already bumped by the
@@ -168,107 +138,79 @@ impl EventIndex {
         phase_at: f64,
         stats: &mut CoreStats,
     ) {
-        let EventIndex::Indexed { jobs, seq, .. } = self else { return };
         if complete_at.is_finite() {
-            *seq += 1;
-            jobs.push(JobEntry { at: complete_at, seq: *seq, epoch, id, kind: JobEventKind::Complete });
+            self.seq += 1;
+            self.jobs.push(JobEntry {
+                at: complete_at,
+                seq: self.seq,
+                epoch,
+                id,
+                kind: JobEventKind::Complete,
+            });
             stats.heap_pushes += 1;
         }
         if phase_at.is_finite() {
-            *seq += 1;
-            jobs.push(JobEntry { at: phase_at, seq: *seq, epoch, id, kind: JobEventKind::Phase });
+            self.seq += 1;
+            self.jobs.push(JobEntry {
+                at: phase_at,
+                seq: self.seq,
+                epoch,
+                id,
+                kind: JobEventKind::Phase,
+            });
             stats.heap_pushes += 1;
         }
     }
 
-    /// A GPU timer was armed. Timers are never cancelled, so they need no
+    /// Arm a GPU timer. Timers are never cancelled, so they need no
     /// invalidation — each entry pops exactly once.
     pub(super) fn on_timer(&mut self, t: Timer, stats: &mut CoreStats) {
-        let EventIndex::Indexed { timers, seq, .. } = self else { return };
-        *seq += 1;
-        timers.push(TimerEntry { at: t.at, seq: *seq, timer: t });
+        self.seq += 1;
+        self.timers.push(TimerEntry { at: t.at, seq: self.seq, timer: t });
         stats.heap_pushes += 1;
     }
 
-    /// Earliest pending event time (∞ when nothing is scheduled).
-    pub(super) fn next_time(
-        &mut self,
-        jobs: &FastMap<JobId, JobSim>,
-        active: &FastSet<JobId>,
-        timers: &[Timer],
-        stats: &mut CoreStats,
-    ) -> f64 {
-        match self {
-            EventIndex::Scan => {
-                let mut t = f64::INFINITY;
-                for timer in timers {
-                    t = t.min(timer.at);
-                }
-                for id in active {
-                    let j = &jobs[id];
-                    t = t.min(j.complete_at).min(j.phase_at);
-                }
-                stats.job_scans += active.len() as u64;
-                t
+    /// Earliest pending event time (∞ when nothing is scheduled). `&mut`
+    /// because stale job entries are discarded while peeking.
+    pub(super) fn next_time(&mut self, jobs: &FastMap<JobId, JobSim>, stats: &mut CoreStats) -> f64 {
+        // Discard stale entries until the top is live.
+        while let Some(top) = self.jobs.peek() {
+            let live = jobs.get(&top.id).is_some_and(|j| j.epoch == top.epoch);
+            if live {
+                break;
             }
-            EventIndex::Indexed { jobs: heap, timers: theap, .. } => {
-                // Discard stale entries until the top is live.
-                while let Some(top) = heap.peek() {
-                    let live = jobs.get(&top.id).is_some_and(|j| j.epoch == top.epoch);
-                    if live {
-                        break;
-                    }
-                    heap.pop();
-                    stats.heap_pops += 1;
-                }
-                let tj = heap.peek().map_or(f64::INFINITY, |e| e.at);
-                let tt = theap.peek().map_or(f64::INFINITY, |e| e.at);
-                tj.min(tt)
-            }
+            self.jobs.pop();
+            stats.heap_pops += 1;
         }
+        let tj = self.jobs.peek().map_or(f64::INFINITY, |e| e.at);
+        let tt = self.timers.peek().map_or(f64::INFINITY, |e| e.at);
+        tj.min(tt)
     }
 
     /// Job events due at `now` (within the engine's EPS slop), as
-    /// (phase crossings, completions), each sorted by job id so both cores
-    /// process the instant in one canonical order.
+    /// (phase crossings, completions), each sorted by job id so the instant
+    /// is processed in one canonical order.
     pub(super) fn due_jobs(
         &mut self,
         now: f64,
         jobs: &FastMap<JobId, JobSim>,
-        active: &FastSet<JobId>,
         stats: &mut CoreStats,
     ) -> (Vec<JobId>, Vec<JobId>) {
         let mut phases = Vec::new();
         let mut completions = Vec::new();
-        match self {
-            EventIndex::Scan => {
-                stats.job_scans += active.len() as u64;
-                for id in active {
-                    let j = &jobs[id];
-                    if j.phase_at <= now + EPS {
-                        phases.push(*id);
-                    }
-                    if j.complete_at <= now + EPS {
-                        completions.push(*id);
-                    }
-                }
+        while let Some(top) = self.jobs.peek() {
+            if top.at > now + EPS {
+                break;
             }
-            EventIndex::Indexed { jobs: heap, .. } => {
-                while let Some(top) = heap.peek() {
-                    if top.at > now + EPS {
-                        break;
-                    }
-                    let e = heap.pop().unwrap();
-                    stats.heap_pops += 1;
-                    let live = jobs.get(&e.id).is_some_and(|j| j.epoch == e.epoch);
-                    if !live {
-                        continue;
-                    }
-                    match e.kind {
-                        JobEventKind::Phase => phases.push(e.id),
-                        JobEventKind::Complete => completions.push(e.id),
-                    }
-                }
+            let e = self.jobs.pop().unwrap();
+            stats.heap_pops += 1;
+            let live = jobs.get(&e.id).is_some_and(|j| j.epoch == e.epoch);
+            if !live {
+                continue;
+            }
+            match e.kind {
+                JobEventKind::Phase => phases.push(e.id),
+                JobEventKind::Complete => completions.push(e.id),
             }
         }
         phases.sort_unstable();
@@ -276,45 +218,17 @@ impl EventIndex {
         (phases, completions)
     }
 
-    /// Timers due at `now`, removed from the source-of-truth `timers` vec
-    /// and returned in canonical (time, gpu, kind) order.
-    pub(super) fn due_timers(
-        &mut self,
-        now: f64,
-        timers: &mut Vec<Timer>,
-        stats: &mut CoreStats,
-    ) -> Vec<Timer> {
+    /// Timers due at `now`, removed from the heap (their only storage) and
+    /// returned in canonical (time, gpu, kind) order.
+    pub(super) fn due_timers(&mut self, now: f64, stats: &mut CoreStats) -> Vec<Timer> {
         let mut due: Vec<Timer> = Vec::new();
-        match self {
-            EventIndex::Scan => {
-                let mut rest = Vec::with_capacity(timers.len());
-                for t in timers.drain(..) {
-                    if t.at <= now + EPS {
-                        due.push(t);
-                    } else {
-                        rest.push(t);
-                    }
-                }
-                *timers = rest;
+        while let Some(top) = self.timers.peek() {
+            if top.at > now + EPS {
+                break;
             }
-            EventIndex::Indexed { timers: theap, .. } => {
-                while let Some(top) = theap.peek() {
-                    if top.at > now + EPS {
-                        break;
-                    }
-                    let e = theap.pop().unwrap();
-                    stats.heap_pops += 1;
-                    due.push(e.timer);
-                    // Mirror the removal in the source-of-truth vec (at most
-                    // one in-flight timer per GPU, so the match is unique).
-                    if let Some(pos) = timers
-                        .iter()
-                        .position(|t| t.gpu == e.timer.gpu && t.kind == e.timer.kind && t.at == e.timer.at)
-                    {
-                        timers.swap_remove(pos);
-                    }
-                }
-            }
+            let e = self.timers.pop().unwrap();
+            stats.heap_pops += 1;
+            due.push(e.timer);
         }
         due.sort_unstable_by(|a, b| {
             a.at.total_cmp(&b.at)
@@ -324,19 +238,19 @@ impl EventIndex {
         due
     }
 
-    /// Amortized garbage collection: when stale entries dominate the heap
-    /// (long live-server sessions with many speed changes), rebuild it from
-    /// the live entries only.
+    /// Amortized garbage collection: when stale entries dominate the job
+    /// heap (long live-server sessions with many speed changes), rebuild it
+    /// from the live entries only.
     pub(super) fn maybe_compact(&mut self, jobs_map: &FastMap<JobId, JobSim>, active_len: usize) {
-        let EventIndex::Indexed { jobs, .. } = self else { return };
         // Each active job has at most 2 live entries; a heap much larger
         // than that is mostly tombstones.
-        if jobs.len() > 64 && jobs.len() > 8 * active_len.max(8) {
-            let live: Vec<JobEntry> = jobs
+        if self.jobs.len() > 64 && self.jobs.len() > 8 * active_len.max(8) {
+            let live: Vec<JobEntry> = self
+                .jobs
                 .drain()
                 .filter(|e| jobs_map.get(&e.id).is_some_and(|j| j.epoch == e.epoch))
                 .collect();
-            *jobs = BinaryHeap::from(live);
+            self.jobs = BinaryHeap::from(live);
         }
     }
 }

@@ -13,24 +13,35 @@
 //! Lifecycle accounting matches Fig. 12's stages: queue, MPS (progressing),
 //! checkpoint (stopped), MIG execution, idle.
 //!
-//! # Event core (DESIGN.md §Perf)
+//! # Event index (DESIGN.md §Perf)
 //!
 //! Because speeds are piecewise-constant, every future event is known the
 //! moment a job's state is set: its completion instant and (if it carries a
 //! phase change) its boundary-crossing instant. [`ClusterState::reschedule`]
-//! stores both on the job and feeds them to the pluggable event index
-//! ([`EventCore`]): the default [`EventCore::Indexed`] core keeps them in
-//! binary heaps with lazy epoch invalidation (O(log n) per event), while
-//! [`EventCore::Scan`] recomputes by linear scan (O(active) per event) and
-//! serves as the parity oracle. Stage times accrue *lazily* — settled only
-//! when a job's state changes ([`ClusterState::touch`]) — and the
-//! cluster-wide instantaneous STP is an incrementally maintained
-//! accumulator, so an event costs O(log n), not O(active jobs).
+//! stores both on the job and feeds them to the event index
+//! ([`events::EventIndex`]): binary-heap event queues — jobs with lazy
+//! per-epoch invalidation, GPU timers owned outright — so an event costs
+//! O(log n). Stage times accrue *lazily* — settled only when a job's state
+//! changes ([`ClusterState::touch`]) — and the cluster-wide instantaneous
+//! STP is an incrementally maintained accumulator.
+//!
+//! # Placement index (DESIGN.md §Perf)
+//!
+//! "Which GPU can host this queued job" is the other hot query — fired per
+//! queued job on every drain. [`PlacementIndex`] caches each GPU's exact
+//! max-spare-slice and current free slices, bucketed by kind, so
+//! [`ClusterState::can_host`] is an O(1) compare and the policies' drain
+//! picks are indexed lookups instead of all-GPU rescans. Every GPU
+//! mutation funnels through [`ClusterState::reindex_gpu`]; a naive-scan
+//! parity oracle in `tests/proptests.rs` pins the index against the exact
+//! recomputation at every policy decision point.
 
 mod events;
+mod placement;
 mod queue;
 
-pub use events::{CoreStats, EventCore};
+pub use events::CoreStats;
+pub use placement::PlacementIndex;
 pub use queue::JobQueue;
 
 use crate::config::SystemConfig;
@@ -39,9 +50,10 @@ use crate::metrics::{MetricsCollector, RunMetrics};
 use crate::mig::{MigConfig, SliceKind};
 use crate::perfmodel::{mig_speed, mps_speeds, MPS_LEVELS};
 use crate::predictor::features::{profile_mps_matrix, MpsMatrix};
-use crate::util::{FastSet, Rng};
+use crate::util::Rng;
 use crate::workload::{Job, JobId, WorkloadSpec};
 use events::EventIndex;
+use placement::GpuFacts;
 use std::collections::HashMap;
 
 const EPS: f64 = 1e-7;
@@ -57,6 +69,9 @@ pub struct JobSim {
     pub(crate) remaining: f64,
     pub state: JobState,
     pub gpu: Option<usize>,
+    /// Completion instant (∞ until the job is Done) — read by observers
+    /// like the live server's JOBS retention window.
+    pub completed_at: f64,
     /// Instant up to which `remaining` and the metrics stage buckets have
     /// been settled (lazy accrual — DESIGN.md §Perf).
     accrued_to: f64,
@@ -133,6 +148,29 @@ pub struct GpuSim {
     /// True while a transition or profiling is in flight — the controller
     /// does not place new jobs on a busy GPU.
     pub busy: bool,
+    /// Cached resident list, sorted by job id — the allocation-free view
+    /// hot paths read instead of cloning out of `gpu.mode`. Synced by
+    /// [`ClusterState::reindex_gpu`], the funnel every GPU mutation passes
+    /// through.
+    residents: Vec<JobId>,
+}
+
+impl GpuSim {
+    /// Resident jobs in ascending id order, without cloning.
+    pub fn residents(&self) -> &[JobId] {
+        &self.residents
+    }
+
+    /// Rebuild the sorted resident cache from the device state (≤ 7
+    /// entries; the allocation is reused in place).
+    fn sync_residents(&mut self) {
+        self.residents.clear();
+        match &self.gpu.mode {
+            GpuMode::Mig { assignment, .. } => self.residents.extend(assignment.values().copied()),
+            GpuMode::Mps { jobs, .. } => self.residents.extend_from_slice(jobs),
+        }
+        self.residents.sort_unstable();
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -159,13 +197,13 @@ pub struct ClusterState {
     pub metrics: MetricsCollector,
     /// Noise source for MPS measurement (None = noise-free profiling).
     pub measure_rng: Option<Rng>,
-    /// Event-core instrumentation counters.
+    /// Event-index instrumentation counters.
     pub stats: CoreStats,
-    /// In-flight GPU timers (source of truth; the indexed core mirrors
-    /// them into its heap).
-    timers: Vec<Timer>,
-    /// Jobs not yet Done — the scan core's iteration set.
-    active: FastSet<JobId>,
+    /// Free-slice / spare-capacity placement index (read via
+    /// [`ClusterState::placement`]; written only by `reindex_gpu`).
+    placement: PlacementIndex,
+    /// Jobs not yet Done (sizes the event-heap compaction threshold).
+    active_jobs: usize,
     /// Incrementally maintained cluster STP (Eq. 1); updated on every speed
     /// change so reading it is O(1) instead of O(active).
     stp: f64,
@@ -174,14 +212,11 @@ pub struct ClusterState {
 
 impl ClusterState {
     pub fn new(cfg: SystemConfig) -> ClusterState {
-        Self::with_core(cfg, EventCore::Indexed)
-    }
-
-    pub fn with_core(cfg: SystemConfig, core: EventCore) -> ClusterState {
-        let gpus = (0..cfg.num_gpus)
-            .map(|i| GpuSim { gpu: Gpu::new(i), pending: None, busy: false })
+        let num_gpus = cfg.num_gpus;
+        let gpus = (0..num_gpus)
+            .map(|i| GpuSim { gpu: Gpu::new(i), pending: None, busy: false, residents: Vec::new() })
             .collect();
-        ClusterState {
+        let mut st = ClusterState {
             now: 0.0,
             cfg,
             gpus,
@@ -190,67 +225,85 @@ impl ClusterState {
             metrics: MetricsCollector::new(),
             measure_rng: Some(Rng::seed_from_u64(0x5eed)),
             stats: CoreStats::default(),
-            timers: Vec::new(),
-            active: FastSet::default(),
+            placement: PlacementIndex::new(num_gpus),
+            active_jobs: 0,
             stp: 0.0,
-            events: EventIndex::new(core),
+            events: EventIndex::new(),
+        };
+        for g in 0..num_gpus {
+            st.reindex_gpu(g);
         }
-    }
-
-    /// Which event core this state runs on.
-    pub fn event_core(&self) -> EventCore {
-        self.events.core()
+        st
     }
 
     // ---------- queries ----------
 
+    /// Resident job ids of `gpu` in ascending id order — the cached,
+    /// allocation-free view (the sorted order keeps fleet digests
+    /// deterministic; see DESIGN.md §Perf).
+    pub fn sorted_residents(&self, gpu: usize) -> &[JobId] {
+        self.gpus[gpu].residents()
+    }
+
     /// Specs of the real jobs resident on a GPU, in a stable order,
     /// together with their ids.
     pub fn resident_specs(&self, gpu: usize) -> (Vec<JobId>, Vec<WorkloadSpec>) {
-        let mut ids = self.gpus[gpu].gpu.resident_jobs();
-        ids.sort();
+        let ids: Vec<JobId> = self.gpus[gpu].residents().to_vec();
         let specs = ids.iter().map(|id| self.jobs[id].job.spec).collect();
         (ids, specs)
+    }
+
+    /// The placement index: exact per-GPU spare capacity and free slices,
+    /// bucketed for the policies' drain queries.
+    pub fn placement(&self) -> &PlacementIndex {
+        &self.placement
     }
 
     /// Whether `gpu` can host `job` in addition to its current residents:
     /// not busy, < 7 jobs, and some valid (m+1)-way partition gives every
     /// job (residents + new) a slice it fits on (memory + QoS) — the
-    /// controller's "maximum spare slice" record generalized to exactness.
+    /// controller's "maximum spare slice" record (Sec. 4.3). O(1): the
+    /// index caches the exact spare slice, so this is a compare, not a
+    /// feasibility search (the debug assertion pins it to the exact check).
     pub fn can_host(&self, gpu: usize, job: &Job) -> bool {
-        self.can_host_all(gpu, &[job])
+        let hosted = match job.min_feasible_slice() {
+            Some(k) => {
+                self.placement.is_placeable(gpu) && k.gpcs() <= self.placement.spare_gpcs(gpu)
+            }
+            None => false,
+        };
+        debug_assert_eq!(hosted, self.can_host_all(gpu, &[job]), "placement index vs exact check");
+        hosted
     }
 
     /// [`Self::can_host`] for a batch of new jobs joining together (the
-    /// profiling-batching optimization: one MPS round for several arrivals).
-    ///
-    /// Feasibility-only, so it uses the exact sorted-dominance check
-    /// ([`crate::mig::mix_feasible`]) instead of the Algorithm-1 DP — this
-    /// is the controller's hottest path (every queued job × every GPU on
-    /// every drain; see DESIGN.md §Perf).
+    /// profiling-batching optimization: one MPS round for several
+    /// arrivals). Runs the exact sorted-dominance check
+    /// ([`crate::mig::mix_feasible`]) on a stack buffer — allocation-free —
+    /// and doubles as the naive oracle the placement index is tested (and
+    /// benched) against.
     pub fn can_host_all(&self, gpu: usize, jobs: &[&Job]) -> bool {
         let g = &self.gpus[gpu];
-        if g.busy || g.gpu.job_count() + jobs.len() > 7 {
+        if g.busy || g.residents().len() + jobs.len() > 7 {
             return false;
         }
-        let mut min_gpcs: Vec<u8> = g
-            .gpu
-            .resident_jobs()
-            .iter()
-            .map(|id| &self.jobs[id].job)
-            .chain(jobs.iter().copied())
-            .map(|j| match j.min_feasible_slice() {
-                Some(k) => k.gpcs(),
-                None => u8::MAX, // cannot run anywhere
-            })
-            .collect();
-        min_gpcs.sort_unstable_by(|a, b| b.cmp(a));
-        crate::mig::mix_feasible(&min_gpcs)
+        let mut mins = [0u8; 7];
+        let mut n = 0;
+        for id in g.residents() {
+            mins[n] = self.jobs[id].job.min_feasible_slice().map_or(u8::MAX, |k| k.gpcs());
+            n += 1;
+        }
+        for j in jobs {
+            mins[n] = j.min_feasible_slice().map_or(u8::MAX, |k| k.gpcs());
+            n += 1;
+        }
+        mins[..n].sort_unstable_by(|a, b| b.cmp(a));
+        crate::mig::mix_feasible(&mins[..n])
     }
 
     /// Number of resident jobs per GPU.
     pub fn loads(&self) -> Vec<usize> {
-        self.gpus.iter().map(|g| g.gpu.job_count()).collect()
+        self.gpus.iter().map(|g| g.residents().len()).collect()
     }
 
     /// Cluster-wide instantaneous STP (Eq. 1): sum of normalized speeds of
@@ -260,7 +313,68 @@ impl ClusterState {
         self.stp.max(0.0)
     }
 
-    // ---------- event-core internals ----------
+    // ---------- placement-index internals ----------
+
+    /// Re-derive `gpu`'s cached resident list and placement facts from its
+    /// device state and diff them into the index. The single funnel every
+    /// mutation of a GPU's residents, partition, or busy flag passes
+    /// through — there is no incremental fact arithmetic to drift.
+    fn reindex_gpu(&mut self, gpu: usize) {
+        self.gpus[gpu].sync_residents();
+        let fresh = self.compute_gpu_facts(gpu);
+        self.placement.update(gpu, fresh);
+    }
+
+    fn compute_gpu_facts(&self, gpu: usize) -> GpuFacts {
+        let g = &self.gpus[gpu];
+        let placeable = !g.busy;
+        let mut free = [0u8; 8];
+        if placeable {
+            if let GpuMode::Mig { config, assignment } = &g.gpu.mode {
+                for (si, p) in config.slices.iter().enumerate() {
+                    if !assignment.contains_key(&si) {
+                        free[p.kind.gpcs() as usize] += 1;
+                    }
+                }
+            }
+        }
+        GpuFacts {
+            placeable,
+            count: g.residents().len() as u8,
+            spare_gpcs: self.exact_spare_gpcs(gpu),
+            free,
+        }
+    }
+
+    /// Exact max spare slice of `gpu`: the largest kind `k` such that some
+    /// valid partition hosts every current resident plus one new job whose
+    /// minimum feasible slice is `k` (0 = none). Exactness relies on
+    /// feasibility being monotone: a partition that hosts a mix hosts any
+    /// pointwise-smaller mix, so `can_host` reduces to comparing against
+    /// this value.
+    fn exact_spare_gpcs(&self, gpu: usize) -> u8 {
+        let res = self.gpus[gpu].residents();
+        let m = res.len();
+        if m >= 7 {
+            return 0;
+        }
+        let mut mins = [0u8; 8];
+        for (i, id) in res.iter().enumerate() {
+            mins[i] = self.jobs[id].job.min_feasible_slice().map_or(u8::MAX, |k| k.gpcs());
+        }
+        for k in [7u8, 4, 3, 2, 1] {
+            mins[m] = k;
+            let mut v = [0u8; 8];
+            v[..=m].copy_from_slice(&mins[..=m]);
+            v[..=m].sort_unstable_by(|a, b| b.cmp(a));
+            if crate::mig::mix_feasible(&v[..=m]) {
+                return k;
+            }
+        }
+        0
+    }
+
+    // ---------- event-index internals ----------
 
     /// Settle a job's lazily-accrued progress and stage time up to `now`.
     /// Invariant: called before any read-modify of `remaining` or any state
@@ -347,25 +461,50 @@ impl ClusterState {
         self.events.on_reschedule(id, epoch, complete_at, phase_at, &mut self.stats);
     }
 
-    /// Arm a GPU timer (source-of-truth vec + indexed heap).
+    /// Arm a GPU timer (owned by the event index).
     fn push_timer(&mut self, t: Timer) {
-        self.timers.push(t);
         self.events.on_timer(t, &mut self.stats);
     }
 
     fn next_internal_event(&mut self) -> f64 {
-        self.events.next_time(&self.jobs, &self.active, &self.timers, &mut self.stats)
+        self.events.next_time(&self.jobs, &mut self.stats)
     }
 
     fn due_job_events(&mut self) -> (Vec<JobId>, Vec<JobId>) {
-        self.events.due_jobs(self.now, &self.jobs, &self.active, &mut self.stats)
+        self.events.due_jobs(self.now, &self.jobs, &mut self.stats)
     }
 
     fn due_timers(&mut self) -> Vec<Timer> {
-        self.events.due_timers(self.now, &mut self.timers, &mut self.stats)
+        self.events.due_timers(self.now, &mut self.stats)
+    }
+
+    /// Checkpoint every resident of `gpu` (state → Blocked), in sorted-id
+    /// order. The cached list is copied to a stack buffer because
+    /// `set_state` needs `&mut self`.
+    fn block_residents(&mut self, gpu: usize) {
+        let mut buf = [JobId(0); 7];
+        let n = {
+            let r = self.sorted_residents(gpu);
+            buf[..r.len()].copy_from_slice(r);
+            r.len()
+        };
+        for &id in &buf[..n] {
+            self.set_state(id, JobState::Blocked);
+        }
     }
 
     // ---------- mechanics (what the real server API exposes) ----------
+
+    /// Install a MIG partition on an **empty, idle** GPU with no jobs
+    /// assigned — OptSta's offline pre-partitioning (free: it happens
+    /// before the trace starts). Policies must use this rather than writing
+    /// `gpu.mode` directly so the placement index stays in sync.
+    pub fn install_partition(&mut self, gpu: usize, config: MigConfig) {
+        debug_assert_eq!(self.gpus[gpu].gpu.job_count(), 0, "install_partition on occupied GPU");
+        debug_assert!(!self.gpus[gpu].busy, "install_partition on busy GPU");
+        self.gpus[gpu].gpu.mode = GpuMode::Mig { config, assignment: HashMap::new() };
+        self.reindex_gpu(gpu);
+    }
 
     /// Place a job on a free slice of a GPU's *current* partition without
     /// reconfiguring (no disruption, no overhead). Returns false if no
@@ -376,18 +515,26 @@ impl ClusterState {
         let GpuMode::Mig { config, assignment } = &mut g.gpu.mode else {
             return false;
         };
-        // Smallest fitting free slice.
-        let mut candidates: Vec<(usize, SliceKind)> = (0..config.len())
-            .filter(|si| !assignment.contains_key(si))
-            .map(|si| (si, config.slices[si].kind))
-            .filter(|(_, k)| job.fits(*k) && job.spec.mem_mb <= f64::from(k.memory_mb()))
-            .collect();
-        candidates.sort_by_key(|(_, k)| k.gpcs());
-        let Some(&(si, kind)) = candidates.first() else {
+        // Smallest fitting free slice (ties by slice index).
+        let mut best: Option<(u8, usize, SliceKind)> = None;
+        for si in 0..config.len() {
+            if assignment.contains_key(&si) {
+                continue;
+            }
+            let k = config.slices[si].kind;
+            if !job.fits(k) || job.spec.mem_mb > f64::from(k.memory_mb()) {
+                continue;
+            }
+            if best.map_or(true, |(bg, bsi, _)| (k.gpcs(), si) < (bg, bsi)) {
+                best = Some((k.gpcs(), si, k));
+            }
+        }
+        let Some((_, si, kind)) = best else {
             return false;
         };
         assignment.insert(si, id);
         let speed = mig_speed(&job.spec, kind);
+        self.reindex_gpu(gpu);
         self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
         self.queue.remove(id);
         self.set_state(id, JobState::MigRun { speed });
@@ -412,6 +559,7 @@ impl ClusterState {
         assignment.insert(to_slice, id);
         let kind = config.slices[to_slice].kind;
         let spec = self.jobs[&id].job.spec;
+        self.reindex_gpu(gpu);
         self.set_state(id, JobState::MigRun { speed: mig_speed(&spec, kind) });
     }
 
@@ -432,11 +580,7 @@ impl ClusterState {
             cost += self.cfg.checkpoint_s;
         }
         // Residents get checkpointed; new jobs just wait for the reset.
-        let mut residents = self.gpus[gpu].gpu.resident_jobs();
-        residents.sort_unstable();
-        for id in residents {
-            self.set_state(id, JobState::Blocked);
-        }
+        self.block_residents(gpu);
         let g = &mut self.gpus[gpu];
         match &mut g.gpu.mode {
             GpuMode::Mig { assignment, .. } => {
@@ -449,6 +593,7 @@ impl ClusterState {
         debug_assert!(g.pending.is_none(), "overlapping transitions on a GPU");
         g.busy = true;
         g.pending = Some(Pending::ToMps { profile_s: self.cfg.mps_profile_total_s() });
+        self.reindex_gpu(gpu);
         self.push_timer(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
     }
 
@@ -480,6 +625,7 @@ impl ClusterState {
         debug_assert!(g.pending.is_none(), "overlapping transitions on GPU {gpu}");
         g.busy = true;
         g.pending = Some(Pending::ToMig { config, assignment });
+        self.reindex_gpu(gpu);
         self.push_timer(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
     }
 
@@ -501,6 +647,7 @@ impl ClusterState {
                 g.gpu.mode = GpuMode::Mps { since: self.now, jobs: vec![id] };
             }
         }
+        self.reindex_gpu(gpu);
         self.refresh_permanent_mps_speeds(gpu);
         true
     }
@@ -529,11 +676,7 @@ impl ClusterState {
             self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
             self.set_state(id, JobState::Blocked);
         }
-        let mut residents = self.gpus[gpu].gpu.resident_jobs();
-        residents.sort_unstable();
-        for id in residents {
-            self.set_state(id, JobState::Blocked);
-        }
+        self.block_residents(gpu);
         let g = &mut self.gpus[gpu];
         match &mut g.gpu.mode {
             GpuMode::Mig { assignment, .. } => {
@@ -543,10 +686,12 @@ impl ClusterState {
             }
             GpuMode::Mps { jobs, .. } => jobs.extend_from_slice(new_jobs),
         }
-        let m = g.gpu.job_count() as f64;
+        self.reindex_gpu(gpu);
+        let m = self.gpus[gpu].gpu.job_count() as f64;
         if m == 0.0 {
             // Nothing to profile (all candidates completed already).
-            g.gpu.reset_to_full();
+            self.gpus[gpu].gpu.reset_to_full();
+            self.reindex_gpu(gpu);
             return;
         }
         // Per job: 3 slices × window + 3 GPU resets + 1 checkpoint swap.
@@ -568,6 +713,7 @@ impl ClusterState {
         let g = &mut self.gpus[gpu];
         g.busy = true;
         g.pending = Some(Pending::ToMigProfiling { total_s: total, avg_speed: mean_speed * run_frac });
+        self.reindex_gpu(gpu);
         self.push_timer(Timer { at: self.now + self.cfg.mig_reconfig_s, gpu, kind: TimerKind::TransitionDone });
     }
 
@@ -595,6 +741,7 @@ impl ClusterState {
         }
         g.gpu.reset_to_full();
         g.busy = false;
+        self.reindex_gpu(gpu);
         true
     }
 
@@ -652,13 +799,15 @@ impl ClusterState {
                 }
                 self.gpus[gpu].gpu.mode = GpuMode::Mig { config, assignment };
                 self.gpus[gpu].busy = false;
+                self.reindex_gpu(gpu);
             }
             Pending::ToMpsPermanent => {
                 self.refresh_permanent_mps_speeds(gpu);
                 self.gpus[gpu].busy = false;
+                self.reindex_gpu(gpu);
             }
             Pending::ToMigProfiling { total_s, avg_speed } => {
-                let (ids, _) = self.resident_specs(gpu);
+                let ids: Vec<JobId> = self.sorted_residents(gpu).to_vec();
                 if ids.is_empty() {
                     self.release_gpu_if_empty(gpu);
                     return;
@@ -727,13 +876,7 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(cfg: SystemConfig) -> Engine {
-        Self::with_core(cfg, EventCore::Indexed)
-    }
-
-    /// Build an engine on an explicit event core (the Scan core exists for
-    /// parity testing and instrumentation; production paths use Indexed).
-    pub fn with_core(cfg: SystemConfig, core: EventCore) -> Engine {
-        let mut st = ClusterState::with_core(cfg, core);
+        let mut st = ClusterState::new(cfg);
         st.metrics.sample_stp(0.0, 0.0);
         Engine { st, live: 0, submitted: 0 }
     }
@@ -753,14 +896,14 @@ impl Engine {
         self.submitted - self.live
     }
 
-    /// Event-core instrumentation counters.
+    /// Event-index instrumentation counters.
     pub fn stats(&self) -> CoreStats {
         self.st.stats
     }
 
     /// Earliest pending *internal* event (timer expiry, job completion, or
     /// phase crossing). `None` when nothing is pending. `&mut` because the
-    /// indexed core discards stale heap entries while peeking.
+    /// event index discards stale heap entries while peeking.
     pub fn next_event(&mut self) -> Option<f64> {
         let t = self.st.next_internal_event();
         t.is_finite().then_some(t)
@@ -781,13 +924,14 @@ impl Engine {
                 job,
                 state: JobState::Queued,
                 gpu: None,
+                completed_at: f64::INFINITY,
                 accrued_to: now,
                 complete_at: f64::INFINITY,
                 phase_at: f64::INFINITY,
                 epoch: 0,
             },
         );
-        self.st.active.insert(id);
+        self.st.active_jobs += 1;
         self.st.queue.push_back(id);
         // Schedules an immediate completion for zero-work submissions.
         self.st.reschedule(id);
@@ -803,7 +947,7 @@ impl Engine {
         loop {
             let t_next = {
                 let st = &mut self.st;
-                st.events.maybe_compact(&st.jobs, st.active.len());
+                st.events.maybe_compact(&st.jobs, st.active_jobs);
                 st.next_internal_event().min(t_target).max(st.now)
             };
             // Lazy accrual: nothing per-job happens on a plain time step —
@@ -912,14 +1056,19 @@ impl Engine {
             }
         }
         let gpu = st.jobs[&id].gpu;
-        st.jobs.get_mut(&id).unwrap().remaining = 0.0;
+        {
+            let js = st.jobs.get_mut(&id).unwrap();
+            js.remaining = 0.0;
+            js.completed_at = st.now;
+        }
         st.set_state(id, JobState::Done);
         if let Some(g) = gpu {
             st.gpus[g].gpu.remove_job(id);
+            st.reindex_gpu(g);
         }
         // A zero-work job may complete straight out of the queue.
         st.queue.remove(id);
-        st.active.remove(&id);
+        st.active_jobs -= 1;
         st.metrics.on_completion(id, st.now);
         self.live -= 1;
         policy.on_completion(st, gpu, id);
@@ -956,28 +1105,17 @@ impl Engine {
 /// (`advance_to` + `submit` + `run_until_idle`) — the fleet layer drives
 /// many engines through the same seam in lock-step.
 pub fn run(policy: &mut dyn Policy, trace: &[Job], cfg: SystemConfig) -> RunMetrics {
-    run_with_core(policy, trace, cfg, EventCore::Indexed)
+    run_instrumented(policy, trace, cfg).0
 }
 
-/// [`run`] on an explicit event core (the Scan core is the parity oracle).
-pub fn run_with_core(
-    policy: &mut dyn Policy,
-    trace: &[Job],
-    cfg: SystemConfig,
-    core: EventCore,
-) -> RunMetrics {
-    run_instrumented(policy, trace, cfg, core).0
-}
-
-/// [`run_with_core`] also returning the event-core instrumentation
-/// counters (used by `benches/simulator.rs` to quantify per-event work).
+/// [`run`] also returning the event-index instrumentation counters (used
+/// by `benches/simulator.rs` to quantify per-event work).
 pub fn run_instrumented(
     policy: &mut dyn Policy,
     trace: &[Job],
     cfg: SystemConfig,
-    core: EventCore,
 ) -> (RunMetrics, CoreStats) {
-    let mut eng = Engine::with_core(cfg, core);
+    let mut eng = Engine::new(cfg);
     policy.init(&mut eng.st);
 
     let mut arrivals: Vec<Job> = trace.to_vec();
@@ -1020,6 +1158,14 @@ mod tests {
         WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0))
     }
 
+    /// A job that genuinely fits the smallest (1g.5gb) slice: mlp-class
+    /// footprint (1.2 GB) with a 2 GB declared requirement.
+    fn small_job(id: u64, work: f64) -> Job {
+        let mut j = Job::new(id, WorkloadSpec::mlp(), 0.0, work);
+        j.requirements.min_memory_mb = 2_000.0;
+        j
+    }
+
     #[test]
     fn zero_work_job_completes_while_queued() {
         // Regression: a job whose remaining work is 0 while Queued used to
@@ -1055,6 +1201,8 @@ mod tests {
         assert_eq!(accepted, 7, "eighth and ninth joins must be refused");
         assert_eq!(eng.st.gpus[0].gpu.job_count(), 7);
         assert_eq!(eng.st.queue.len(), 2, "overflow stays queued");
+        // A full GPU can spare nothing.
+        assert_eq!(eng.st.placement().spare_gpcs(0), 0);
         // Residents progress and finish; the two parked jobs stay queued
         // (run_until_idle would rightly flag them as a stall).
         eng.advance_to(&mut p, 1e9);
@@ -1073,24 +1221,6 @@ mod tests {
     }
 
     #[test]
-    fn scan_and_indexed_cores_agree_on_a_trace() {
-        use crate::scheduler::MisoPolicy;
-        let trace = crate::workload::TraceGenerator::new(crate::workload::TraceConfig {
-            num_jobs: 30,
-            mean_interarrival_s: 20.0,
-            max_duration_s: 900.0,
-            min_duration_s: 60.0,
-            seed: 3,
-            ..Default::default()
-        })
-        .generate();
-        let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
-        let a = run_with_core(&mut MisoPolicy::paper(9), &trace, cfg.clone(), EventCore::Scan);
-        let b = run_with_core(&mut MisoPolicy::paper(9), &trace, cfg, EventCore::Indexed);
-        assert_eq!(a.digest(), b.digest(), "event cores must be bit-identical");
-    }
-
-    #[test]
     fn remaining_at_projects_progress() {
         let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
         let mut p = ParkPolicy;
@@ -1101,5 +1231,113 @@ mod tests {
         eng.advance_to(&mut p, 40.0);
         let js = &eng.st.jobs[&JobId(0)];
         assert!((js.remaining_at(eng.st.now) - 60.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn placement_index_tracks_membership_and_busy() {
+        let mut eng = Engine::new(SystemConfig { num_gpus: 2, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        // Fresh cluster: both GPUs empty, spare = full 7g, one free 7g slice.
+        assert_eq!(eng.st.placement().first_empty_gpu(), Some(0));
+        assert_eq!(eng.st.placement().spare_gpcs(0), 7);
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G7), 1);
+        assert_eq!(eng.st.placement().least_loaded_host(7), Some(0));
+
+        // One small resident on GPU 0: its 7g slice is consumed; the exact
+        // spare shrinks to 3 (the best 2-way split is (3g, 3g)).
+        eng.submit(&mut p, small_job(0, 100.0));
+        assert!(eng.st.assign_to_free_slice(0, JobId(0)));
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G7), 0);
+        assert_eq!(eng.st.placement().spare_gpcs(0), 3);
+        assert_eq!(eng.st.placement().first_empty_gpu(), Some(1));
+        // Least-loaded among hosts that can take a 1g-min job: GPU 0 hosts
+        // one job, GPU 1 none → GPU 1 wins.
+        assert_eq!(eng.st.placement().least_loaded_host(1), Some(1));
+        // A job needing the full GPU can only go to the empty one.
+        assert_eq!(eng.st.placement().least_loaded_host(7), Some(1));
+
+        // A busy GPU leaves every bucket but keeps its facts readable.
+        eng.submit(&mut p, small_job(1, 100.0));
+        eng.st.begin_mps_profiling(1, &[JobId(1)]);
+        assert!(!eng.st.placement().is_placeable(1));
+        assert_eq!(eng.st.placement().first_empty_gpu(), None);
+        assert_eq!(eng.st.placement().least_loaded_host(1), Some(0));
+        assert_eq!(eng.st.placement().spare_gpcs(1), 3, "facts survive busy windows");
+        // has_other_host: GPU 0 is the only alternative to GPU 1.
+        assert!(eng.st.placement().has_other_host(1, 1));
+        assert!(!eng.st.placement().has_other_host(1, 0));
+    }
+
+    #[test]
+    fn placement_index_tracks_partitions_completion_and_release() {
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        let cfg421 = crate::mig::ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![4, 2, 1])
+            .unwrap()
+            .clone();
+        eng.st.install_partition(0, cfg421);
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G4), 1);
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G2), 1);
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G1), 1);
+        assert_eq!(eng.st.placement().smallest_free_slice_host(1), Some(0));
+        // A job needing ≥ 3 GPCs lands on the 4g slice (no 3g in (4,2,1)).
+        assert_eq!(eng.st.placement().smallest_free_slice_host(3), Some(0));
+        assert_eq!(eng.st.placement().smallest_free_slice_host(7), None);
+
+        // The smallest fitting slice (1g) is consumed by an assignment...
+        eng.submit(&mut p, small_job(0, 100.0));
+        assert!(eng.st.assign_to_free_slice(0, JobId(0)));
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G1), 0);
+        assert_eq!(eng.st.sorted_residents(0), &[JobId(0)]);
+        // ...and freed again when the job completes (remove_job funnel).
+        eng.run_until_idle(&mut p);
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G1), 1);
+        assert!(eng.st.sorted_residents(0).is_empty());
+
+        // reset_to_full via release: back to the fresh single-7g facts.
+        assert!(eng.st.release_gpu_if_empty(0));
+        assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G7), 1);
+        assert_eq!(eng.st.placement().spare_gpcs(0), 7);
+    }
+
+    #[test]
+    fn cached_residents_match_device_state_through_transitions() {
+        // Drive a GPU through enter-MPS → repartition → completion and
+        // check the cached sorted resident list against the device truth
+        // at each step.
+        let check = |st: &ClusterState| {
+            for g in 0..st.gpus.len() {
+                let mut naive = st.gpus[g].gpu.resident_jobs();
+                naive.sort_unstable();
+                assert_eq!(st.gpus[g].residents(), &naive[..], "gpu {g} cache out of sync");
+            }
+        };
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        eng.submit(&mut p, small_job(0, 50.0));
+        eng.submit(&mut p, small_job(1, 50.0));
+        check(&eng.st);
+        eng.st.begin_mps_profiling(0, &[JobId(0), JobId(1)]);
+        check(&eng.st);
+        // Fire the transition (reconfig window) and enter profiling.
+        let t = eng.next_event().unwrap();
+        eng.advance_to(&mut p, t);
+        check(&eng.st);
+        // Leave MPS into a (3g,3g) partition hosting both jobs.
+        let cfg33 = crate::mig::ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![3, 3])
+            .unwrap()
+            .clone();
+        let mut asg = HashMap::new();
+        asg.insert(0usize, JobId(0));
+        asg.insert(1usize, JobId(1));
+        eng.st.begin_repartition(0, cfg33, asg, &[]);
+        check(&eng.st);
+        eng.run_until_idle(&mut p);
+        check(&eng.st);
+        assert_eq!(eng.completed_jobs(), 2);
     }
 }

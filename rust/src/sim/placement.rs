@@ -1,0 +1,209 @@
+//! Indexed placement core: which GPU can host a queued job *right now*,
+//! answered without rescanning the cluster (DESIGN.md §Perf).
+//!
+//! The drain loops of every policy used to ask this per queued job × per
+//! GPU, each probe cloning the resident list and re-running the
+//! mix-feasibility check — O(GPUs × queue) allocations per drain, fired on
+//! every arrival, completion, and profiling transition (the paper's dynamic
+//! repartitioning, Sec. 4.3). [`PlacementIndex`] instead maintains, per
+//! GPU, two exact facts the moment they change:
+//!
+//! * **Max spare slice** — the *largest* slice kind `k` such that some
+//!   valid partition hosts all current residents plus one new job whose
+//!   minimum feasible slice is `k`. This is the paper's "maximum spare
+//!   slice" record (Sec. 4.3) generalized to exactness: because slice
+//!   feasibility is monotone (a config that hosts a mix hosts any
+//!   pointwise-smaller mix), `can_host(gpu, job)` reduces to
+//!   `job.min_feasible_slice() ≤ spare(gpu)` — an O(1) compare.
+//! * **Free slices** — the multiset of unoccupied slice kinds in the GPU's
+//!   *current* MIG partition, the static-partition analogue used by the
+//!   OptSta drain (and exported to the fleet router as the node's real
+//!   fragmentation signal).
+//!
+//! Placeable (non-busy) GPUs are bucketed by both facts in `BTreeSet`s, so
+//! drain queries — least-loaded feasible host, first empty GPU, smallest
+//! fitting free slice — are O(log g) lookups plus iteration over *feasible*
+//! candidates only, and allocation-free. Busy GPUs keep their cached facts
+//! (the fleet heartbeat reads spare capacity through transitions) but leave
+//! every bucket.
+//!
+//! Maintenance invariants (pinned by the naive-scan parity oracle in
+//! `tests/proptests.rs` and the unit tests in `sim/mod.rs`):
+//!
+//! 1. Every mutation of a GPU's residents, partition, or busy flag funnels
+//!    through `ClusterState::reindex_gpu`, which recomputes the facts from
+//!    scratch (≤ 7 residents) and diffs them into the buckets. There is no
+//!    incremental fact arithmetic to drift.
+//! 2. A job's minimum feasible slice depends only on its immutable
+//!    requirements (declared memory + QoS floor), never on its
+//!    phase-mutable spec, so spare facts cannot go stale between
+//!    membership changes.
+//! 3. Bucket membership ⇒ placeable: `busy` GPUs are in no bucket, so index
+//!    answers never hand out a GPU mid-transition.
+
+use crate::mig::SliceKind;
+use std::collections::BTreeSet;
+
+/// GPC sizes that index the per-kind bucket arrays (arrays are length 8,
+/// indexed directly by GPC count; slots 0, 5, 6 stay empty).
+const KIND_GPCS: [u8; 5] = [1, 2, 3, 4, 7];
+
+/// Cached per-GPU placement facts (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub(super) struct GpuFacts {
+    /// Not busy — eligible for placement and present in the buckets.
+    pub placeable: bool,
+    /// Resident-job count.
+    pub count: u8,
+    /// Exact max-spare-slice GPC count (0 = cannot take any new job).
+    /// Maintained through busy windows for observers (fleet heartbeats).
+    pub spare_gpcs: u8,
+    /// Free slices of the current MIG partition by GPC count (all zero
+    /// while busy or in MPS mode).
+    pub free: [u8; 8],
+}
+
+/// Free-slice + spare-capacity index over the cluster's GPUs.
+pub struct PlacementIndex {
+    facts: Vec<GpuFacts>,
+    /// Placeable GPUs bucketed by exact max-spare-slice GPC count.
+    spare_buckets: [BTreeSet<usize>; 8],
+    /// Placeable GPUs with ≥ 1 free slice of each kind (by GPC count).
+    free_buckets: [BTreeSet<usize>; 8],
+    /// Placeable GPUs ordered by (resident count, gpu id) — the
+    /// least-loaded iteration order shared by MISO and MPS-only.
+    by_load: BTreeSet<(u8, usize)>,
+}
+
+impl PlacementIndex {
+    pub(super) fn new(num_gpus: usize) -> PlacementIndex {
+        PlacementIndex {
+            facts: vec![GpuFacts::default(); num_gpus],
+            spare_buckets: std::array::from_fn(|_| BTreeSet::new()),
+            free_buckets: std::array::from_fn(|_| BTreeSet::new()),
+            by_load: BTreeSet::new(),
+        }
+    }
+
+    /// Diff `fresh` facts for `gpu` against the indexed ones and update the
+    /// buckets. The single write path — called only by
+    /// `ClusterState::reindex_gpu`.
+    pub(super) fn update(&mut self, gpu: usize, fresh: GpuFacts) {
+        let old = self.facts[gpu];
+        if old == fresh {
+            return;
+        }
+        if old.placeable {
+            if old.spare_gpcs > 0 {
+                self.spare_buckets[old.spare_gpcs as usize].remove(&gpu);
+            }
+            self.by_load.remove(&(old.count, gpu));
+            for k in KIND_GPCS {
+                if old.free[k as usize] > 0 {
+                    self.free_buckets[k as usize].remove(&gpu);
+                }
+            }
+        }
+        if fresh.placeable {
+            if fresh.spare_gpcs > 0 {
+                self.spare_buckets[fresh.spare_gpcs as usize].insert(gpu);
+            }
+            self.by_load.insert((fresh.count, gpu));
+            for k in KIND_GPCS {
+                if fresh.free[k as usize] > 0 {
+                    self.free_buckets[k as usize].insert(gpu);
+                }
+            }
+        }
+        self.facts[gpu] = fresh;
+    }
+
+    // ---------- queries ----------
+
+    /// Exact max-spare-slice GPC count of `gpu` (0 = cannot take a new
+    /// job). Valid through busy windows; whether the GPU is *placeable* is
+    /// a separate fact ([`Self::is_placeable`]).
+    pub fn spare_gpcs(&self, gpu: usize) -> u8 {
+        self.facts[gpu].spare_gpcs
+    }
+
+    /// Whether `gpu` is placeable (no transition or profiling in flight).
+    pub fn is_placeable(&self, gpu: usize) -> bool {
+        self.facts[gpu].placeable
+    }
+
+    /// Free slices of `kind` in `gpu`'s current partition (0 while busy or
+    /// in MPS mode).
+    pub fn free_slices_of(&self, gpu: usize, kind: SliceKind) -> u8 {
+        self.facts[gpu].free[kind.gpcs() as usize]
+    }
+
+    /// Least-loaded placeable GPU that can host a job whose minimum
+    /// feasible slice is `min_gpcs`, ties broken by GPU id — MISO's
+    /// placement rule (Sec. 4.3). Only *feasible* candidates are visited.
+    pub fn least_loaded_host(&self, min_gpcs: u8) -> Option<usize> {
+        let mut best: Option<(u8, usize)> = None;
+        for k in KIND_GPCS {
+            if k < min_gpcs {
+                continue;
+            }
+            for &g in &self.spare_buckets[k as usize] {
+                let key = (self.facts[g].count, g);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+        }
+        best.map(|(_, g)| g)
+    }
+
+    /// Whether any placeable GPU other than `exclude` could host a job
+    /// whose minimum feasible slice is `min_gpcs` (the profiling-batching
+    /// probe: jobs another GPU can take are left for the drain loop).
+    pub fn has_other_host(&self, min_gpcs: u8, exclude: usize) -> bool {
+        for k in KIND_GPCS {
+            if k < min_gpcs {
+                continue;
+            }
+            let bucket = &self.spare_buckets[k as usize];
+            match bucket.len() {
+                0 => {}
+                1 => {
+                    if *bucket.first().unwrap() != exclude {
+                        return true;
+                    }
+                }
+                _ => return true,
+            }
+        }
+        false
+    }
+
+    /// Lowest-id empty placeable GPU. Exactness: spare = 7g ⟺ zero
+    /// residents (the 7g slice only exists in the one-slice partition), so
+    /// this is the NoPart drain's "next free A100".
+    pub fn first_empty_gpu(&self) -> Option<usize> {
+        self.spare_buckets[SliceKind::G7.gpcs() as usize].first().copied()
+    }
+
+    /// Lowest-id placeable GPU exposing the smallest free slice of at
+    /// least `min_gpcs` GPCs in its *current* partition — the OptSta drain
+    /// ("jobs take the smallest fitting free slice", ties by GPU id).
+    pub fn smallest_free_slice_host(&self, min_gpcs: u8) -> Option<usize> {
+        for k in KIND_GPCS {
+            if k < min_gpcs {
+                continue;
+            }
+            if let Some(&g) = self.free_buckets[k as usize].first() {
+                return Some(g);
+            }
+        }
+        None
+    }
+
+    /// Placeable GPUs in (resident count, gpu id) order — the shared
+    /// least-loaded iteration (MPS-only walks it until the per-GPU cap).
+    pub fn hosts_by_load(&self) -> impl Iterator<Item = (u8, usize)> + '_ {
+        self.by_load.iter().copied()
+    }
+}

@@ -42,31 +42,15 @@ impl JobQueue {
 
     /// Enqueue at the tail. No-op if `id` is already queued.
     pub fn push_back(&mut self, id: JobId) {
-        if self.prepare_insert(id) {
-            self.slots.push_back(id);
-        }
-    }
-
-    /// Enqueue at the head (used to restore a job pulled out of the queue
-    /// by a placement that had to be abandoned). No-op if already queued.
-    pub fn push_front(&mut self, id: JobId) {
-        if self.prepare_insert(id) {
-            self.slots.push_front(id);
-        }
-    }
-
-    /// Insert into the membership set, purging a stale tombstone slot if
-    /// the id was queued and removed before. Returns false if already live.
-    fn prepare_insert(&mut self, id: JobId) -> bool {
         if !self.members.insert(id) {
-            return false;
+            return;
         }
         if self.tombstoned.remove(&id) {
             // Rare path (re-enqueue after removal): drop the old slot so the
             // id cannot appear twice in FCFS order.
             self.slots.retain(|&q| q != id);
         }
-        true
+        self.slots.push_back(id);
     }
 
     /// Head of the queue (earliest live entry), compacting tombstones.
@@ -150,12 +134,13 @@ mod tests {
         q.push_back(JobId(1));
         q.push_back(JobId(2));
         q.remove(JobId(1));
-        // Old slot for 1 is still a tombstone; re-enqueue must not revive it.
-        q.push_front(JobId(1));
-        assert_eq!(ids(&q), vec![1, 2]);
+        // Old slot for 1 is still a tombstone; re-enqueue must not revive it
+        // (the id would otherwise appear twice in FCFS order).
+        q.push_back(JobId(1));
+        assert_eq!(ids(&q), vec![2, 1]);
         assert_eq!(q.len(), 2);
         // Duplicate pushes are no-ops.
         q.push_back(JobId(1));
-        assert_eq!(ids(&q), vec![1, 2]);
+        assert_eq!(ids(&q), vec![2, 1]);
     }
 }

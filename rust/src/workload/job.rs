@@ -106,6 +106,18 @@ impl Job {
         f64::from(slice.memory_mb()) >= self.requirements.min_memory_mb
             && slice.gpcs() >= self.requirements.min_slice_gpcs
     }
+
+    /// Smallest slice this job can be *assigned* to directly: the declared
+    /// requirements ([`Job::fits`]) plus the actual footprint
+    /// (`spec.mem_mb`) — the filter `assign_to_free_slice` applies. Both
+    /// constraints are monotone along the slice order, so the assignable
+    /// set is exactly the kinds at or above this one.
+    pub fn min_assignable_slice(&self) -> Option<crate::mig::SliceKind> {
+        crate::mig::SCHEDULABLE_SLICES
+            .iter()
+            .copied()
+            .find(|s| self.fits(*s) && self.spec.mem_mb <= f64::from(s.memory_mb()))
+    }
 }
 
 #[cfg(test)]
