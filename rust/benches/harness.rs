@@ -1,10 +1,22 @@
 //! Minimal in-repo bench harness (criterion is unavailable offline).
 //!
-//! Adaptive iteration count targeting ~0.7 s per benchmark, reporting
-//! min / p50 / mean per-iteration time. All benches use
-//! `harness = false` in Cargo.toml and call [`bench`] directly.
+//! Adaptive iteration count targeting a per-benchmark time budget
+//! (default ~0.7 s; override with `MISO_BENCH_BUDGET_S` — CI's quick mode
+//! sets a small budget so the bench job regenerating the `BENCH_*.json`
+//! baselines stays fast), reporting min / p50 / mean per-iteration time.
+//! All benches use `harness = false` in Cargo.toml and call [`bench`]
+//! directly.
 
 use std::time::Instant;
+
+/// Per-benchmark wall-clock budget in seconds (`MISO_BENCH_BUDGET_S`,
+/// clamped to a sane range; default 0.7).
+pub fn budget_s() -> f64 {
+    std::env::var("MISO_BENCH_BUDGET_S")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .map_or(0.7, |v| v.clamp(0.02, 30.0))
+}
 
 /// Measure `f`, printing a one-line summary. Returns median seconds/iter.
 pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> f64 {
@@ -12,7 +24,7 @@ pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> f64 {
     let t0 = Instant::now();
     std::hint::black_box(f());
     let once = t0.elapsed().as_secs_f64().max(1e-9);
-    let iters = ((0.7 / once) as usize).clamp(1, 100_000);
+    let iters = ((budget_s() / once) as usize).clamp(1, 100_000);
 
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {

@@ -1,6 +1,11 @@
 //! System-wide configuration: cluster size, overhead constants, profiling
 //! windows — every knob the paper sweeps lives here so experiments can
 //! perturb one field at a time.
+//!
+//! Fleet-scale knobs (node count, persistent-pool size, executor choice,
+//! arrival batching) live in [`crate::fleet::FleetConfig`], which embeds a
+//! `SystemConfig` per node; `miso fleet --executor`/`--no-batch` and
+//! `miso serve --fleet-threads` surface them on the CLI.
 
 
 

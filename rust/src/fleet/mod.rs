@@ -19,8 +19,10 @@
 //!   Nodes share nothing, exactly like real machines behind a cluster
 //!   gateway.
 //! * [`FleetEngine`] — the federation: advances every node to the same
-//!   virtual instant in lock-step (fanning the independent node event
-//!   loops out across OS threads), and hands arriving jobs to a
+//!   virtual instant in lock-step via a **persistent worker pool** (each
+//!   long-lived thread owns a fixed shard of nodes and is woken by an
+//!   epoch command — advancing the fleet is two channel operations per
+//!   worker, not a thread spawn), and hands arriving jobs to a
 //!   [`Router`].
 //! * [`Router`] — the pluggable placement policy: [`RoundRobin`],
 //!   [`LeastLoaded`], and [`FragAware`] (MIG-fragmentation-aware scoring:
@@ -29,11 +31,21 @@
 //!
 //! Determinism: nodes interact only at routing instants, and every node's
 //! event loop is sequential within the node, so fleet results are
-//! bit-identical across runs *and across worker-thread counts* — the
-//! property `tests/fleet.rs` locks in via [`FleetMetrics::digest`]. The
-//! per-node engines process same-instant events in a canonical order
-//! (DESIGN.md §Perf) precisely so this digest stays
-//! thread-count-independent.
+//! bit-identical across runs, across worker-thread counts, *and across
+//! executors* (persistent pool vs the spawn-per-epoch baseline kept for
+//! benching) — the property `tests/fleet.rs` locks in via
+//! [`FleetMetrics::digest`]. The per-node engines process same-instant
+//! events in a canonical order (DESIGN.md §Perf) precisely so this digest
+//! stays thread-count-independent.
+//!
+//! [`run_fleet`] additionally batches arrivals: all jobs sharing one
+//! arrival instant form a single *routing epoch* — the fleet advances
+//! once, one view snapshot is taken ([`FleetEngine::views_into`], reusing
+//! the caller's buffer), and each in-batch submit folds its optimistic
+//! delta into the snapshot via [`NodeView::note_submitted`] instead of
+//! re-materializing views from the engines. Traces with distinct arrival
+//! instants (every Poisson-generated trace) are routed bit-identically to
+//! the unbatched path; see `note_submitted` for the in-burst semantics.
 
 mod router;
 
@@ -44,6 +56,20 @@ use crate::sim::Engine;
 use crate::workload::Job;
 use crate::SystemConfig;
 use anyhow::Result;
+use std::sync::mpsc::{channel, Sender};
+
+/// How [`FleetEngine`] fans node work across OS threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FleetExecutor {
+    /// Long-lived worker pool owned by the engine: each epoch is an O(1)
+    /// wakeup per worker. The default.
+    #[default]
+    PersistentPool,
+    /// Spawn scoped threads on every `advance_all_to`/`drain` call — the
+    /// pre-pool executor, kept as the thread-churn baseline for
+    /// `benches/fleet.rs`. Results are bit-identical to the pool.
+    SpawnPerCall,
+}
 
 /// Fleet shape + stepping parallelism.
 #[derive(Debug, Clone)]
@@ -52,12 +78,18 @@ pub struct FleetConfig {
     pub nodes: usize,
     /// GPUs per node (overrides `node_cfg.num_gpus`).
     pub gpus_per_node: usize,
-    /// Worker threads for lock-step node advancement; 0 = one per
-    /// available core. Results are identical for every value.
+    /// Worker threads for lock-step node advancement (the persistent-pool
+    /// size); 0 = one per available core. Results are identical for every
+    /// value.
     pub threads: usize,
     /// Per-node overhead/profiling constants (`num_gpus` is taken from
     /// `gpus_per_node`).
     pub node_cfg: SystemConfig,
+    /// Node-stepping executor (persistent pool unless benching churn).
+    pub executor: FleetExecutor,
+    /// Group same-instant arrivals into one routing epoch in [`run_fleet`]
+    /// (one advance + one view snapshot per instant instead of per job).
+    pub batch_arrivals: bool,
 }
 
 impl Default for FleetConfig {
@@ -67,6 +99,8 @@ impl Default for FleetConfig {
             gpus_per_node: 8,
             threads: 0,
             node_cfg: SystemConfig::testbed(),
+            executor: FleetExecutor::PersistentPool,
+            batch_arrivals: true,
         }
     }
 }
@@ -117,6 +151,43 @@ impl NodeView {
             .iter()
             .enumerate()
             .any(|(i, k)| k.gpcs() >= min_gpcs && self.free_slices[i] > 0)
+    }
+
+    /// Fold a job this node was just handed into the snapshot — the
+    /// optimistic bookkeeping a real gateway performs between node
+    /// heartbeats, so a same-instant burst is routed against up-to-date
+    /// load without re-materializing views from the engines.
+    ///
+    /// Semantics (relied on by the batch-parity tests in `tests/fleet.rs`):
+    /// `live_jobs` is **exact** (a submit always adds one live job and
+    /// nothing completes within the instant); `queued` is a conservative
+    /// upper bound (the node's controller may place the job immediately,
+    /// but can never queue more than one per submit). The job consumes
+    /// exactly one unit of snapshot capacity: the smallest free slice it
+    /// could be assigned to, or — when no free slice fits and the job is
+    /// whole-GPU-class (min feasible slice ≥ 4 GPCs, [`FragAware`]'s own
+    /// large-job threshold) — one empty GPU. Infeasible jobs (no slice
+    /// fits at all) consume nothing. These optimistic deltas stop a burst
+    /// from piling onto one slice or one empty node; the node's controller
+    /// reacting to the submit (entering profiling, repartitioning) is only
+    /// visible in the *next* epoch's fresh snapshot, exactly like a real
+    /// heartbeat gap.
+    pub fn note_submitted(&mut self, job: &Job) {
+        self.live_jobs += 1;
+        self.queued += 1;
+        if let Some(min) = job.min_assignable_slice() {
+            for (i, k) in crate::mig::SCHEDULABLE_SLICES.iter().enumerate() {
+                if k.gpcs() >= min.gpcs() && self.free_slices[i] > 0 {
+                    self.free_slices[i] -= 1;
+                    // Capacity accounted — don't also claim an empty GPU.
+                    return;
+                }
+            }
+        }
+        if job.min_feasible_slice().is_some_and(|k| k.gpcs() >= 4) && self.empty_gpus > 0 {
+            self.empty_gpus -= 1;
+            self.full_gpus += 1;
+        }
     }
 }
 
@@ -209,11 +280,159 @@ impl FleetNode {
     }
 }
 
+/// The epoch command broadcast to pool workers (and applied inline by the
+/// sequential / spawn-per-call paths).
+#[derive(Debug, Clone, Copy)]
+enum EpochOp {
+    /// Advance every node to virtual time `t`.
+    Advance(f64),
+    /// Run every node's event loop until it has no live jobs.
+    Drain,
+}
+
+fn apply_op(node: &mut FleetNode, op: EpochOp) {
+    match op {
+        EpochOp::Advance(t) => node.advance_to(t),
+        EpochOp::Drain => node.run_until_idle(),
+    }
+}
+
+/// A disjoint shard of the fleet's nodes, shipped to one pool worker for
+/// the duration of a single epoch.
+struct NodeShard {
+    ptr: *mut FleetNode,
+    len: usize,
+}
+
+// SAFETY: a shard is built from a `chunks_mut` split of the engine's node
+// slice, so shards never alias each other, and it is only dereferenced by
+// its worker between receiving the epoch command and sending the epoch ack
+// — a window during which `WorkerPool::run_epoch` holds the `&mut
+// [FleetNode]` borrow and blocks on the acks, so no other access exists.
+// `FleetNode` itself is `Send` (owned engine state + `Box<dyn Policy +
+// Send>`), which `_fleet_node_is_send` pins at compile time.
+unsafe impl Send for NodeShard {}
+
+#[allow(dead_code)]
+fn _fleet_node_is_send(n: FleetNode) -> impl Send {
+    n
+}
+
+enum PoolCmd {
+    /// Epoch barrier: run `op` over `shard`, then ack.
+    Epoch { shard: NodeShard, op: EpochOp, ack: Sender<()> },
+    Shutdown,
+}
+
+/// The persistent worker pool owned by [`FleetEngine`]: long-lived threads
+/// each processing a fixed shard of nodes per epoch, woken by channel
+/// commands. Advancing the fleet costs two channel operations per worker
+/// instead of a thread spawn + join ([`FleetExecutor::SpawnPerCall`] keeps
+/// the old behaviour as the benchable baseline).
+struct WorkerPool {
+    cmd_txs: Vec<Sender<PoolCmd>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn spawn(workers: usize) -> WorkerPool {
+        let mut cmd_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<PoolCmd>();
+            let handle = std::thread::Builder::new()
+                .name(format!("fleet-worker-{w}"))
+                .spawn(move || {
+                    while let Ok(cmd) = rx.recv() {
+                        match cmd {
+                            PoolCmd::Epoch { shard, op, ack } => {
+                                // SAFETY: exclusive, non-aliasing access for
+                                // the epoch window — see `NodeShard`.
+                                let nodes = unsafe {
+                                    std::slice::from_raw_parts_mut(shard.ptr, shard.len)
+                                };
+                                for node in nodes {
+                                    apply_op(node, op);
+                                }
+                                let _ = ack.send(());
+                            }
+                            PoolCmd::Shutdown => break,
+                        }
+                    }
+                })
+                .expect("spawning fleet worker thread");
+            cmd_txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { cmd_txs, handles }
+    }
+
+    /// One epoch: shard `nodes` across the workers, broadcast `op`, and
+    /// block until every worker acks. The per-epoch ack channel doubles as
+    /// the barrier *and* the panic detector: a worker that unwinds drops
+    /// its ack sender without sending, so the ack count comes up short
+    /// instead of deadlocking.
+    ///
+    /// Panic safety: nothing here unwinds between dispatch and barrier. A
+    /// `send` to a dead worker (it panicked in an earlier epoch) merely
+    /// stops dispatching — the unsent command (and the shard pointer in
+    /// it) comes back in the `SendError` and is dropped — and the barrier
+    /// below still waits for every shard that *was* dispatched before any
+    /// panic propagates, so no worker can touch node memory after this
+    /// frame's `&mut [FleetNode]` borrow ends.
+    fn run_epoch(&self, nodes: &mut [FleetNode], op: EpochOp) {
+        let workers = self.cmd_txs.len().min(nodes.len());
+        if workers == 0 {
+            return;
+        }
+        let chunk = nodes.len().div_ceil(workers);
+        let (ack_tx, ack_rx) = channel::<()>();
+        let mut dispatched = 0usize;
+        let mut dead_worker = false;
+        for (w, shard) in nodes.chunks_mut(chunk).enumerate() {
+            let cmd = PoolCmd::Epoch {
+                shard: NodeShard { ptr: shard.as_mut_ptr(), len: shard.len() },
+                op,
+                ack: ack_tx.clone(),
+            };
+            if self.cmd_txs[w].send(cmd).is_err() {
+                dead_worker = true;
+                break;
+            }
+            dispatched += 1;
+        }
+        drop(ack_tx);
+        // Barrier: blocks until every dispatched worker has sent its ack
+        // (or unwound, dropping its ack sender) — i.e. until no worker
+        // holds a live shard pointer — before any panic below.
+        let acked = ack_rx.iter().count();
+        assert!(!dead_worker, "a fleet worker died in an earlier epoch");
+        assert_eq!(acked, dispatched, "a fleet worker panicked during the epoch");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(PoolCmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// The federation: N independent nodes advanced in lock-step virtual time,
 /// with arriving jobs placed by a pluggable [`Router`].
 pub struct FleetEngine {
+    /// Declared before `nodes` on purpose: struct fields drop in
+    /// declaration order, so an unwinding drop of the engine parks (joins)
+    /// the workers *before* the node memory they may hold shard pointers
+    /// into is freed.
+    pool: Option<WorkerPool>,
     pub nodes: Vec<FleetNode>,
     threads: usize,
+    executor: FleetExecutor,
     gpus_per_node: usize,
 }
 
@@ -238,7 +457,18 @@ impl FleetEngine {
         } else {
             cfg.threads
         };
-        Ok(FleetEngine { nodes, threads, gpus_per_node: cfg.gpus_per_node })
+        // More workers than nodes can never help; a 1-worker pool is just
+        // the sequential path with extra channel hops.
+        let workers = threads.min(cfg.nodes);
+        let pool = (cfg.executor == FleetExecutor::PersistentPool && workers > 1)
+            .then(|| WorkerPool::spawn(workers));
+        Ok(FleetEngine {
+            nodes,
+            pool,
+            threads,
+            executor: cfg.executor,
+            gpus_per_node: cfg.gpus_per_node,
+        })
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -257,49 +487,77 @@ impl FleetEngine {
 
     /// Routing snapshots for every node, indexed by node id.
     pub fn views(&self) -> Vec<NodeView> {
-        self.nodes.iter().map(FleetNode::view).collect()
+        let mut out = Vec::with_capacity(self.nodes.len());
+        self.views_into(&mut out);
+        out
     }
 
-    /// Advance every node to virtual time `t` in lock-step, fanning the
-    /// independent node event loops across up to `threads` OS threads.
-    /// Nodes share nothing, so the result is identical for any thread
-    /// count.
+    /// [`Self::views`] into a caller-owned buffer, so a routing loop pays
+    /// one allocation for its whole lifetime instead of one per epoch.
+    pub fn views_into(&self, out: &mut Vec<NodeView>) {
+        out.clear();
+        out.extend(self.nodes.iter().map(FleetNode::view));
+    }
+
+    /// Advance every node to virtual time `t` in lock-step. With the
+    /// persistent pool this is an O(1) wakeup per worker; nodes share
+    /// nothing, so the result is identical for any pool size or executor.
     pub fn advance_all_to(&mut self, t: f64) {
-        self.parallel_over_nodes(|node| node.advance_to(t));
+        self.run_epoch(EpochOp::Advance(t));
     }
 
     /// Run every node until it is idle (no live jobs) — the post-arrivals
-    /// drain of a trace run.
+    /// drain of a trace run. The pool stays alive afterwards: more
+    /// submits/advances re-enter it without re-spawning threads.
     pub fn drain(&mut self) {
-        self.parallel_over_nodes(FleetNode::run_until_idle);
+        self.run_epoch(EpochOp::Drain);
     }
 
-    fn parallel_over_nodes(&mut self, f: impl Fn(&mut FleetNode) + Send + Sync) {
-        let threads = self.threads.min(self.nodes.len()).max(1);
-        if threads <= 1 {
-            for node in &mut self.nodes {
-                f(node);
-            }
+    fn run_epoch(&mut self, op: EpochOp) {
+        if let Some(pool) = &self.pool {
+            pool.run_epoch(&mut self.nodes, op);
             return;
         }
-        let chunk = self.nodes.len().div_ceil(threads);
-        let f = &f;
-        std::thread::scope(|s| {
-            for nodes in self.nodes.chunks_mut(chunk) {
-                s.spawn(move || {
-                    for node in nodes {
-                        f(node);
-                    }
-                });
-            }
-        });
+        let threads = self.threads.min(self.nodes.len()).max(1);
+        if self.executor == FleetExecutor::SpawnPerCall && threads > 1 {
+            // Bench-only baseline: re-spawn scoped threads on every epoch
+            // (the pre-pool executor, measured against in benches/fleet.rs).
+            let chunk = self.nodes.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                for nodes in self.nodes.chunks_mut(chunk) {
+                    s.spawn(move || {
+                        for node in nodes {
+                            apply_op(node, op);
+                        }
+                    });
+                }
+            });
+            return;
+        }
+        for node in &mut self.nodes {
+            apply_op(node, op);
+        }
+    }
+
+    /// Validate a router's chosen node index. The [`Router::route`]
+    /// contract requires a valid index into the views slice —
+    /// debug-asserted here; release builds clamp to the last node instead
+    /// of panicking mid-run, trading a misplaced job for availability (a
+    /// real gateway would do the same with a buggy policy plugin).
+    fn checked_node(&self, node: usize) -> usize {
+        debug_assert!(
+            node < self.nodes.len(),
+            "router returned node {node}, valid range 0..{}",
+            self.nodes.len()
+        );
+        node.min(self.nodes.len() - 1)
     }
 
     /// Route `job` through `router` (observing fresh node views) and
     /// submit it to the chosen node. Returns the node id.
     pub fn route_and_submit(&mut self, router: &mut dyn Router, job: Job) -> usize {
         let views = self.views();
-        let node = router.route(&job, &views).min(self.nodes.len() - 1);
+        let node = self.checked_node(router.route(&job, &views));
         self.nodes[node].submit(job);
         node
     }
@@ -309,12 +567,23 @@ impl FleetEngine {
         self.nodes.iter().map(|n| n.arrivals).collect()
     }
 
+    /// Drop completed jobs older than `retention_s` virtual seconds from
+    /// every node's job table (their metrics records are kept) — the
+    /// long-running-gateway memory bound; see
+    /// [`crate::sim::Engine::purge_completed`].
+    pub fn purge_completed(&mut self, retention_s: f64) -> usize {
+        self.nodes.iter_mut().map(|n| n.engine.purge_completed(retention_s)).sum()
+    }
+
     /// Consume the fleet, aggregating every node's metrics.
     pub fn finish(self) -> FleetMetrics {
-        let gpus = self.gpus_per_node;
+        let FleetEngine { pool, nodes, gpus_per_node, .. } = self;
+        // Workers only touch node memory inside `run_epoch`, but parking
+        // them before the nodes are consumed keeps teardown obviously safe.
+        drop(pool);
         FleetMetrics::aggregate(
-            self.nodes.into_iter().map(|n| n.engine.finish()).collect(),
-            gpus,
+            nodes.into_iter().map(|n| n.engine.finish()).collect(),
+            gpus_per_node,
         )
     }
 }
@@ -322,6 +591,15 @@ impl FleetEngine {
 /// Replay a job trace through a fleet: advance all nodes to each arrival
 /// instant in lock-step, route the job, and after the last arrival drain
 /// every node to completion. The fleet-scale analogue of [`crate::sim::run`].
+///
+/// With `cfg.batch_arrivals` (the default), consecutive same-instant
+/// arrivals form one routing epoch: the fleet advances once, one view
+/// snapshot is taken into a reused buffer, and each in-batch submit folds
+/// its delta into the snapshot through [`Router::on_submitted`] /
+/// [`NodeView::note_submitted`]. Traces whose arrival instants are all
+/// distinct (every Poisson trace the generator emits) route bit-identically
+/// to the unbatched path — asserted across batching, pool sizes, and
+/// executors by `tests/fleet.rs` and `benches/fleet.rs`.
 pub fn run_fleet(
     cfg: &FleetConfig,
     policy_name: &str,
@@ -332,9 +610,29 @@ pub fn run_fleet(
     let mut fleet = FleetEngine::new(cfg, policy_name, seed)?;
     let mut arrivals: Vec<Job> = trace.to_vec();
     arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap().then(a.id.cmp(&b.id)));
-    for job in arrivals {
-        fleet.advance_all_to(job.arrival);
-        fleet.route_and_submit(router, job);
+    if cfg.batch_arrivals {
+        let mut views: Vec<NodeView> = Vec::with_capacity(fleet.num_nodes());
+        let mut it = arrivals.into_iter().peekable();
+        while let Some(first) = it.next() {
+            let epoch_t = first.arrival;
+            fleet.advance_all_to(epoch_t);
+            fleet.views_into(&mut views);
+            let mut job = first;
+            loop {
+                let node = fleet.checked_node(router.route(&job, &views));
+                router.on_submitted(&job, node, &mut views);
+                fleet.nodes[node].submit(job);
+                match it.peek() {
+                    Some(next) if next.arrival == epoch_t => job = it.next().unwrap(),
+                    _ => break,
+                }
+            }
+        }
+    } else {
+        for job in arrivals {
+            fleet.advance_all_to(job.arrival);
+            fleet.route_and_submit(router, job);
+        }
     }
     fleet.drain();
     Ok(fleet.finish())
@@ -370,5 +668,82 @@ mod tests {
         assert_eq!(v.queued + v.live_jobs + v.resident_jobs, 0);
         assert_eq!(v.free_slices, [0; 5], "fragment slices only count occupied GPUs");
         assert_eq!(v.max_spare_gpcs, 0);
+    }
+
+    fn small_job(id: u64) -> Job {
+        let mut j = Job::new(id, crate::workload::WorkloadSpec::mlp(), 0.0, 100.0);
+        j.requirements.min_memory_mb = 2_000.0;
+        j
+    }
+
+    #[test]
+    fn note_submitted_applies_optimistic_deltas() {
+        let cfg = FleetConfig { nodes: 1, gpus_per_node: 2, threads: 1, ..Default::default() };
+        let fleet = FleetEngine::new(&cfg, "miso", 1).unwrap();
+        let mut v = fleet.views().remove(0);
+        v.free_slices = [1, 0, 0, 0, 0]; // pretend one free 1g on an occupied GPU
+
+        // Small job: live/queued bump, smallest fitting free slice consumed,
+        // empty GPUs untouched.
+        v.note_submitted(&small_job(0));
+        assert_eq!((v.live_jobs, v.queued), (1, 1));
+        assert_eq!(v.free_slices, [0; 5]);
+        assert_eq!(v.empty_gpus, 2);
+
+        // Whole-GPU tenant: claims an empty GPU.
+        let mut big = small_job(1);
+        big.requirements.min_slice_gpcs = 7;
+        v.note_submitted(&big);
+        assert_eq!((v.live_jobs, v.queued), (2, 2));
+        assert_eq!(v.empty_gpus, 1);
+        assert_eq!(v.full_gpus, 1);
+        assert_eq!(
+            v.empty_gpus + v.partial_gpus + v.full_gpus,
+            v.num_gpus,
+            "GPU class counts stay a partition of the node"
+        );
+    }
+
+    #[test]
+    fn pool_survives_drain_and_reentry() {
+        // One engine, pooled: advance, drain, then submit again and drain
+        // again — the workers must wake for every epoch, not just the first.
+        let cfg = FleetConfig { nodes: 4, gpus_per_node: 1, threads: 4, ..Default::default() };
+        let mut fleet = FleetEngine::new(&cfg, "miso", 3).unwrap();
+        assert!(fleet.pool.is_some(), "4 threads over 4 nodes must build a pool");
+        for id in 0..4u64 {
+            let node = id as usize % fleet.num_nodes();
+            fleet.nodes[node].submit(small_job(id));
+        }
+        fleet.drain();
+        assert_eq!(fleet.live_jobs(), 0);
+        let resume_t = fleet.now() + 10.0;
+        fleet.advance_all_to(resume_t);
+        for id in 4..8u64 {
+            let node = id as usize % fleet.num_nodes();
+            fleet.nodes[node].submit(small_job(id));
+        }
+        fleet.drain();
+        assert_eq!(fleet.live_jobs(), 0);
+        let m = fleet.finish();
+        assert_eq!(m.total_jobs(), 8, "both waves complete across pool re-entry");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "router returned node")]
+    fn out_of_range_router_output_debug_asserts() {
+        struct Rogue;
+        impl Router for Rogue {
+            fn name(&self) -> &'static str {
+                "rogue"
+            }
+            fn route(&mut self, _job: &Job, views: &[NodeView]) -> usize {
+                views.len() + 7
+            }
+        }
+        let cfg = FleetConfig { nodes: 2, gpus_per_node: 1, threads: 1, ..Default::default() };
+        let mut fleet = FleetEngine::new(&cfg, "miso", 0).unwrap();
+        fleet.route_and_submit(&mut Rogue, small_job(0));
     }
 }

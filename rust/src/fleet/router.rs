@@ -17,9 +17,25 @@ pub trait Router: Send {
     fn name(&self) -> &'static str;
 
     /// Choose a node for `job`. `views` is non-empty, indexed by node id,
-    /// and freshly snapshotted at the arrival instant. Must return a valid
-    /// index into `views` (the engine clamps defensively).
+    /// and snapshotted at the start of the routing epoch (within a
+    /// same-instant batch, updated per submit via [`Router::on_submitted`]).
+    /// Must return a valid index into `views` — debug-asserted by the
+    /// engine, which clamps defensively in release builds.
     fn route(&mut self, job: &Job, views: &[NodeView]) -> usize;
+
+    /// `job` was just submitted to `node` within the current routing epoch
+    /// (batched dispatch, [`crate::fleet::run_fleet`]): fold its delta into
+    /// the epoch's view snapshot so later same-instant arrivals see it.
+    /// The default applies [`NodeView::note_submitted`]'s optimistic
+    /// bookkeeping — exact `live_jobs`, conservative queue depth, free
+    /// slice / empty GPU consumption. This hook is strictly about keeping
+    /// the *snapshot* current: it only fires on the batched routing path
+    /// (per-job paths re-materialize fresh views instead), so routers must
+    /// not rely on it for internal state — keep durable bookkeeping inside
+    /// [`Router::route`], which every path calls exactly once per job.
+    fn on_submitted(&mut self, job: &Job, node: usize, views: &mut [NodeView]) {
+        views[node].note_submitted(job);
+    }
 }
 
 /// The canonical router names, in reporting order.
@@ -330,6 +346,39 @@ mod tests {
         views[0].live_jobs = 9;
         views[1].live_jobs = 4;
         assert_eq!(FragAware.route(&small_job(0), &views), 1);
+    }
+
+    #[test]
+    fn in_epoch_submits_steer_later_batch_arrivals() {
+        // Two identical fragmented nodes, each with spare capacity. A
+        // same-instant burst of small jobs must not pile onto one node:
+        // after the first submit is folded into the snapshot via
+        // on_submitted, the first node's queue-depth bump voids its fit
+        // and the second job lands elsewhere.
+        let mut views: Vec<NodeView> = (0..2).map(view).collect();
+        for v in &mut views {
+            v.empty_gpus = 1;
+            v.partial_gpus = 1;
+            v.max_spare_gpcs = 4;
+            v.resident_jobs = 1;
+        }
+        let mut frag = FragAware;
+        let first = frag.route(&small_job(0), &views);
+        assert_eq!(first, 0, "tie breaks to the lower node id");
+        frag.on_submitted(&small_job(0), first, &mut views);
+        assert_eq!(views[0].live_jobs, 1);
+        assert_eq!(views[0].queued, 1);
+        let second = frag.route(&small_job(1), &views);
+        assert_eq!(second, 1, "the burst spreads instead of stacking on node 0");
+
+        // Large jobs likewise: claiming the empty GPU in the snapshot
+        // sends the next same-instant tenant to the other node.
+        let mut views: Vec<NodeView> = (0..2).map(view).collect();
+        let first = frag.route(&big_job(0), &views);
+        assert_eq!(first, 0);
+        frag.on_submitted(&big_job(0), first, &mut views);
+        assert_eq!(views[0].empty_gpus, 1, "one whole GPU consumed in the snapshot");
+        assert_eq!(frag.route(&big_job(1), &views), 1);
     }
 
     #[test]

@@ -40,9 +40,13 @@ fn usage() -> ! {
                        (P = miso | miso-unet | nopart | optsta | oracle | mps-only | miso-migprof)\n\
            fleet       [--nodes N] [--gpus N] [--router R] [--policy P] [--jobs N]\n\
                        [--lambda S] [--seed S] [--threads T] [--skewed]\n\
-                       (R = round-robin | least-loaded | frag-aware | all)\n\
+                       [--executor E] [--no-batch]\n\
+                       (R = round-robin | least-loaded | frag-aware | all;\n\
+                        E = pool | spawn — persistent worker pool vs\n\
+                        spawn-per-epoch baseline, identical results)\n\
            experiment  --id ID [--trials N] [--out FILE]\n\
            serve       [--port P] [--gpus N] [--time-scale X] [--nodes N] [--router R]\n\
+                       [--fleet-threads T]\n\
            list"
     );
     std::process::exit(2);
@@ -113,6 +117,8 @@ fn run() -> Result<()> {
                     gpus,
                     time_scale,
                     flags.get("router").unwrap_or("frag-aware"),
+                    // Sizes the gateway's persistent worker pool (0 = auto).
+                    flags.num("fleet-threads", 0usize)?,
                 )
             } else {
                 miso::server::serve(port, gpus, time_scale)
@@ -192,7 +198,7 @@ fn simulate(flags: &Flags) -> Result<()> {
 /// fully deterministic given `--seed` (the printed digest is bit-stable
 /// across repetitions and `--threads` values).
 fn fleet(flags: &Flags) -> Result<()> {
-    use miso::fleet::{make_router, run_fleet, FleetConfig, ROUTER_NAMES};
+    use miso::fleet::{make_router, run_fleet, FleetConfig, FleetExecutor, ROUTER_NAMES};
 
     let nodes = flags.num("nodes", 4usize)?;
     let gpus = flags.num("gpus", 8usize)?;
@@ -201,6 +207,11 @@ fn fleet(flags: &Flags) -> Result<()> {
     let threads = flags.num("threads", 0usize)?;
     let policy = flags.get("policy").unwrap_or("miso");
     let router_arg = flags.get("router").unwrap_or("all");
+    let executor = match flags.get("executor").unwrap_or("pool") {
+        "pool" => FleetExecutor::PersistentPool,
+        "spawn" => FleetExecutor::SpawnPerCall,
+        other => bail!("unknown executor '{other}' (pool | spawn)"),
+    };
     // Default λ keeps per-GPU offered load at the testbed's level
     // (8 GPUs at λ = 60 s) as the fleet grows.
     let default_lambda = 60.0 * 8.0 / (nodes.max(1) * gpus.max(1)) as f64;
@@ -219,6 +230,8 @@ fn fleet(flags: &Flags) -> Result<()> {
         gpus_per_node: gpus,
         threads,
         node_cfg: SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() },
+        executor,
+        batch_arrivals: !flags.flag("no-batch"),
     };
 
     println!("fleet             : {nodes} nodes × {gpus} GPUs ({} total)", nodes * gpus);

@@ -138,12 +138,16 @@ fn accept_loop(listener: TcpListener, tx: Sender<Request>, stop: Arc<AtomicBool>
 /// Start a fleet gateway on `port` (0 = ephemeral): `nodes` simulated
 /// MISO nodes of `gpus_per_node` A100s each, SUBMITs placed by the named
 /// fleet router, all advancing at `time_scale` × wall-clock.
+/// `fleet_threads` sizes the engine's persistent worker pool (0 = one per
+/// core); every per-tick advance is then an O(1) pool wakeup rather than a
+/// thread fan-out.
 pub fn start_fleet(
     port: u16,
     nodes: usize,
     gpus_per_node: usize,
     time_scale: f64,
     router: &str,
+    fleet_threads: usize,
 ) -> Result<LiveServer> {
     anyhow::ensure!(nodes > 0, "need at least one node");
     anyhow::ensure!(gpus_per_node > 0, "need at least one GPU per node");
@@ -159,7 +163,7 @@ pub fn start_fleet(
     let stop_c = stop.clone();
     let router = router.to_string();
     let controller = std::thread::spawn(move || {
-        controller_loop_fleet(rx, stop_c, nodes, gpus_per_node, time_scale, router);
+        controller_loop_fleet(rx, stop_c, nodes, gpus_per_node, time_scale, router, fleet_threads);
     });
 
     let stop_l = stop.clone();
@@ -193,8 +197,9 @@ pub fn serve_fleet(
     gpus_per_node: usize,
     time_scale: f64,
     router: &str,
+    fleet_threads: usize,
 ) -> Result<()> {
-    let server = start_fleet(port, nodes, gpus_per_node, time_scale, router)?;
+    let server = start_fleet(port, nodes, gpus_per_node, time_scale, router, fleet_threads)?;
     println!(
         "MISO fleet gateway on {} — {nodes} nodes × {gpus_per_node} A100s, router {router}, virtual time ×{time_scale}",
         server.addr()
@@ -214,12 +219,22 @@ fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, ti
     policy.init(&mut engine.st);
     let mut next_id: u64 = 0;
     let started = Instant::now();
+    let mut next_purge_vt = JOBS_RETENTION_S;
 
     while !stop.load(Ordering::SeqCst) {
         // Advance virtual time to scaled wall-clock.
         let target = started.elapsed().as_secs_f64() * time_scale;
         if target > engine.st.now {
             engine.advance_to(&mut policy, target);
+        }
+        // Long-run memory bound: completed jobs past the JOBS retention
+        // window leave the job table (their metrics records remain).
+        // Throttled to a fraction of the retention window — the O(table)
+        // retain scan need not run on every 5 ms tick to bound memory at
+        // live jobs + ~one window.
+        if engine.st.now >= next_purge_vt {
+            engine.purge_completed(JOBS_RETENTION_S);
+            next_purge_vt = engine.st.now + JOBS_RETENTION_S / 4.0;
         }
 
         // Serve all pending requests.
@@ -273,24 +288,34 @@ fn controller_loop_fleet(
     gpus_per_node: usize,
     time_scale: f64,
     router_name: String,
+    fleet_threads: usize,
 ) {
     let cfg = FleetConfig {
         nodes,
         gpus_per_node,
-        // Live mode advances in small wall-clock ticks; thread fan-out per
-        // tick would cost more than it saves.
-        threads: 1,
+        // Per-tick advances reuse the engine's persistent worker pool (an
+        // O(1) wakeup per worker), so the gateway no longer has to cap
+        // itself at one thread to avoid per-tick spawn churn.
+        threads: fleet_threads,
         node_cfg: crate::SystemConfig::testbed(),
+        ..Default::default()
     };
     let mut fleet = FleetEngine::new(&cfg, "miso", 0x11FE).expect("fleet construction");
     let mut router: Box<dyn Router> = make_router(&router_name).expect("router construction");
     let mut next_id: u64 = 0;
     let started = Instant::now();
+    let mut next_purge_vt = JOBS_RETENTION_S;
 
     while !stop.load(Ordering::SeqCst) {
         let target = started.elapsed().as_secs_f64() * time_scale;
         if target > fleet.now() {
             fleet.advance_all_to(target);
+        }
+        // Long-run memory bound, same as (and throttled like) the
+        // single-node controller.
+        if fleet.now() >= next_purge_vt {
+            fleet.purge_completed(JOBS_RETENTION_S);
+            next_purge_vt = fleet.now() + JOBS_RETENTION_S / 4.0;
         }
 
         while let Ok(req) = rx.try_recv() {
@@ -372,6 +397,10 @@ fn status_json(engine: &Engine) -> Value {
         ("now_s", Value::num(engine.st.now)),
         ("queued", Value::num(engine.st.queue.len() as f64)),
         ("live_jobs", Value::num(engine.live_jobs() as f64)),
+        // Size of the in-memory job table (live + retention-window
+        // completions) — observability for the purge that keeps a
+        // long-running server's memory bounded.
+        ("tracked_jobs", Value::num(engine.st.jobs.len() as f64)),
         ("instant_stp", Value::num(engine.st.instant_stp())),
         ("gpus", Value::arr(gpus)),
     ])
@@ -385,6 +414,7 @@ fn node_json(node: usize, engine: &Engine) -> Value {
         ("now_s", Value::num(engine.st.now)),
         ("queued", Value::num(engine.st.queue.len() as f64)),
         ("live_jobs", Value::num(engine.live_jobs() as f64)),
+        ("tracked_jobs", Value::num(engine.st.jobs.len() as f64)),
         ("instant_stp", Value::num(engine.st.instant_stp())),
         ("gpus", Value::arr(gpus)),
     ])
@@ -597,7 +627,9 @@ mod tests {
 
     #[test]
     fn fleet_gateway_routes_and_reports_nodes() {
-        let server = start_fleet(0, 3, 1, 240.0, "round-robin").unwrap();
+        // `fleet_threads: 2` also exercises the persistent pool under the
+        // live gateway's tick-by-tick advancement.
+        let server = start_fleet(0, 3, 1, 240.0, "round-robin", 2).unwrap();
         let addr = server.addr();
 
         // Three submissions round-robin across the three nodes.
@@ -635,7 +667,55 @@ mod tests {
 
     #[test]
     fn fleet_gateway_rejects_bad_router() {
-        assert!(start_fleet(0, 2, 1, 60.0, "no-such-router").is_err());
+        assert!(start_fleet(0, 2, 1, 60.0, "no-such-router", 1).is_err());
+    }
+
+    #[test]
+    fn job_table_stays_bounded_under_sustained_traffic() {
+        // The gateway memory bound: submit many jobs in waves spaced wider
+        // than the retention window (driving the engine exactly like the
+        // controller loop: advance, then purge), and assert the job table
+        // never holds more than ~one wave while the final metrics still
+        // account for every job ever submitted.
+        let mut engine = Engine::new(SystemConfig { num_gpus: 2, ..SystemConfig::testbed() });
+        let mut policy = MisoPolicy::paper(0x11FE);
+        policy.init(&mut engine.st);
+        let spec = WorkloadSpec::new(ModelFamily::ResNet50, 0, (0.0, 0.0));
+
+        const WAVES: usize = 8;
+        const PER_WAVE: usize = 25;
+        let wave_gap = JOBS_RETENTION_S * 2.0;
+        let mut max_tracked = 0usize;
+        for wave in 0..WAVES {
+            let t0 = wave as f64 * wave_gap;
+            engine.advance_to(&mut policy, t0);
+            engine.purge_completed(JOBS_RETENTION_S);
+            for i in 0..PER_WAVE {
+                let id = (wave * PER_WAVE + i) as u64;
+                engine.submit(&mut policy, Job::new(id, spec, engine.st.now, 30.0));
+            }
+            // Tick through the wave like the controller loop does.
+            let mut t = t0;
+            while t < t0 + wave_gap * 0.9 {
+                t += 50.0;
+                engine.advance_to(&mut policy, t);
+                engine.purge_completed(JOBS_RETENTION_S);
+                max_tracked = max_tracked.max(engine.st.jobs.len());
+            }
+        }
+        assert_eq!(engine.live_jobs(), 0, "every wave drains between waves");
+        assert!(
+            max_tracked <= 2 * PER_WAVE,
+            "job table grew to {max_tracked} entries — purge is not bounding it"
+        );
+        // Serialization stays consistent: old completions are gone from
+        // JOBS replies and the table alike.
+        engine.purge_completed(JOBS_RETENTION_S);
+        let m = engine.finish();
+        assert_eq!(m.records.len(), WAVES * PER_WAVE, "metrics keep the full history");
+        for r in &m.records {
+            assert!(r.completion > r.arrival, "job {} unaccounted", r.id);
+        }
     }
 
     #[test]

@@ -785,8 +785,11 @@ impl ClusterState {
             Pending::ToMig { config, mut assignment } => {
                 // Jobs may complete during the checkpoint window (they were
                 // blocked with ~zero remaining work); drop them from the
-                // snapshot so they are not resurrected onto a slice.
-                assignment.retain(|_, id| !matches!(self.jobs[id].state, JobState::Done));
+                // snapshot so they are not resurrected onto a slice. `get`
+                // rather than index: a completed job may also have been
+                // purged from the table entirely (`Engine::purge_completed`).
+                assignment
+                    .retain(|_, id| self.jobs.get(id).is_some_and(|j| !matches!(j.state, JobState::Done)));
                 let mut entries: Vec<(usize, JobId)> =
                     assignment.iter().map(|(&si, &id)| (si, id)).collect();
                 entries.sort_unstable();
@@ -1093,6 +1096,26 @@ impl Engine {
         }
     }
 
+    /// Drop completed jobs whose completion lies more than `retention_s`
+    /// virtual seconds in the past from the job table, returning how many
+    /// were purged. Their metrics records (all `finish()` needs) were
+    /// captured at completion and are untouched; recently completed jobs
+    /// stay so observers like the live server's `JOBS` retention window
+    /// keep seeing them. Safe at any quiescent point: the event index
+    /// treats entries whose job id is missing as stale and discards them
+    /// lazily, and no scheduling path dereferences non-live job ids.
+    /// This is the long-running-gateway memory bound — without it a
+    /// server under heavy traffic accumulates every `JobSim` ever
+    /// submitted (ROADMAP).
+    pub fn purge_completed(&mut self, retention_s: f64) -> usize {
+        let horizon = self.st.now - retention_s;
+        let before = self.st.jobs.len();
+        self.st
+            .jobs
+            .retain(|_, j| !(matches!(j.state, JobState::Done) && j.completed_at < horizon));
+        before - self.st.jobs.len()
+    }
+
     /// Consume the engine, returning the collected metrics.
     pub fn finish(self) -> RunMetrics {
         self.st.metrics.finish()
@@ -1300,6 +1323,34 @@ mod tests {
         assert!(eng.st.release_gpu_if_empty(0));
         assert_eq!(eng.st.placement().free_slices_of(0, SliceKind::G7), 1);
         assert_eq!(eng.st.placement().spare_gpcs(0), 7);
+    }
+
+    #[test]
+    fn purge_completed_drops_only_aged_out_jobs_and_keeps_metrics() {
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        let mut p = ParkPolicy;
+        // Job 0 completes at t=100; job 1 stays live.
+        eng.submit(&mut p, small_job(0, 100.0));
+        assert!(eng.st.assign_to_free_slice(0, JobId(0)));
+        eng.advance_to(&mut p, 150.0);
+        assert_eq!(eng.completed_jobs(), 1);
+        eng.submit(&mut p, small_job(1, 1e6));
+
+        // Inside the retention window nothing is purged.
+        assert_eq!(eng.purge_completed(600.0), 0);
+        assert_eq!(eng.st.jobs.len(), 2);
+
+        // Past it, only the completed job goes; the live one survives and
+        // the engine keeps running correctly afterwards.
+        eng.advance_to(&mut p, 100.0 + 601.0);
+        assert_eq!(eng.purge_completed(600.0), 1);
+        assert_eq!(eng.st.jobs.len(), 1);
+        assert!(eng.st.jobs.contains_key(&JobId(1)));
+        assert!(eng.st.assign_to_free_slice(0, JobId(1)));
+        eng.run_until_idle(&mut p);
+        let m = eng.finish();
+        assert_eq!(m.records.len(), 2, "metrics keep every job ever submitted");
+        assert!((m.records[0].completion - 100.0).abs() < 1e-6);
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! fragmentation-aware router must not lose to round-robin on skewed
 //! mixes, and the three routers must actually behave differently.
 
-use miso::fleet::{make_router, run_fleet, FleetConfig, FragAware, RoundRobin};
+use miso::fleet::{
+    make_router, run_fleet, FleetConfig, FleetEngine, FleetExecutor, FragAware, NodeView,
+    RoundRobin, Router,
+};
 use miso::metrics::FleetMetrics;
 use miso::workload::{Job, ModelFamily, TraceConfig, TraceGenerator, WorkloadSpec};
 use miso::SystemConfig;
@@ -17,6 +20,7 @@ fn single_gpu_fleet(nodes: usize, threads: usize) -> FleetConfig {
         gpus_per_node: 1,
         threads,
         node_cfg: SystemConfig::testbed(),
+        ..Default::default()
     }
 }
 
@@ -78,6 +82,7 @@ fn fleet_runs_are_deterministic_across_runs_and_thread_counts() {
             gpus_per_node: 2,
             threads,
             node_cfg: SystemConfig::testbed(),
+            ..Default::default()
         };
         let mut router = FragAware;
         let m = run_fleet(&cfg, "miso", 42, &mut router, &trace).unwrap();
@@ -191,6 +196,7 @@ fn round_robin_spreads_arrivals_evenly() {
         gpus_per_node: 2,
         threads: 1,
         node_cfg: SystemConfig::testbed(),
+        ..Default::default()
     };
     let mut fleet = miso::fleet::FleetEngine::new(&cfg, "miso", 0).unwrap();
     let mut router = RoundRobin::new();
@@ -228,6 +234,7 @@ fn fleet_matches_single_engine_when_one_node() {
         gpus_per_node: 4,
         threads: 1,
         node_cfg: SystemConfig::testbed(),
+        ..Default::default()
     };
     let m_fleet = run_fleet(&cfg, "miso", 17, &mut RoundRobin::new(), &trace).unwrap();
 
@@ -241,4 +248,161 @@ fn fleet_matches_single_engine_when_one_node() {
         m_single.digest(),
         "1-node fleet must be bit-identical to the plain engine"
     );
+}
+
+#[test]
+fn digests_identical_across_pool_sizes_batching_and_executors() {
+    // The tentpole invariant: the persistent pool (any size), the
+    // spawn-per-epoch baseline, and batched vs unbatched arrival routing
+    // are pure executor choices — every combination must produce
+    // bit-identical fleet metrics on a Poisson trace (whose arrival
+    // instants are all distinct, so every routing epoch is a singleton).
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 96,
+        mean_interarrival_s: 8.0,
+        max_duration_s: 1200.0,
+        min_duration_s: 60.0,
+        seed: 21,
+        ..Default::default()
+    })
+    .generate();
+    let mut digests = Vec::new();
+    for (threads, executor, batch) in [
+        (1, FleetExecutor::PersistentPool, true),
+        (2, FleetExecutor::PersistentPool, true),
+        (8, FleetExecutor::PersistentPool, true),
+        (8, FleetExecutor::PersistentPool, false),
+        (1, FleetExecutor::PersistentPool, false),
+        (8, FleetExecutor::SpawnPerCall, true),
+        (8, FleetExecutor::SpawnPerCall, false),
+    ] {
+        let cfg = FleetConfig {
+            nodes: 6,
+            gpus_per_node: 2,
+            threads,
+            node_cfg: SystemConfig::testbed(),
+            executor,
+            batch_arrivals: batch,
+        };
+        let mut router = FragAware;
+        let m = run_fleet(&cfg, "miso", 99, &mut router, &trace).unwrap();
+        check_conservation(&m, trace.len());
+        digests.push((threads, executor, batch, m.digest()));
+    }
+    for w in digests.windows(2) {
+        assert_eq!(
+            w[0].3, w[1].3,
+            "digest mismatch between {:?} and {:?}",
+            (w[0].0, w[0].1, w[0].2),
+            (w[1].0, w[1].1, w[1].2)
+        );
+    }
+}
+
+#[test]
+fn two_run_fleet_calls_in_one_process_agree() {
+    // Pool shutdown/re-entry: each run_fleet spawns and tears down its own
+    // worker pool; a second run in the same process must come up clean and
+    // reproduce the first bit-for-bit.
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 60,
+        mean_interarrival_s: 15.0,
+        max_duration_s: 900.0,
+        min_duration_s: 60.0,
+        seed: 4,
+        ..Default::default()
+    })
+    .generate();
+    let cfg = FleetConfig {
+        nodes: 4,
+        gpus_per_node: 2,
+        threads: 4,
+        node_cfg: SystemConfig::testbed(),
+        ..Default::default()
+    };
+    let first = run_fleet(&cfg, "miso", 5, &mut FragAware, &trace).unwrap();
+    let second = run_fleet(&cfg, "miso", 5, &mut FragAware, &trace).unwrap();
+    assert_eq!(first.digest(), second.digest());
+}
+
+#[test]
+fn incremental_views_track_fresh_snapshots_at_batch_boundaries() {
+    // Batched routing semantics (NodeView::note_submitted): replay a trace
+    // containing same-instant bursts by hand, maintaining the epoch's view
+    // snapshot incrementally, and at the end of every batch compare it
+    // against freshly materialized views. `live_jobs` must agree exactly
+    // (a submit adds exactly one live job and nothing completes within the
+    // instant); the incremental queue depth is a conservative upper bound
+    // (the node's controller may have placed the job already, never the
+    // reverse).
+    let mut trace = Vec::new();
+    let mut id = 0u64;
+    for burst in 0..6u64 {
+        let t = burst as f64 * 400.0;
+        let n = 1 + (burst % 3) as usize; // burst sizes 1, 2, 3, ...
+        for _ in 0..n {
+            let mut j = Job::new(id, WorkloadSpec::mlp(), t, 300.0);
+            j.requirements.min_memory_mb = j.spec.mem_mb * 1.1;
+            if id % 5 == 0 {
+                j.requirements.min_slice_gpcs = 7; // some whole-GPU tenants
+            }
+            trace.push(j);
+            id += 1;
+        }
+    }
+
+    let cfg = FleetConfig {
+        nodes: 3,
+        gpus_per_node: 2,
+        threads: 1,
+        node_cfg: SystemConfig::testbed(),
+        ..Default::default()
+    };
+    let mut fleet = FleetEngine::new(&cfg, "miso", 17).unwrap();
+    let mut router = FragAware;
+    let mut views: Vec<NodeView> = Vec::new();
+    let mut it = trace.into_iter().peekable();
+    let mut batches = 0;
+    while let Some(first) = it.next() {
+        let epoch_t = first.arrival;
+        fleet.advance_all_to(epoch_t);
+        fleet.views_into(&mut views);
+        let mut job = first;
+        loop {
+            let node = router.route(&job, &views);
+            router.on_submitted(&job, node, &mut views);
+            fleet.nodes[node].submit(job);
+            match it.peek() {
+                Some(next) if next.arrival == epoch_t => job = it.next().unwrap(),
+                _ => break,
+            }
+        }
+        // Batch boundary: the maintained snapshot vs the engines' truth.
+        let fresh = fleet.views();
+        for (inc, f) in views.iter().zip(&fresh) {
+            assert_eq!(
+                inc.live_jobs, f.live_jobs,
+                "node {}: incremental live_jobs diverged from the engine",
+                f.node
+            );
+            assert!(
+                inc.queued >= f.queued,
+                "node {}: incremental queue depth {} under-counts the engine's {}",
+                f.node,
+                inc.queued,
+                f.queued
+            );
+            assert_eq!(
+                inc.empty_gpus + inc.partial_gpus + inc.full_gpus,
+                f.num_gpus,
+                "node {}: incremental GPU classes no longer partition the node",
+                f.node
+            );
+        }
+        batches += 1;
+    }
+    assert_eq!(batches, 6, "each burst forms exactly one routing epoch");
+    fleet.drain();
+    assert_eq!(fleet.live_jobs(), 0);
+    check_conservation(&fleet.finish(), 12);
 }
