@@ -17,7 +17,8 @@ mod harness;
 
 use harness::{bench, fmt, section};
 use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, OptStaPolicy};
-use miso::sim::{run, run_instrumented};
+use miso::sim::{run, run_instrumented, run_with_mode};
+use miso::telemetry::TraceMode;
 use miso::util::json::Value;
 use miso::workload::{TraceConfig, TraceGenerator};
 use miso::SystemConfig;
@@ -86,6 +87,47 @@ fn main() {
         ("events", Value::num(stats.events as f64)),
         ("work_per_event", Value::num(work)),
         ("jobs_per_s", Value::num(10_000.0 / wall_s)),
+    ]));
+
+    section("telemetry overhead: MISO testbed trace (off vs counters vs full)");
+    // The ISSUE 6 overhead budget: with telemetry off the instrumented
+    // entry point must stay within 2% of the plain `run` (both are the
+    // same code path — run() delegates to run_core with TraceMode::Off —
+    // so this is an A/A guard against the hooks growing real off-mode
+    // cost). Median-of-iters on both sides keeps the assert stable.
+    let base_p50 = bench("baseline run() [A/A]", || {
+        run(&mut MisoPolicy::paper(7), &trace, cfg.clone())
+    });
+    let off_p50 = bench("run_with_mode(Off)", || {
+        run_with_mode(&mut MisoPolicy::paper(7), &trace, cfg.clone(), TraceMode::Off)
+    });
+    let counters_p50 = bench("run_with_mode(Counters)", || {
+        run_with_mode(&mut MisoPolicy::paper(7), &trace, cfg.clone(), TraceMode::Counters)
+    });
+    let full_p50 = bench("run_with_mode(Full)", || {
+        run_with_mode(&mut MisoPolicy::paper(7), &trace, cfg.clone(), TraceMode::Full)
+    });
+    let off_overhead = off_p50 / base_p50 - 1.0;
+    println!(
+        "=> off-mode overhead {:+.2}% (budget ≤ 2%); counters {:+.2}%, full {:+.2}%",
+        off_overhead * 100.0,
+        (counters_p50 / base_p50 - 1.0) * 100.0,
+        (full_p50 / base_p50 - 1.0) * 100.0
+    );
+    // Self-assert (±50 µs absolute slack so sub-millisecond medians on a
+    // noisy CI runner cannot trip a nominally-relative budget).
+    assert!(
+        off_p50 <= base_p50 * 1.02 + 50e-6,
+        "telemetry-off overhead blew the 2% budget: baseline {base_p50}s vs off {off_p50}s"
+    );
+    records.push(Value::obj([
+        ("kind", Value::str("telemetry-overhead")),
+        ("baseline_p50_s", Value::num(base_p50)),
+        ("off_p50_s", Value::num(off_p50)),
+        ("counters_p50_s", Value::num(counters_p50)),
+        ("full_p50_s", Value::num(full_p50)),
+        ("off_overhead_frac", Value::num(off_overhead)),
+        ("budget_frac", Value::num(0.02)),
     ]));
 
     // Perf-trajectory record: repo root if we can see it, else cwd.

@@ -53,6 +53,7 @@ pub use router::{make_router, FragAware, LeastLoaded, RoundRobin, Router, ROUTER
 
 use crate::metrics::FleetMetrics;
 use crate::sim::Engine;
+use crate::telemetry::{EventKind, Stats, Telemetry, TraceEvent, TraceMode, FLEET_NODE};
 use crate::workload::Job;
 use crate::SystemConfig;
 use anyhow::Result;
@@ -90,6 +91,10 @@ pub struct FleetConfig {
     /// Group same-instant arrivals into one routing epoch in [`run_fleet`]
     /// (one advance + one view snapshot per instant instead of per job).
     pub batch_arrivals: bool,
+    /// Telemetry mode applied to every node engine and the gateway
+    /// ([`crate::telemetry`]); Off by default. Purely observational —
+    /// digests are bit-identical across modes.
+    pub telemetry: TraceMode,
 }
 
 impl Default for FleetConfig {
@@ -101,6 +106,7 @@ impl Default for FleetConfig {
             node_cfg: SystemConfig::testbed(),
             executor: FleetExecutor::PersistentPool,
             batch_arrivals: true,
+            telemetry: TraceMode::Off,
         }
     }
 }
@@ -319,8 +325,10 @@ fn _fleet_node_is_send(n: FleetNode) -> impl Send {
 }
 
 enum PoolCmd {
-    /// Epoch barrier: run `op` over `shard`, then ack.
-    Epoch { shard: NodeShard, op: EpochOp, ack: Sender<()> },
+    /// Epoch barrier: run `op` over `shard`, then ack with the shard's
+    /// wall-clock advance time in seconds (telemetry payload only — never
+    /// fed back into scheduling).
+    Epoch { shard: NodeShard, op: EpochOp, ack: Sender<f64> },
     Shutdown,
 }
 
@@ -346,6 +354,7 @@ impl WorkerPool {
                     while let Ok(cmd) = rx.recv() {
                         match cmd {
                             PoolCmd::Epoch { shard, op, ack } => {
+                                let t0 = std::time::Instant::now();
                                 // SAFETY: exclusive, non-aliasing access for
                                 // the epoch window — see `NodeShard`.
                                 let nodes = unsafe {
@@ -354,7 +363,7 @@ impl WorkerPool {
                                 for node in nodes {
                                     apply_op(node, op);
                                 }
-                                let _ = ack.send(());
+                                let _ = ack.send(t0.elapsed().as_secs_f64());
                             }
                             PoolCmd::Shutdown => break,
                         }
@@ -380,13 +389,15 @@ impl WorkerPool {
     /// below still waits for every shard that *was* dispatched before any
     /// panic propagates, so no worker can touch node memory after this
     /// frame's `&mut [FleetNode]` borrow ends.
-    fn run_epoch(&self, nodes: &mut [FleetNode], op: EpochOp) {
+    /// Returns the slowest shard's wall-clock advance time in seconds
+    /// (telemetry payload; 0.0 when nothing was dispatched).
+    fn run_epoch(&self, nodes: &mut [FleetNode], op: EpochOp) -> f64 {
         let workers = self.cmd_txs.len().min(nodes.len());
         if workers == 0 {
-            return;
+            return 0.0;
         }
         let chunk = nodes.len().div_ceil(workers);
-        let (ack_tx, ack_rx) = channel::<()>();
+        let (ack_tx, ack_rx) = channel::<f64>();
         let mut dispatched = 0usize;
         let mut dead_worker = false;
         for (w, shard) in nodes.chunks_mut(chunk).enumerate() {
@@ -405,9 +416,15 @@ impl WorkerPool {
         // Barrier: blocks until every dispatched worker has sent its ack
         // (or unwound, dropping its ack sender) — i.e. until no worker
         // holds a live shard pointer — before any panic below.
-        let acked = ack_rx.iter().count();
+        let mut acked = 0usize;
+        let mut max_shard_s = 0.0f64;
+        for shard_s in ack_rx.iter() {
+            acked += 1;
+            max_shard_s = max_shard_s.max(shard_s);
+        }
         assert!(!dead_worker, "a fleet worker died in an earlier epoch");
         assert_eq!(acked, dispatched, "a fleet worker panicked during the epoch");
+        max_shard_s
     }
 }
 
@@ -431,6 +448,10 @@ pub struct FleetEngine {
     /// into is freed.
     pool: Option<WorkerPool>,
     pub nodes: Vec<FleetNode>,
+    /// Gateway-level telemetry (router decisions + epoch barriers), written
+    /// only on the control thread; per-node events live in each node's
+    /// engine. Merge with [`FleetEngine::merged_events`].
+    pub telemetry: Telemetry,
     threads: usize,
     executor: FleetExecutor,
     gpus_per_node: usize,
@@ -449,6 +470,7 @@ impl FleetEngine {
             let mut policy =
                 crate::scheduler::build_policy(policy_name, crate::scheduler::node_seed(seed, id))?;
             let mut engine = Engine::new(node_cfg.clone());
+            engine.st.telemetry = Telemetry::for_node(cfg.telemetry, id as u32);
             policy.init(&mut engine.st);
             nodes.push(FleetNode { id, engine, policy, arrivals: 0 });
         }
@@ -465,6 +487,7 @@ impl FleetEngine {
         Ok(FleetEngine {
             nodes,
             pool,
+            telemetry: Telemetry::for_node(cfg.telemetry, FLEET_NODE),
             threads,
             executor: cfg.executor,
             gpus_per_node: cfg.gpus_per_node,
@@ -514,15 +537,47 @@ impl FleetEngine {
     }
 
     fn run_epoch(&mut self, op: EpochOp) {
-        if let Some(pool) = &self.pool {
-            pool.run_epoch(&mut self.nodes, op);
+        if self.telemetry.is_off() {
+            self.run_epoch_op(op);
             return;
+        }
+        // Epoch events use *virtual* pre/post-op instants as timestamps
+        // (deterministic, pool-size-independent); the wall-clock barrier
+        // and slowest-shard times ride along as payloads only and are
+        // excluded from the deterministic fingerprint.
+        let t_begin = self.now();
+        let target_s = match op {
+            EpochOp::Advance(t) => t,
+            EpochOp::Drain => -1.0,
+        };
+        self.telemetry.record(
+            t_begin,
+            EventKind::EpochBegin { nodes: self.nodes.len() as u32, target_s },
+        );
+        let t0 = std::time::Instant::now();
+        let (workers, max_shard_s) = self.run_epoch_op(op);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let t_end = self.now();
+        self.telemetry.record(
+            t_end,
+            EventKind::EpochEnd { workers: workers as u32, wall_s, max_shard_s },
+        );
+    }
+
+    /// Execute the epoch on whichever executor is configured; returns
+    /// `(workers used, slowest shard's wall seconds)` for telemetry.
+    fn run_epoch_op(&mut self, op: EpochOp) -> (usize, f64) {
+        if let Some(pool) = &self.pool {
+            let workers = pool.cmd_txs.len().min(self.nodes.len());
+            let max_shard_s = pool.run_epoch(&mut self.nodes, op);
+            return (workers, max_shard_s);
         }
         let threads = self.threads.min(self.nodes.len()).max(1);
         if self.executor == FleetExecutor::SpawnPerCall && threads > 1 {
             // Bench-only baseline: re-spawn scoped threads on every epoch
             // (the pre-pool executor, measured against in benches/fleet.rs).
             let chunk = self.nodes.len().div_ceil(threads);
+            let t0 = std::time::Instant::now();
             std::thread::scope(|s| {
                 for nodes in self.nodes.chunks_mut(chunk) {
                     s.spawn(move || {
@@ -532,11 +587,13 @@ impl FleetEngine {
                     });
                 }
             });
-            return;
+            return (threads, t0.elapsed().as_secs_f64());
         }
+        let t0 = std::time::Instant::now();
         for node in &mut self.nodes {
             apply_op(node, op);
         }
+        (1, t0.elapsed().as_secs_f64())
     }
 
     /// Validate a router's chosen node index. The [`Router::route`]
@@ -557,9 +614,53 @@ impl FleetEngine {
     /// submit it to the chosen node. Returns the node id.
     pub fn route_and_submit(&mut self, router: &mut dyn Router, job: Job) -> usize {
         let views = self.views();
-        let node = self.checked_node(router.route(&job, &views));
+        let mut fallbacks = 0u64;
+        let node = self.checked_node(router.route_traced(&job, &views, &mut fallbacks));
+        self.record_routing(&job, node, &views, fallbacks);
         self.nodes[node].submit(job);
         node
+    }
+
+    /// Gateway-side routing telemetry: one `RouterDecision` event per job
+    /// plus fallback-tier counters. No-op when telemetry is off.
+    fn record_routing(&mut self, job: &Job, node: usize, views: &[NodeView], fallbacks: u64) {
+        if self.telemetry.is_off() {
+            return;
+        }
+        // `record` below absorbs the decision into `router_decisions`;
+        // only the fallback-tier count needs an explicit bump.
+        self.telemetry.count(|s| s.router_fallbacks += fallbacks);
+        self.telemetry.record(
+            job.arrival,
+            EventKind::RouterDecision {
+                job: job.id.0,
+                node: node as u32,
+                live_jobs: views[node].live_jobs as u32,
+                candidates: views.len() as u32,
+            },
+        );
+    }
+
+    /// All trace events — every node's buffer plus the gateway's own
+    /// (router decisions, epoch barriers) — merged into one deterministic
+    /// stream ordered by `(virtual time, node, seq)`. The ordering is
+    /// independent of pool size and executor, asserted by `tests/fleet.rs`.
+    pub fn merged_events(&self) -> Vec<TraceEvent> {
+        let mut streams: Vec<Vec<TraceEvent>> =
+            self.nodes.iter().map(|n| n.engine.st.telemetry.events()).collect();
+        streams.push(self.telemetry.events());
+        crate::telemetry::merge_events(streams)
+    }
+
+    /// Fleet-wide counters and histograms: the gateway's stats merged with
+    /// every node's. Merging is commutative, so the result is independent
+    /// of node order and pool size.
+    pub fn merged_stats(&self) -> Stats {
+        let mut out = self.telemetry.stats.clone();
+        for n in &self.nodes {
+            out.merge(&n.engine.st.telemetry.stats);
+        }
+        out
     }
 
     /// Jobs routed to each node so far (indexed by node id).
@@ -607,6 +708,30 @@ pub fn run_fleet(
     router: &mut dyn Router,
     trace: &[Job],
 ) -> Result<FleetMetrics> {
+    Ok(run_fleet_core(cfg, policy_name, seed, router, trace)?.0)
+}
+
+/// [`run_fleet`] that also returns the merged fleet trace and stats
+/// (empty when `cfg.telemetry` is [`TraceMode::Off`]). The telemetry ride
+/// never changes routing or scheduling, so metrics digests are
+/// bit-identical to the untraced run — asserted by `tests/fleet.rs`.
+pub fn run_fleet_traced(
+    cfg: &FleetConfig,
+    policy_name: &str,
+    seed: u64,
+    router: &mut dyn Router,
+    trace: &[Job],
+) -> Result<(FleetMetrics, Vec<TraceEvent>, Stats)> {
+    run_fleet_core(cfg, policy_name, seed, router, trace)
+}
+
+fn run_fleet_core(
+    cfg: &FleetConfig,
+    policy_name: &str,
+    seed: u64,
+    router: &mut dyn Router,
+    trace: &[Job],
+) -> Result<(FleetMetrics, Vec<TraceEvent>, Stats)> {
     let mut fleet = FleetEngine::new(cfg, policy_name, seed)?;
     let mut arrivals: Vec<Job> = trace.to_vec();
     arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap().then(a.id.cmp(&b.id)));
@@ -619,7 +744,11 @@ pub fn run_fleet(
             fleet.views_into(&mut views);
             let mut job = first;
             loop {
-                let node = fleet.checked_node(router.route(&job, &views));
+                let mut fallbacks = 0u64;
+                let node = fleet.checked_node(router.route_traced(&job, &views, &mut fallbacks));
+                // Record against the pre-submit view so the `live_jobs`
+                // payload matches the unbatched path bit-for-bit.
+                fleet.record_routing(&job, node, &views, fallbacks);
                 router.on_submitted(&job, node, &mut views);
                 fleet.nodes[node].submit(job);
                 match it.peek() {
@@ -635,7 +764,9 @@ pub fn run_fleet(
         }
     }
     fleet.drain();
-    Ok(fleet.finish())
+    let events = fleet.merged_events();
+    let stats = fleet.merged_stats();
+    Ok((fleet.finish(), events, stats))
 }
 
 #[cfg(test)]
@@ -727,6 +858,54 @@ mod tests {
         assert_eq!(fleet.live_jobs(), 0);
         let m = fleet.finish();
         assert_eq!(m.total_jobs(), 8, "both waves complete across pool re-entry");
+    }
+
+    #[test]
+    fn fleet_telemetry_merges_gateway_and_node_events() {
+        let cfg = FleetConfig {
+            nodes: 2,
+            gpus_per_node: 1,
+            threads: 2,
+            telemetry: TraceMode::Full,
+            ..Default::default()
+        };
+        let mut router = RoundRobin::default();
+        let mut jobs: Vec<Job> = (0..6u64).map(small_job).collect();
+        for (i, j) in jobs.iter_mut().enumerate() {
+            j.arrival = i as f64 * 5.0;
+        }
+        let (metrics, events, stats) =
+            run_fleet_traced(&cfg, "miso", 7, &mut router, &jobs).unwrap();
+        assert_eq!(metrics.total_jobs(), 6);
+        assert_eq!(stats.router_decisions, 6, "one routing decision per job");
+        assert_eq!(stats.arrivals, 6);
+        assert_eq!(stats.completions, 6);
+        assert_eq!(stats.jct_s.count(), 6);
+        // One EpochBegin/EpochEnd pair per advance + one for the drain,
+        // regardless of pool size.
+        let begins = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::EpochBegin { .. }))
+            .count();
+        let ends = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::EpochEnd { .. }))
+            .count();
+        assert_eq!(begins, 7, "6 arrival epochs + 1 drain");
+        assert_eq!(begins, ends);
+        assert_eq!(stats.epochs as usize, ends);
+        // The drain epoch carries the −1.0 sentinel target.
+        assert!(events.iter().any(
+            |e| matches!(e.kind, EventKind::EpochBegin { target_s, .. } if target_s == -1.0)
+        ));
+        // Gateway events carry the sentinel node id; node events don't.
+        assert!(events.iter().any(|e| e.node == FLEET_NODE));
+        assert!(events.iter().any(|e| e.node < 2));
+        // Merged stream is sorted by (t, node, seq).
+        for w in events.windows(2) {
+            let key = |e: &TraceEvent| (e.t.to_bits(), e.node, e.seq);
+            assert!(key(&w[0]) <= key(&w[1]), "merged trace must be totally ordered");
+        }
     }
 
     #[cfg(debug_assertions)]

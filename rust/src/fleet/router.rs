@@ -36,6 +36,17 @@ pub trait Router: Send {
     fn on_submitted(&mut self, job: &Job, node: usize, views: &mut [NodeView]) {
         views[node].note_submitted(job);
     }
+
+    /// [`Router::route`], additionally bumping `fallbacks` when the pick
+    /// fell through the router's preferred placement tiers (telemetry's
+    /// `router_fallbacks` counter). Default: no tiers to fall through —
+    /// plain `route`. Shape-aware routers override this and implement
+    /// `route` by delegating with a throwaway counter, so both entry
+    /// points share one decision path.
+    fn route_traced(&mut self, job: &Job, views: &[NodeView], fallbacks: &mut u64) -> usize {
+        let _ = fallbacks;
+        self.route(job, views)
+    }
 }
 
 /// The canonical router names, in reporting order.
@@ -135,6 +146,10 @@ impl Router for FragAware {
     }
 
     fn route(&mut self, job: &Job, views: &[NodeView]) -> usize {
+        self.route_traced(job, views, &mut 0)
+    }
+
+    fn route_traced(&mut self, job: &Job, views: &[NodeView], fallbacks: &mut u64) -> usize {
         let need = job.min_feasible_slice().map_or(7, |k| k.gpcs());
 
         if need >= 4 {
@@ -173,6 +188,7 @@ impl Router for FragAware {
         }
         // No shallow fragmented fit: open a fresh GPU on the emptiest node
         // (costs the least relative future large-job capacity).
+        *fallbacks += 1;
         if let Some(v) = views
             .iter()
             .filter(|v| v.queued == 0 && v.empty_gpus > 0)
@@ -379,6 +395,45 @@ mod tests {
         frag.on_submitted(&big_job(0), first, &mut views);
         assert_eq!(views[0].empty_gpus, 1, "one whole GPU consumed in the snapshot");
         assert_eq!(frag.route(&big_job(1), &views), 1);
+    }
+
+    #[test]
+    fn route_traced_counts_only_fallback_tiers() {
+        let mut frag = FragAware;
+        let mut fallbacks = 0u64;
+
+        // A real fragmented fit (tier a) is not a fallback.
+        let mut views: Vec<NodeView> = (0..2).map(view).collect();
+        views[0].empty_gpus = 1;
+        views[0].partial_gpus = 1;
+        views[0].max_spare_gpcs = 4;
+        views[0].resident_jobs = 1;
+        frag.route_traced(&small_job(0), &views, &mut fallbacks);
+        assert_eq!(fallbacks, 0);
+
+        // No fragmented fit anywhere → opening a fresh GPU counts.
+        let views: Vec<NodeView> = (0..2).map(view).collect();
+        frag.route_traced(&small_job(1), &views, &mut fallbacks);
+        assert_eq!(fallbacks, 1);
+
+        // Saturated fleet → least-loaded fallback counts too.
+        let mut views: Vec<NodeView> = (0..2).map(view).collect();
+        for v in &mut views {
+            v.empty_gpus = 0;
+            v.full_gpus = 2;
+        }
+        frag.route_traced(&small_job(2), &views, &mut fallbacks);
+        assert_eq!(fallbacks, 2);
+
+        // Large jobs never hit the fallback tiers.
+        frag.route_traced(&big_job(3), &views, &mut fallbacks);
+        assert_eq!(fallbacks, 2);
+
+        // The default trait impl (no tiers) never bumps the counter.
+        let views: Vec<NodeView> = (0..2).map(view).collect();
+        let mut rr = RoundRobin::new();
+        rr.route_traced(&small_job(4), &views, &mut fallbacks);
+        assert_eq!(fallbacks, 2);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //!   multi-node federation that advances many per-node MISO engines in
 //!   lock-step virtual time (parallel across OS threads) and places
 //!   arriving jobs with pluggable routers — round-robin, least-loaded,
-//!   and MIG-fragmentation-aware.
+//!   and MIG-fragmentation-aware. The [`telemetry`] subsystem records
+//!   every controller decision (profiling, repartitions, checkpoints,
+//!   routing, pool epochs) as deterministic trace events with streaming
+//!   counters/histograms and a Chrome `trace_event` exporter.
 //! * **Layer 2 (python/compile, build time only)** — the U-Net autoencoder
 //!   performance predictor in JAX, AOT-lowered to HLO text.
 //! * **Layer 1 (python/compile/kernels, build time only)** — Pallas kernels
@@ -39,6 +42,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

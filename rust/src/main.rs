@@ -8,6 +8,8 @@
 //! * `fleet`       — run a multi-node fleet simulation: N nodes in
 //!   lock-step virtual time, arriving jobs placed by a pluggable router
 //!   (round-robin | least-loaded | frag-aware | all).
+//! * `trace`       — full-telemetry run exporting a Chrome `trace_event`
+//!   JSON (Perfetto-loadable) plus streaming counters/histograms.
 //! * `experiment`  — regenerate a paper table/figure (see DESIGN.md §3).
 //! * `serve`       — run the live controller + per-GPU server APIs (Fig. 6)
 //!   on a TCP port with simulated GPUs in scaled wall-clock time; with
@@ -19,6 +21,7 @@
 use anyhow::{bail, Context, Result};
 use miso::scheduler::{MisoPolicy, MpsOnlyPolicy, NoPartPolicy, ProfilingMode};
 use miso::sim::Policy;
+use miso::telemetry::TraceMode;
 use miso::workload::{TraceConfig, TraceGenerator};
 use miso::SystemConfig;
 use std::collections::HashMap;
@@ -37,16 +40,22 @@ fn usage() -> ! {
          commands:\n\
            gen-data    --out FILE [--mixes-per-count N] [--seed S] [--clean]\n\
            simulate    --policy P [--gpus N] [--jobs N] [--lambda S] [--seed S]\n\
-                       (P = miso | miso-unet | nopart | optsta | oracle | mps-only | miso-migprof)\n\
+                       [--telemetry M]\n\
+                       (P = miso | miso-unet | nopart | optsta | oracle | mps-only | miso-migprof;\n\
+                        M = off | counters | full — stats print unless off)\n\
            fleet       [--nodes N] [--gpus N] [--router R] [--policy P] [--jobs N]\n\
                        [--lambda S] [--seed S] [--threads T] [--skewed]\n\
-                       [--executor E] [--no-batch]\n\
+                       [--executor E] [--no-batch] [--telemetry M]\n\
                        (R = round-robin | least-loaded | frag-aware | all;\n\
                         E = pool | spawn — persistent worker pool vs\n\
                         spawn-per-epoch baseline, identical results)\n\
+           trace       [--policy P] [--gpus N] [--jobs N] [--lambda S] [--seed S]\n\
+                       [--nodes N] [--router R] [--trace-out FILE] [--stats-json]\n\
+                       (full-telemetry run; writes a Chrome trace_event JSON\n\
+                        loadable in Perfetto / chrome://tracing, default trace.json)\n\
            experiment  --id ID [--trials N] [--out FILE]\n\
            serve       [--port P] [--gpus N] [--time-scale X] [--nodes N] [--router R]\n\
-                       [--fleet-threads T]\n\
+                       [--fleet-threads T] [--telemetry M]\n\
            list"
     );
     std::process::exit(2);
@@ -100,6 +109,7 @@ fn run() -> Result<()> {
         "gen-data" => gen_data(&flags),
         "simulate" => simulate(&flags),
         "fleet" => fleet(&flags),
+        "trace" => trace_cmd(&flags),
         "experiment" => miso::experiments::run_experiment(
             flags.get("id").context("--id required")?,
             flags.num("trials", 0usize)?,
@@ -110,6 +120,9 @@ fn run() -> Result<()> {
             let gpus = flags.num("gpus", 4usize)?;
             let time_scale = flags.num("time-scale", 60.0f64)?;
             let nodes = flags.num("nodes", 1usize)?;
+            // TRACE/STATS are protocol commands, so servers record by
+            // default; `--telemetry off` opts out.
+            let telemetry = telemetry_flag(&flags, TraceMode::Full)?;
             if nodes > 1 {
                 miso::server::serve_fleet(
                     port,
@@ -119,9 +132,10 @@ fn run() -> Result<()> {
                     flags.get("router").unwrap_or("frag-aware"),
                     // Sizes the gateway's persistent worker pool (0 = auto).
                     flags.num("fleet-threads", 0usize)?,
+                    telemetry,
                 )
             } else {
-                miso::server::serve(port, gpus, time_scale)
+                miso::server::serve(port, gpus, time_scale, telemetry)
             }
         }
         "list" => {
@@ -131,6 +145,16 @@ fn run() -> Result<()> {
             Ok(())
         }
         _ => usage(),
+    }
+}
+
+/// Parse `--telemetry off|counters|full` (defaulting to `default`).
+fn telemetry_flag(flags: &Flags, default: TraceMode) -> Result<TraceMode> {
+    match flags.get("telemetry") {
+        None => Ok(default),
+        Some(s) => {
+            TraceMode::parse(s).context(format!("invalid --telemetry '{s}' (off | counters | full)"))
+        }
     }
 }
 
@@ -175,9 +199,10 @@ fn simulate(flags: &Flags) -> Result<()> {
     } else {
         cfg
     };
+    let telemetry = telemetry_flag(flags, TraceMode::Off)?;
     let mut policy = make_policy(policy_name, seed ^ 0xD15C0)?;
     let t0 = std::time::Instant::now();
-    let m = miso::sim::run(policy.as_mut(), &trace, cfg);
+    let (m, tel) = miso::sim::run_with_mode(policy.as_mut(), &trace, cfg, telemetry);
     let wall = t0.elapsed().as_secs_f64();
     let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
     println!("policy            : {}", policy.name());
@@ -190,6 +215,10 @@ fn simulate(flags: &Flags) -> Result<()> {
         miso::util::stats::percentile_sorted(&sorted_rel(&m), 0.9));
     println!("lifecycle         : queue {q:.1}% | mps {mps:.1}% | ckpt {ckpt:.1}% | exec {exec:.1}% | idle {idle:.1}%");
     println!("sim wall time     : {wall:.2} s");
+    if telemetry != TraceMode::Off {
+        println!("\ntelemetry ({}):", telemetry.name());
+        print!("{}", tel.stats.render_text());
+    }
     Ok(())
 }
 
@@ -198,7 +227,7 @@ fn simulate(flags: &Flags) -> Result<()> {
 /// fully deterministic given `--seed` (the printed digest is bit-stable
 /// across repetitions and `--threads` values).
 fn fleet(flags: &Flags) -> Result<()> {
-    use miso::fleet::{make_router, run_fleet, FleetConfig, FleetExecutor, ROUTER_NAMES};
+    use miso::fleet::{make_router, run_fleet_traced, FleetConfig, FleetExecutor, ROUTER_NAMES};
 
     let nodes = flags.num("nodes", 4usize)?;
     let gpus = flags.num("gpus", 8usize)?;
@@ -225,6 +254,7 @@ fn fleet(flags: &Flags) -> Result<()> {
         ..Default::default()
     };
     let trace = TraceGenerator::new(trace_cfg).generate();
+    let telemetry = telemetry_flag(flags, TraceMode::Off)?;
     let fleet_cfg = FleetConfig {
         nodes,
         gpus_per_node: gpus,
@@ -232,6 +262,7 @@ fn fleet(flags: &Flags) -> Result<()> {
         node_cfg: SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() },
         executor,
         batch_arrivals: !flags.flag("no-batch"),
+        telemetry,
     };
 
     println!("fleet             : {nodes} nodes × {gpus} GPUs ({} total)", nodes * gpus);
@@ -246,7 +277,8 @@ fn fleet(flags: &Flags) -> Result<()> {
     for name in routers {
         let mut router = make_router(name)?;
         let t0 = std::time::Instant::now();
-        let m = run_fleet(&fleet_cfg, policy, seed ^ 0xF1EE7, router.as_mut(), &trace)?;
+        let (m, _events, stats) =
+            run_fleet_traced(&fleet_cfg, policy, seed ^ 0xF1EE7, router.as_mut(), &trace)?;
         let wall = t0.elapsed().as_secs_f64();
         let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
         println!("\nrouter {name}");
@@ -269,13 +301,90 @@ fn fleet(flags: &Flags) -> Result<()> {
                 );
             }
         }
+        if telemetry != TraceMode::Off {
+            println!("\n  telemetry ({}):", telemetry.name());
+            for line in stats.render_text().lines() {
+                println!("  {line}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Full-telemetry run of a short simulation (or fleet, with `--nodes N`):
+/// prints the streaming stats and writes a Chrome `trace_event` JSON file
+/// loadable in Perfetto / `chrome://tracing`.
+fn trace_cmd(flags: &Flags) -> Result<()> {
+    use miso::telemetry::{chrome_trace, Stats, TraceEvent};
+
+    let policy_name = flags.get("policy").unwrap_or("miso");
+    let nodes = flags.num("nodes", 1usize)?;
+    let gpus = flags.num("gpus", 4usize)?;
+    let jobs = flags.num("jobs", 40usize)?;
+    let seed = flags.num("seed", 0u64)?;
+    let lambda = flags.num("lambda", 60.0f64)?;
+    let out_path = flags.get("trace-out").unwrap_or("trace.json").to_string();
+
+    let trace_cfg = TraceConfig {
+        num_jobs: jobs,
+        mean_interarrival_s: lambda,
+        seed,
+        ..Default::default()
+    };
+    let trace = TraceGenerator::new(trace_cfg).generate();
+
+    let (events, stats): (Vec<TraceEvent>, Stats) = if nodes > 1 {
+        let fleet_cfg = miso::fleet::FleetConfig {
+            nodes,
+            gpus_per_node: gpus,
+            node_cfg: SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() },
+            telemetry: TraceMode::Full,
+            ..Default::default()
+        };
+        let mut router = miso::fleet::make_router(flags.get("router").unwrap_or("frag-aware"))?;
+        let (_m, events, stats) = miso::fleet::run_fleet_traced(
+            &fleet_cfg,
+            policy_name,
+            seed ^ 0xF1EE7,
+            router.as_mut(),
+            &trace,
+        )?;
+        (events, stats)
+    } else {
+        let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
+        let mut policy = make_policy(policy_name, seed ^ 0xD15C0)?;
+        let (_m, tel) =
+            miso::sim::run_with_mode(policy.as_mut(), &trace, cfg, TraceMode::Full);
+        (tel.events(), tel.stats)
+    };
+
+    std::fs::write(&out_path, format!("{}\n", chrome_trace(&events)))
+        .with_context(|| format!("writing {out_path}"))?;
+    println!(
+        "wrote {} events ({} jobs, policy {policy_name}, {nodes} node(s) × {gpus} GPUs) to {out_path}",
+        events.len(),
+        jobs
+    );
+    println!("open in Perfetto (ui.perfetto.dev) or chrome://tracing\n");
+    if flags.flag("stats-json") {
+        println!("{}", stats.to_json());
+    } else {
+        print!("{}", stats.render_text());
     }
     Ok(())
 }
 
 fn sorted_rel(m: &miso::metrics::RunMetrics) -> Vec<f64> {
-    let mut v: Vec<f64> = m.records.iter().map(|r| r.relative_jct()).collect();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Zero-work jobs make `relative_jct` non-finite; keep the percentile
+    // input NaN-free (total_cmp would otherwise sort NaNs to one end and
+    // skew every quantile).
+    let mut v: Vec<f64> = m
+        .records
+        .iter()
+        .map(|r| r.relative_jct())
+        .filter(|x| x.is_finite())
+        .collect();
+    v.sort_by(f64::total_cmp);
     v
 }
 

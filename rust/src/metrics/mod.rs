@@ -66,7 +66,9 @@ impl RunMetrics {
     pub fn makespan(&self) -> f64 {
         let start = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
         let end = self.records.iter().map(|r| r.completion).fold(0.0, f64::max);
-        end - start
+        // No records ⇒ `start` stays +∞ and `end - start` would be -∞;
+        // report an empty run as zero-length instead.
+        if start.is_finite() { end - start } else { 0.0 }
     }
 
     /// Time-averaged STP (Eq. 1) over the busy interval.
@@ -85,9 +87,17 @@ impl RunMetrics {
     }
 
     /// CDF of relative JCT: sorted (x = relative JCT, y = fraction ≤ x).
+    /// Jobs with non-finite relative JCT (zero-work submissions divide by
+    /// zero) are excluded — `partial_cmp().unwrap()` on a NaN would
+    /// otherwise panic mid-sort.
     pub fn relative_jct_cdf(&self) -> Vec<(f64, f64)> {
-        let mut xs: Vec<f64> = self.records.iter().map(JobRecord::relative_jct).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut xs: Vec<f64> = self
+            .records
+            .iter()
+            .map(JobRecord::relative_jct)
+            .filter(|x| x.is_finite())
+            .collect();
+        xs.sort_by(f64::total_cmp);
         let n = xs.len() as f64;
         xs.into_iter()
             .enumerate()
@@ -96,7 +106,8 @@ impl RunMetrics {
     }
 
     /// Fraction of jobs with relative JCT ≤ `x` (e.g. the paper's "50% of
-    /// MISO's jobs experience within 1.5× of the ideal JCT").
+    /// MISO's jobs experience within 1.5× of the ideal JCT"). NaN relative
+    /// JCTs (zero-work jobs) compare false and so never count as within.
     pub fn frac_within(&self, x: f64) -> f64 {
         let n = self.records.len();
         if n == 0 {
@@ -385,6 +396,36 @@ mod tests {
         };
         assert_eq!(m.makespan(), 250.0);
         assert_eq!(m.avg_jct(), (100.0 + 220.0) / 2.0);
+    }
+
+    #[test]
+    fn empty_run_makespan_is_zero() {
+        // Regression: with no records, min-fold start is +∞ and the old
+        // unguarded subtraction reported -∞.
+        let m = RunMetrics { records: vec![], stp_samples: vec![] };
+        assert_eq!(m.makespan(), 0.0);
+        assert!(m.makespan().is_finite());
+    }
+
+    #[test]
+    fn zero_work_jobs_do_not_poison_relative_jct() {
+        // Regression: a zero-work job has relative JCT = jct/0 (∞ or NaN
+        // when it also completes instantly); the CDF sort used to panic on
+        // `partial_cmp().unwrap()`.
+        let mut zero_instant = rec(5.0, 5.0, 0.0, 0.0); // 0/0 = NaN
+        zero_instant.mig_exec_s = 0.0;
+        let zero_queued = rec(0.0, 10.0, 0.0, 10.0); // 10/0 = +inf
+        let m = RunMetrics {
+            records: vec![rec(0.0, 100.0, 50.0, 0.0), zero_instant, zero_queued],
+            stp_samples: vec![],
+        };
+        let cdf = m.relative_jct_cdf();
+        assert_eq!(cdf.len(), 1, "non-finite points are excluded");
+        assert!((cdf[0].0 - 2.0).abs() < 1e-12);
+        assert!((cdf[0].1 - 1.0).abs() < 1e-12);
+        // frac_within never counts the NaN/∞ jobs.
+        assert!((m.frac_within(2.5) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.frac_within(0.5), 0.0);
     }
 
     #[test]

@@ -107,6 +107,7 @@ impl MisoPolicy {
                                 mask_infeasible(&mut t, &st.jobs[&id].job);
                                 self.tables.insert(id, t);
                                 self.group_fastpath += 1;
+                                st.telemetry.count(|s| s.policy_fastpath += 1);
                             }
                         }
                     }
@@ -206,6 +207,7 @@ impl MisoPolicy {
                     // gate on !busy, and on_profiling_done runs after its
                     // pending was consumed), so profiling can start.
                     debug_assert!(st.gpus[gpu].pending.is_none());
+                    st.telemetry.count(|s| s.policy_reprofiles += 1);
                     st.begin_mps_profiling(gpu, extra);
                     return;
                 }
@@ -255,6 +257,7 @@ impl Policy for MisoPolicy {
     fn on_transition_done(&mut self, st: &mut ClusterState, gpu: usize) {
         if self.pending_reprofile.remove(&gpu) && !st.gpus[gpu].busy && st.gpus[gpu].gpu.job_count() > 0 {
             self.phase_reprofiles += 1;
+            st.telemetry.count(|s| s.policy_reprofiles += 1);
             st.begin_mps_profiling(gpu, &[]);
         }
         self.drain(st);
@@ -312,6 +315,7 @@ impl Policy for MisoPolicy {
                     self.pending_reprofile.insert(gpu);
                 } else {
                     self.phase_reprofiles += 1;
+                    st.telemetry.count(|s| s.policy_reprofiles += 1);
                     st.begin_mps_profiling(gpu, &[]);
                 }
             }

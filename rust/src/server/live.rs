@@ -11,8 +11,18 @@
 //! JOBS                                                     -> per-job states
 //! METRICS                                                  -> aggregate metrics so far
 //! FLEET                                                    -> per-node snapshots
+//! TRACE [n]                                                -> most recent n trace events (default 100)
+//! STATS                                                    -> telemetry counters + histograms
 //! QUIT                                                     -> closes the connection
 //! ```
+//!
+//! Both gateways run with full telemetry ([`crate::telemetry`]) enabled:
+//! `TRACE n` returns the last `n` decision events — merged across every
+//! node (plus gateway routing/epoch events) on a fleet, ordered by
+//! `(virtual time, node, seq)` — and `STATS` exposes the streaming
+//! counters and log-bucketed histograms as JSON. Live servers are
+//! wall-clock-driven and thus not replay-deterministic; determinism
+//! guarantees apply to `miso sim` / `miso fleet` runs.
 //!
 //! `JOBS` replies carry every queued/running job but only *recently*
 //! completed ones ([`JOBS_RETENTION_S`] virtual seconds): a long-lived
@@ -33,6 +43,7 @@
 use crate::fleet::{make_router, FleetConfig, FleetEngine, Router};
 use crate::scheduler::MisoPolicy;
 use crate::sim::{Engine, GpuSim, JobState, Policy};
+use crate::telemetry::{TraceEvent, TraceMode};
 use crate::util::json::Value;
 use crate::workload::{Job, ModelFamily, WorkloadSpec};
 use crate::SystemConfig;
@@ -56,6 +67,19 @@ enum Request {
     Jobs { reply: Sender<String> },
     Metrics { reply: Sender<String> },
     Fleet { reply: Sender<String> },
+    Trace { n: usize, reply: Sender<String> },
+    Stats { reply: Sender<String> },
+}
+
+/// Default `TRACE` depth when the client sends no count.
+const TRACE_DEFAULT_N: usize = 100;
+
+/// Serialize a `TRACE` reply: the most recent events, oldest first.
+fn trace_json(events: &[TraceEvent]) -> Value {
+    Value::obj([
+        ("count", Value::num(events.len() as f64)),
+        ("events", Value::arr(events.iter().map(TraceEvent::to_json))),
+    ])
 }
 
 /// Handle to a running live server (used by tests and `examples/live_serve`).
@@ -92,6 +116,17 @@ impl Drop for LiveServer {
 /// Start the live server on `port` (0 = ephemeral) with `gpus` simulated
 /// A100s; virtual time runs at `time_scale` × wall-clock.
 pub fn start(port: u16, gpus: usize, time_scale: f64) -> Result<LiveServer> {
+    start_with(port, gpus, time_scale, TraceMode::Full)
+}
+
+/// [`start`] with an explicit telemetry mode (the `--telemetry` CLI flag;
+/// `TRACE`/`STATS` reply empty when it is [`TraceMode::Off`]).
+pub fn start_with(
+    port: u16,
+    gpus: usize,
+    time_scale: f64,
+    telemetry: TraceMode,
+) -> Result<LiveServer> {
     anyhow::ensure!(gpus > 0, "need at least one GPU");
     anyhow::ensure!(time_scale > 0.0, "time scale must be positive");
     let listener = TcpListener::bind(("127.0.0.1", port)).context("binding TCP listener")?;
@@ -104,7 +139,7 @@ pub fn start(port: u16, gpus: usize, time_scale: f64) -> Result<LiveServer> {
     // --- controller thread: owns engine + policy (not Send-constrained) ---
     let stop_c = stop.clone();
     let controller = std::thread::spawn(move || {
-        controller_loop(rx, stop_c, gpus, time_scale);
+        controller_loop(rx, stop_c, gpus, time_scale, telemetry);
     });
 
     // --- listener thread: accepts connections, one handler thread each ---
@@ -149,6 +184,20 @@ pub fn start_fleet(
     router: &str,
     fleet_threads: usize,
 ) -> Result<LiveServer> {
+    start_fleet_with(port, nodes, gpus_per_node, time_scale, router, fleet_threads, TraceMode::Full)
+}
+
+/// [`start_fleet`] with an explicit telemetry mode.
+#[allow(clippy::too_many_arguments)]
+pub fn start_fleet_with(
+    port: u16,
+    nodes: usize,
+    gpus_per_node: usize,
+    time_scale: f64,
+    router: &str,
+    fleet_threads: usize,
+    telemetry: TraceMode,
+) -> Result<LiveServer> {
     anyhow::ensure!(nodes > 0, "need at least one node");
     anyhow::ensure!(gpus_per_node > 0, "need at least one GPU per node");
     anyhow::ensure!(time_scale > 0.0, "time scale must be positive");
@@ -163,7 +212,16 @@ pub fn start_fleet(
     let stop_c = stop.clone();
     let router = router.to_string();
     let controller = std::thread::spawn(move || {
-        controller_loop_fleet(rx, stop_c, nodes, gpus_per_node, time_scale, router, fleet_threads);
+        controller_loop_fleet(
+            rx,
+            stop_c,
+            nodes,
+            gpus_per_node,
+            time_scale,
+            router,
+            fleet_threads,
+            telemetry,
+        );
     });
 
     let stop_l = stop.clone();
@@ -175,14 +233,14 @@ pub fn start_fleet(
 }
 
 /// Blocking entrypoint for `miso serve`.
-pub fn serve(port: u16, gpus: usize, time_scale: f64) -> Result<()> {
-    let server = start(port, gpus, time_scale)?;
+pub fn serve(port: u16, gpus: usize, time_scale: f64, telemetry: TraceMode) -> Result<()> {
+    let server = start_with(port, gpus, time_scale, telemetry)?;
     println!(
         "MISO live controller on {} — {gpus} simulated A100s, virtual time ×{time_scale}",
         server.addr()
     );
     println!(
-        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | QUIT"
+        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | TRACE [n] | STATS | QUIT"
     );
     // Block until killed.
     loop {
@@ -191,6 +249,7 @@ pub fn serve(port: u16, gpus: usize, time_scale: f64) -> Result<()> {
 }
 
 /// Blocking entrypoint for `miso serve --nodes N` (N > 1).
+#[allow(clippy::too_many_arguments)]
 pub fn serve_fleet(
     port: u16,
     nodes: usize,
@@ -198,23 +257,43 @@ pub fn serve_fleet(
     time_scale: f64,
     router: &str,
     fleet_threads: usize,
+    telemetry: TraceMode,
 ) -> Result<()> {
-    let server = start_fleet(port, nodes, gpus_per_node, time_scale, router, fleet_threads)?;
+    let server = start_fleet_with(
+        port,
+        nodes,
+        gpus_per_node,
+        time_scale,
+        router,
+        fleet_threads,
+        telemetry,
+    )?;
     println!(
         "MISO fleet gateway on {} — {nodes} nodes × {gpus_per_node} A100s, router {router}, virtual time ×{time_scale}",
         server.addr()
     );
     println!(
-        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | QUIT"
+        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | TRACE [n] | STATS | QUIT"
     );
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
 }
 
-fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, time_scale: f64) {
+fn controller_loop(
+    rx: Receiver<Request>,
+    stop: Arc<AtomicBool>,
+    gpus: usize,
+    time_scale: f64,
+    telemetry: TraceMode,
+) {
     let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
     let mut engine = Engine::new(cfg);
+    // The live controller records decisions by default (TRACE/STATS are
+    // part of the protocol; a wall-clock-driven server has no
+    // digest-replay determinism to protect), but `--telemetry off`
+    // disables it for overhead-sensitive deployments.
+    engine.st.telemetry.mode = telemetry;
     let mut policy = MisoPolicy::paper(0x11FE);
     policy.init(&mut engine.st);
     let mut next_id: u64 = 0;
@@ -272,6 +351,12 @@ fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, ti
                     let nodes = Value::arr(vec![node_json(0, &engine)]);
                     let _ = reply.send(Value::obj([("nodes", nodes)]).to_string());
                 }
+                Request::Trace { n, reply } => {
+                    let _ = reply.send(trace_json(&engine.st.telemetry.last_n(n)).to_string());
+                }
+                Request::Stats { reply } => {
+                    let _ = reply.send(engine.st.telemetry.stats.to_json().to_string());
+                }
             }
         }
         std::thread::sleep(Duration::from_millis(5));
@@ -281,6 +366,7 @@ fn controller_loop(rx: Receiver<Request>, stop: Arc<AtomicBool>, gpus: usize, ti
 /// Fleet-gateway controller: owns a [`FleetEngine`] + router; every node
 /// advances to the same scaled wall-clock instant before requests are
 /// served, and SUBMIT places jobs through the router.
+#[allow(clippy::too_many_arguments)]
 fn controller_loop_fleet(
     rx: Receiver<Request>,
     stop: Arc<AtomicBool>,
@@ -289,6 +375,7 @@ fn controller_loop_fleet(
     time_scale: f64,
     router_name: String,
     fleet_threads: usize,
+    telemetry: TraceMode,
 ) {
     let cfg = FleetConfig {
         nodes,
@@ -298,6 +385,8 @@ fn controller_loop_fleet(
         // itself at one thread to avoid per-tick spawn churn.
         threads: fleet_threads,
         node_cfg: crate::SystemConfig::testbed(),
+        // Gateways record by default (see the single-node controller).
+        telemetry,
         ..Default::default()
     };
     let mut fleet = FleetEngine::new(&cfg, "miso", 0x11FE).expect("fleet construction");
@@ -370,6 +459,16 @@ fn controller_loop_fleet(
                         .map(|n| node_json(n.id, &n.engine))
                         .collect();
                     let _ = reply.send(Value::obj([("nodes", Value::arr(nodes))]).to_string());
+                }
+                Request::Trace { n, reply } => {
+                    // Merge every node's buffer with the gateway's own
+                    // (routing + epoch events), then keep the tail.
+                    let merged = fleet.merged_events();
+                    let skip = merged.len().saturating_sub(n);
+                    let _ = reply.send(trace_json(&merged[skip..]).to_string());
+                }
+                Request::Stats { reply } => {
+                    let _ = reply.send(fleet.merged_stats().to_json().to_string());
                 }
             }
         }
@@ -519,6 +618,15 @@ fn handle_connection(stream: TcpStream, tx: Sender<Request>) -> Result<()> {
             ["JOBS"] => request(&tx, |reply| Request::Jobs { reply }),
             ["METRICS"] => request(&tx, |reply| Request::Metrics { reply }),
             ["FLEET"] => request(&tx, |reply| Request::Fleet { reply }),
+            ["TRACE"] => request(&tx, |reply| Request::Trace { n: TRACE_DEFAULT_N, reply }),
+            ["TRACE", n] => match n.parse::<usize>() {
+                Ok(n) => request(&tx, |reply| Request::Trace { n, reply }),
+                Err(_) => {
+                    respond(&mut writer, &err_json("TRACE [n]"))?;
+                    continue;
+                }
+            },
+            ["STATS"] => request(&tx, |reply| Request::Stats { reply }),
             ["QUIT"] => return Ok(()),
             [] => continue,
             _ => Some(err_json("unknown command")),
@@ -668,6 +776,58 @@ mod tests {
     #[test]
     fn fleet_gateway_rejects_bad_router() {
         assert!(start_fleet(0, 2, 1, 60.0, "no-such-router", 1).is_err());
+    }
+
+    #[test]
+    fn single_node_trace_and_stats_expose_decisions() {
+        let server = start(0, 2, 240.0).unwrap();
+        let addr = server.addr();
+        let resp = send_line(addr, &["SUBMIT ResNet50 0 30", "TRACE 50", "STATS"]);
+        assert!(crate::util::json::parse(&resp[0]).unwrap().get("ok").is_some());
+
+        let trace = crate::util::json::parse(&resp[1]).unwrap();
+        let events = trace.req_arr("events").unwrap();
+        assert!(!events.is_empty(), "an arrival must be traced: {trace}");
+        assert!(
+            events.iter().any(|e| e.get("kind") == Some(&Value::str("arrival"))),
+            "{trace}"
+        );
+        assert_eq!(trace.req_f64("count").unwrap() as usize, events.len());
+
+        let stats = crate::util::json::parse(&resp[2]).unwrap();
+        assert!(stats.req_f64("arrivals").unwrap() >= 1.0, "{stats}");
+        assert!(stats.get("histograms").is_some(), "{stats}");
+
+        // Bad TRACE argument is rejected without hitting the controller.
+        let resp = send_line(addr, &["TRACE nope"]);
+        assert!(resp[0].contains("TRACE [n]"), "{}", resp[0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn fleet_gateway_trace_merges_router_and_node_events() {
+        let server = start_fleet(0, 3, 1, 240.0, "round-robin", 2).unwrap();
+        let addr = server.addr();
+        let resp = send_line(
+            addr,
+            &["SUBMIT ResNet50 0 30", "SUBMIT ResNet50 0 30", "TRACE 2000", "STATS"],
+        );
+        let trace = crate::util::json::parse(&resp[2]).unwrap();
+        let events = trace.req_arr("events").unwrap();
+        // The merged stream must contain gateway routing decisions *and*
+        // node-level arrivals.
+        assert!(
+            events.iter().any(|e| e.get("kind") == Some(&Value::str("router-decision"))),
+            "{trace}"
+        );
+        assert!(
+            events.iter().any(|e| e.get("kind") == Some(&Value::str("arrival"))),
+            "{trace}"
+        );
+        let stats = crate::util::json::parse(&resp[3]).unwrap();
+        assert_eq!(stats.req_f64("router_decisions").unwrap(), 2.0, "{stats}");
+        assert!(stats.req_f64("arrivals").unwrap() >= 2.0, "{stats}");
+        server.shutdown();
     }
 
     #[test]

@@ -5,4 +5,4 @@
 
 mod live;
 
-pub use live::{serve, serve_fleet, start, start_fleet, LiveServer};
+pub use live::{serve, serve_fleet, start, start_fleet, start_fleet_with, start_with, LiveServer};

@@ -50,6 +50,7 @@ use crate::metrics::{MetricsCollector, RunMetrics};
 use crate::mig::{MigConfig, SliceKind};
 use crate::perfmodel::{mig_speed, mps_speeds, MPS_LEVELS};
 use crate::predictor::features::{profile_mps_matrix, MpsMatrix};
+use crate::telemetry::{pack_partition, EventKind, Telemetry, TraceMode};
 use crate::util::Rng;
 use crate::workload::{Job, JobId, WorkloadSpec};
 use events::EventIndex;
@@ -199,6 +200,10 @@ pub struct ClusterState {
     pub measure_rng: Option<Rng>,
     /// Event-index instrumentation counters.
     pub stats: CoreStats,
+    /// Decision tracing + streaming counters (DESIGN.md §Observability).
+    /// Off by default; never read by scheduling paths, so digests are
+    /// bit-identical with tracing on or off.
+    pub telemetry: Telemetry,
     /// Free-slice / spare-capacity placement index (read via
     /// [`ClusterState::placement`]; written only by `reindex_gpu`).
     placement: PlacementIndex,
@@ -225,6 +230,7 @@ impl ClusterState {
             metrics: MetricsCollector::new(),
             measure_rng: Some(Rng::seed_from_u64(0x5eed)),
             stats: CoreStats::default(),
+            telemetry: Telemetry::default(),
             placement: PlacementIndex::new(num_gpus),
             active_jobs: 0,
             stp: 0.0,
@@ -538,6 +544,7 @@ impl ClusterState {
         self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
         self.queue.remove(id);
         self.set_state(id, JobState::MigRun { speed });
+        self.telemetry.record(self.now, EventKind::Placed { job: id.0, gpu: gpu as u32 });
         true
     }
 
@@ -569,11 +576,13 @@ impl ClusterState {
     /// Overheads come from `self.cfg` (0 ⇒ instantaneous, applied via a
     /// zero-delay timer).
     pub fn begin_mps_profiling(&mut self, gpu: usize, new_jobs: &[JobId]) {
-        let had_residents = self.gpus[gpu].gpu.job_count() > 0;
+        let residents = self.gpus[gpu].gpu.job_count();
+        let had_residents = residents > 0;
         for &id in new_jobs {
             self.queue.remove(id);
             self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
             self.set_state(id, JobState::Blocked);
+            self.telemetry.record(self.now, EventKind::Placed { job: id.0, gpu: gpu as u32 });
         }
         let mut cost = self.cfg.mig_reconfig_s;
         if had_residents {
@@ -595,6 +604,23 @@ impl ClusterState {
         g.pending = Some(Pending::ToMps { profile_s: self.cfg.mps_profile_total_s() });
         self.reindex_gpu(gpu);
         self.push_timer(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
+        if had_residents {
+            self.telemetry.record(
+                self.now,
+                EventKind::Checkpoint {
+                    gpu: gpu as u32,
+                    jobs: residents as u32,
+                    seconds: self.cfg.checkpoint_s,
+                },
+            );
+        }
+        self.telemetry.record(
+            self.now,
+            EventKind::ProfilingBegin {
+                gpu: gpu as u32,
+                batch: (residents + new_jobs.len()) as u32,
+            },
+        );
     }
 
     /// Begin the transition into a new MIG partition. `assignment` maps
@@ -610,12 +636,19 @@ impl ClusterState {
         for &id in new_jobs {
             self.queue.remove(id);
             self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
+            self.telemetry.record(self.now, EventKind::Placed { job: id.0, gpu: gpu as u32 });
         }
-        let had_residents = self.gpus[gpu].gpu.job_count() > 0;
+        let residents = self.gpus[gpu].gpu.job_count();
+        let had_residents = residents > 0;
         let mut cost = self.cfg.mig_reconfig_s;
         if had_residents {
             cost += self.cfg.checkpoint_s;
         }
+        let old_packed = match &self.gpus[gpu].gpu.mode {
+            GpuMode::Mig { config, .. } => pack_partition(config),
+            GpuMode::Mps { .. } => 0,
+        };
+        let new_packed = pack_partition(&config);
         let mut blocked: Vec<JobId> = assignment.values().copied().collect();
         blocked.sort_unstable();
         for id in blocked {
@@ -627,6 +660,25 @@ impl ClusterState {
         g.pending = Some(Pending::ToMig { config, assignment });
         self.reindex_gpu(gpu);
         self.push_timer(Timer { at: self.now + cost, gpu, kind: TimerKind::TransitionDone });
+        if had_residents {
+            self.telemetry.record(
+                self.now,
+                EventKind::Checkpoint {
+                    gpu: gpu as u32,
+                    jobs: residents as u32,
+                    seconds: self.cfg.checkpoint_s,
+                },
+            );
+        }
+        self.telemetry.record(
+            self.now,
+            EventKind::RepartitionBegin {
+                gpu: gpu as u32,
+                old: old_packed,
+                new: new_packed,
+                downtime_s: cost,
+            },
+        );
     }
 
     /// Enter permanent MPS co-location with equal thread caps (MPS-only
@@ -649,6 +701,7 @@ impl ClusterState {
         }
         self.reindex_gpu(gpu);
         self.refresh_permanent_mps_speeds(gpu);
+        self.telemetry.record(self.now, EventKind::Placed { job: id.0, gpu: gpu as u32 });
         true
     }
 
@@ -671,10 +724,12 @@ impl ClusterState {
     /// profiling window while the others idle, with a GPU reset between
     /// slice changes.
     pub fn begin_mig_profiling(&mut self, gpu: usize, new_jobs: &[JobId]) {
+        let residents = self.gpus[gpu].gpu.job_count();
         for &id in new_jobs {
             self.queue.remove(id);
             self.jobs.get_mut(&id).unwrap().gpu = Some(gpu);
             self.set_state(id, JobState::Blocked);
+            self.telemetry.record(self.now, EventKind::Placed { job: id.0, gpu: gpu as u32 });
         }
         self.block_residents(gpu);
         let g = &mut self.gpus[gpu];
@@ -715,6 +770,20 @@ impl ClusterState {
         g.pending = Some(Pending::ToMigProfiling { total_s: total, avg_speed: mean_speed * run_frac });
         self.reindex_gpu(gpu);
         self.push_timer(Timer { at: self.now + self.cfg.mig_reconfig_s, gpu, kind: TimerKind::TransitionDone });
+        if residents > 0 {
+            self.telemetry.record(
+                self.now,
+                EventKind::Checkpoint {
+                    gpu: gpu as u32,
+                    jobs: residents as u32,
+                    seconds: self.cfg.checkpoint_s,
+                },
+            );
+        }
+        self.telemetry.record(
+            self.now,
+            EventKind::ProfilingBegin { gpu: gpu as u32, batch: m as u32 },
+        );
     }
 
     /// Measure the MPS profile matrix of a GPU currently in MPS mode, with
@@ -793,6 +862,7 @@ impl ClusterState {
                 let mut entries: Vec<(usize, JobId)> =
                     assignment.iter().map(|(&si, &id)| (si, id)).collect();
                 entries.sort_unstable();
+                let restarted = entries.len() as u32;
                 for (si, id) in entries {
                     let kind = config.slices[si].kind;
                     let spec = self.jobs[&id].job.spec;
@@ -803,6 +873,8 @@ impl ClusterState {
                 self.gpus[gpu].gpu.mode = GpuMode::Mig { config, assignment };
                 self.gpus[gpu].busy = false;
                 self.reindex_gpu(gpu);
+                self.telemetry
+                    .record(self.now, EventKind::RepartitionEnd { gpu: gpu as u32, restarted });
             }
             Pending::ToMpsPermanent => {
                 self.refresh_permanent_mps_speeds(gpu);
@@ -936,6 +1008,7 @@ impl Engine {
         );
         self.st.active_jobs += 1;
         self.st.queue.push_back(id);
+        self.st.telemetry.record(now, EventKind::Arrival { job: id.0 });
         // Schedules an immediate completion for zero-work submissions.
         self.st.reschedule(id);
         policy.on_arrival(&mut self.st, id);
@@ -981,7 +1054,12 @@ impl Engine {
                             policy.on_transition_done(&mut self.st, t.gpu);
                         }
                     }
-                    TimerKind::ProfilingDone => policy.on_profiling_done(&mut self.st, t.gpu),
+                    TimerKind::ProfilingDone => {
+                        self.st
+                            .telemetry
+                            .record(self.st.now, EventKind::ProfilingEnd { gpu: t.gpu as u32 });
+                        policy.on_profiling_done(&mut self.st, t.gpu);
+                    }
                 }
             }
 
@@ -1073,6 +1151,11 @@ impl Engine {
         st.queue.remove(id);
         st.active_jobs -= 1;
         st.metrics.on_completion(id, st.now);
+        if !st.telemetry.is_off() {
+            let rec = st.metrics.record(id);
+            let (jct_s, queue_s) = (rec.completion - rec.arrival, rec.queue_s);
+            st.telemetry.record(st.now, EventKind::Completion { job: id.0, jct_s, queue_s });
+        }
         self.live -= 1;
         policy.on_completion(st, gpu, id);
     }
@@ -1128,7 +1211,7 @@ impl Engine {
 /// (`advance_to` + `submit` + `run_until_idle`) — the fleet layer drives
 /// many engines through the same seam in lock-step.
 pub fn run(policy: &mut dyn Policy, trace: &[Job], cfg: SystemConfig) -> RunMetrics {
-    run_instrumented(policy, trace, cfg).0
+    run_core(policy, trace, cfg, TraceMode::Off).0
 }
 
 /// [`run`] also returning the event-index instrumentation counters (used
@@ -1138,7 +1221,31 @@ pub fn run_instrumented(
     trace: &[Job],
     cfg: SystemConfig,
 ) -> (RunMetrics, CoreStats) {
+    let (metrics, _, stats) = run_core(policy, trace, cfg, TraceMode::Off);
+    (metrics, stats)
+}
+
+/// [`run`] with a telemetry mode, also returning the collected telemetry
+/// (decision trace + streaming stats). Metrics digests are bit-identical
+/// across modes — telemetry observes, never steers.
+pub fn run_with_mode(
+    policy: &mut dyn Policy,
+    trace: &[Job],
+    cfg: SystemConfig,
+    mode: TraceMode,
+) -> (RunMetrics, Telemetry) {
+    let (metrics, telemetry, _) = run_core(policy, trace, cfg, mode);
+    (metrics, telemetry)
+}
+
+fn run_core(
+    policy: &mut dyn Policy,
+    trace: &[Job],
+    cfg: SystemConfig,
+    mode: TraceMode,
+) -> (RunMetrics, Telemetry, CoreStats) {
     let mut eng = Engine::new(cfg);
+    eng.st.telemetry.mode = mode;
     policy.init(&mut eng.st);
 
     let mut arrivals: Vec<Job> = trace.to_vec();
@@ -1158,7 +1265,8 @@ pub fn run_instrumented(
     eng.run_until_idle(policy);
 
     let stats = eng.stats();
-    (eng.finish(), stats)
+    let telemetry = std::mem::take(&mut eng.st.telemetry);
+    (eng.finish(), telemetry, stats)
 }
 
 #[cfg(test)]
@@ -1390,5 +1498,60 @@ mod tests {
         eng.run_until_idle(&mut p);
         check(&eng.st);
         assert_eq!(eng.completed_jobs(), 2);
+    }
+
+    #[test]
+    fn telemetry_records_full_lifecycle() {
+        use crate::telemetry::{EventKind, TraceMode};
+        let mut eng = Engine::new(SystemConfig { num_gpus: 1, ..SystemConfig::testbed() });
+        eng.st.telemetry.mode = TraceMode::Full;
+        let mut p = ParkPolicy;
+        eng.submit(&mut p, small_job(0, 50.0));
+        eng.submit(&mut p, small_job(1, 50.0));
+        eng.st.begin_mps_profiling(0, &[JobId(0), JobId(1)]);
+        let t = eng.next_event().unwrap();
+        eng.advance_to(&mut p, t);
+        let cfg33 = crate::mig::ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![3, 3])
+            .unwrap()
+            .clone();
+        let mut asg = HashMap::new();
+        asg.insert(0usize, JobId(0));
+        asg.insert(1usize, JobId(1));
+        eng.st.begin_repartition(0, cfg33, asg, &[]);
+        eng.run_until_idle(&mut p);
+
+        let tel = &eng.st.telemetry;
+        assert_eq!(tel.stats.arrivals, 2);
+        assert_eq!(tel.stats.placements, 2, "both jobs placed via the profiling round");
+        assert_eq!(tel.stats.profiling_rounds, 1);
+        assert_eq!(tel.stats.repartitions, 1);
+        assert_eq!(tel.stats.completions, 2);
+        assert_eq!(tel.stats.jct_s.count(), 2);
+        assert_eq!(tel.stats.repartition_downtime_s.count(), 1);
+
+        let events = tel.events();
+        // Sequence numbers are strictly increasing and times non-decreasing.
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(events.windows(2).all(|w| w[0].t <= w[1].t));
+        // The repartition span carries the MPS→(3g,3g) edge.
+        let begin = events
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::RepartitionBegin { old, new, downtime_s, .. } => {
+                    Some((old, new, downtime_s))
+                }
+                _ => None,
+            })
+            .expect("repartition begin recorded");
+        assert_eq!(begin.0, 0, "came from MPS mode");
+        assert_eq!(crate::telemetry::partition_label(begin.1), "3g+3g");
+        assert!(begin.2 > 0.0, "downtime covers reconfig + checkpoint");
+        assert!(events.iter().any(|e| matches!(
+            e.kind,
+            EventKind::RepartitionEnd { restarted: 2, .. }
+        )));
+        assert!(events.iter().any(|e| matches!(e.kind, EventKind::ProfilingEnd { .. })));
     }
 }

@@ -1,0 +1,1057 @@
+//! Deterministic decision telemetry: per-engine trace buffers, streaming
+//! counters/histograms, and exporters (ISSUE 6 / DESIGN.md §Observability).
+//!
+//! MISO's wins hinge on *when* the controller profiles under MPS,
+//! repartitions MIG, and checkpoints jobs — end-of-run aggregates
+//! ([`crate::metrics`]) cannot show a single decision. This module records
+//! the full decision vocabulary as compact [`TraceEvent`]s (virtual
+//! timestamp + per-buffer monotonic sequence number + kind) and
+//! accumulates streaming [`Stats`] (monotonic counters + log-bucketed
+//! histograms) online, with three hard requirements:
+//!
+//! 1. **Determinism**: telemetry never touches scheduling state, RNG
+//!    draws, or metrics, so [`crate::metrics::RunMetrics::digest`] is
+//!    bit-identical with tracing off, counters-only, or full (pinned by
+//!    `tests/proptests.rs` and `tests/fleet.rs`). Wall-clock durations
+//!    (worker-pool barrier waits) appear only as event *payloads* — never
+//!    as sort keys or simulation inputs — and are excluded from
+//!    [`TraceEvent::fingerprint`], so merged fleet traces are identical
+//!    across pool sizes.
+//! 2. **Low overhead**: [`TraceMode::Off`] is a branch-on-enum no-op —
+//!    hot paths stay allocation-free (`benches/simulator.rs` self-asserts
+//!    the off-mode overhead budget).
+//! 3. **Thread-count independence**: fleet traces merge by
+//!    `(t, node, seq)` ([`merge_events`]) and [`Stats::merge`] is
+//!    commutative addition, so fleet output does not depend on how nodes
+//!    were sharded across workers.
+//!
+//! Exporters: Chrome `trace_event` JSON ([`chrome_trace`], loadable in
+//! Perfetto / `chrome://tracing`; one lane per GPU plus scheduler /
+//! router / worker-pool lanes per process) and a text/JSON exposition of
+//! counters + histogram quantiles ([`Stats::render_text`] /
+//! [`Stats::to_json`]) surfaced by `miso trace` and the live server's
+//! `TRACE` / `STATS` commands.
+
+use crate::util::json::Value;
+
+/// Node id used for fleet-level events (router decisions, epoch barriers)
+/// that belong to the gateway rather than any one node.
+pub const FLEET_NODE: u32 = 0xFFFF;
+
+/// Runtime tracing mode. `Off` must cost one enum compare on every hook.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    /// Record nothing (the default; hot paths stay allocation-free).
+    #[default]
+    Off,
+    /// Accumulate counters + histograms only (no event buffer).
+    Counters,
+    /// Counters + the bounded ring buffer of [`TraceEvent`]s.
+    Full,
+}
+
+impl TraceMode {
+    pub fn parse(s: &str) -> Option<TraceMode> {
+        match s {
+            "off" => Some(TraceMode::Off),
+            "counters" => Some(TraceMode::Counters),
+            "full" => Some(TraceMode::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Counters => "counters",
+            TraceMode::Full => "full",
+        }
+    }
+}
+
+/// The decision vocabulary. Every variant is scalar-only (`Copy`) so the
+/// ring buffer stays compact. Virtual-time payloads (`jct_s`,
+/// `downtime_s`, …) are deterministic; the `wall_*` fields of
+/// [`EventKind::EpochEnd`] are wall-clock measurements and are excluded
+/// from [`TraceEvent::fingerprint`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A job entered the controller queue.
+    Arrival { job: u64 },
+    /// A job left the queue onto a GPU (free slice, MPS join, or as a new
+    /// job riding a profiling/repartition round).
+    Placed { job: u64, gpu: u32 },
+    /// A profiling round (MPS or sequential-MIG) was initiated on a GPU
+    /// with `batch` total candidate jobs.
+    ProfilingBegin { gpu: u32, batch: u32 },
+    /// The profiling window elapsed (the policy now predicts + decides).
+    ProfilingEnd { gpu: u32 },
+    /// A MIG repartition was initiated: packed old/new partitions
+    /// ([`pack_partition`]; 0 = the GPU was in MPS mode) and the known
+    /// virtual downtime (reconfiguration + checkpoint window).
+    RepartitionBegin { gpu: u32, old: u32, new: u32, downtime_s: f64 },
+    /// The new partition is installed; `restarted` jobs resumed on slices.
+    RepartitionEnd { gpu: u32, restarted: u32 },
+    /// `jobs` residents were checkpointed for `seconds` each.
+    Checkpoint { gpu: u32, jobs: u32, seconds: f64 },
+    /// A job finished; `jct_s`/`queue_s` feed the streaming histograms.
+    Completion { job: u64, jct_s: f64, queue_s: f64 },
+    /// The fleet router placed `job` on `node` (chosen among `candidates`
+    /// views; `live_jobs` is the chosen node's load at decision time).
+    RouterDecision { job: u64, node: u32, live_jobs: u32, candidates: u32 },
+    /// A worker-pool epoch was dispatched over `nodes` nodes
+    /// (`target_s` < 0 ⇒ drain-until-idle rather than advance-to).
+    EpochBegin { nodes: u32, target_s: f64 },
+    /// The epoch barrier completed. `wall_s` is the control thread's total
+    /// barrier wait and `max_shard_s` the slowest shard's advance, both in
+    /// *wall-clock* seconds; `workers` is the pool size. All three are
+    /// excluded from the deterministic fingerprint (they vary run to run
+    /// and with pool size).
+    EpochEnd { workers: u32, wall_s: f64, max_shard_s: f64 },
+}
+
+/// One recorded decision: virtual timestamp, per-buffer monotonic
+/// sequence number, owning node, and the decision payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual (simulated) time of the decision, seconds.
+    pub t: f64,
+    /// Monotonic per-buffer sequence number (ties within an instant
+    /// preserve decision order).
+    pub seq: u64,
+    /// Owning node (or [`FLEET_NODE`] for gateway-level events).
+    pub node: u32,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// Exact textual form of every *deterministic* field — timestamps as
+    /// bit patterns, wall-clock payloads omitted. Two runs of the same
+    /// workload produce identical fingerprint streams regardless of
+    /// worker-pool size; `tests/fleet.rs` pins this.
+    pub fn fingerprint(&self) -> String {
+        let head = format!("{:016x}/{}/{}", self.t.to_bits(), self.node, self.seq);
+        let body = match self.kind {
+            EventKind::Arrival { job } => format!("arrival job={job}"),
+            EventKind::Placed { job, gpu } => format!("placed job={job} gpu={gpu}"),
+            EventKind::ProfilingBegin { gpu, batch } => {
+                format!("profiling-begin gpu={gpu} batch={batch}")
+            }
+            EventKind::ProfilingEnd { gpu } => format!("profiling-end gpu={gpu}"),
+            EventKind::RepartitionBegin { gpu, old, new, downtime_s } => format!(
+                "repartition-begin gpu={gpu} old={old:x} new={new:x} downtime={:016x}",
+                downtime_s.to_bits()
+            ),
+            EventKind::RepartitionEnd { gpu, restarted } => {
+                format!("repartition-end gpu={gpu} restarted={restarted}")
+            }
+            EventKind::Checkpoint { gpu, jobs, seconds } => {
+                format!("checkpoint gpu={gpu} jobs={jobs} s={:016x}", seconds.to_bits())
+            }
+            EventKind::Completion { job, jct_s, queue_s } => format!(
+                "completion job={job} jct={:016x} queue={:016x}",
+                jct_s.to_bits(),
+                queue_s.to_bits()
+            ),
+            EventKind::RouterDecision { job, node, live_jobs, candidates } => {
+                format!("route job={job} node={node} live={live_jobs} cand={candidates}")
+            }
+            EventKind::EpochBegin { nodes, target_s } => {
+                format!("epoch-begin nodes={nodes} target={:016x}", target_s.to_bits())
+            }
+            // Wall-clock payloads and pool size intentionally omitted.
+            EventKind::EpochEnd { .. } => "epoch-end".to_string(),
+        };
+        format!("{head} {body}")
+    }
+
+    /// JSON form for the live server's `TRACE` reply: the envelope fields
+    /// plus a `kind` tag and the variant's payload, flattened.
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&'static str, Value)> = vec![
+            ("t", Value::num(self.t)),
+            ("seq", Value::num(self.seq as f64)),
+            ("node", Value::num(f64::from(self.node))),
+        ];
+        let kind: &'static str;
+        match self.kind {
+            EventKind::Arrival { job } => {
+                kind = "arrival";
+                fields.push(("job", Value::num(job as f64)));
+            }
+            EventKind::Placed { job, gpu } => {
+                kind = "placed";
+                fields.push(("job", Value::num(job as f64)));
+                fields.push(("gpu", Value::num(f64::from(gpu))));
+            }
+            EventKind::ProfilingBegin { gpu, batch } => {
+                kind = "profiling-begin";
+                fields.push(("gpu", Value::num(f64::from(gpu))));
+                fields.push(("batch", Value::num(f64::from(batch))));
+            }
+            EventKind::ProfilingEnd { gpu } => {
+                kind = "profiling-end";
+                fields.push(("gpu", Value::num(f64::from(gpu))));
+            }
+            EventKind::RepartitionBegin { gpu, old, new, downtime_s } => {
+                kind = "repartition-begin";
+                fields.push(("gpu", Value::num(f64::from(gpu))));
+                fields.push(("old", Value::str(partition_label(old))));
+                fields.push(("new", Value::str(partition_label(new))));
+                fields.push(("downtime_s", Value::num(downtime_s)));
+            }
+            EventKind::RepartitionEnd { gpu, restarted } => {
+                kind = "repartition-end";
+                fields.push(("gpu", Value::num(f64::from(gpu))));
+                fields.push(("restarted", Value::num(f64::from(restarted))));
+            }
+            EventKind::Checkpoint { gpu, jobs, seconds } => {
+                kind = "checkpoint";
+                fields.push(("gpu", Value::num(f64::from(gpu))));
+                fields.push(("jobs", Value::num(f64::from(jobs))));
+                fields.push(("seconds", Value::num(seconds)));
+            }
+            EventKind::Completion { job, jct_s, queue_s } => {
+                kind = "completion";
+                fields.push(("job", Value::num(job as f64)));
+                fields.push(("jct_s", Value::num(jct_s)));
+                fields.push(("queue_s", Value::num(queue_s)));
+            }
+            EventKind::RouterDecision { job, node, live_jobs, candidates } => {
+                kind = "router-decision";
+                fields.push(("job", Value::num(job as f64)));
+                fields.push(("to_node", Value::num(f64::from(node))));
+                fields.push(("live_jobs", Value::num(f64::from(live_jobs))));
+                fields.push(("candidates", Value::num(f64::from(candidates))));
+            }
+            EventKind::EpochBegin { nodes, target_s } => {
+                kind = "epoch-begin";
+                fields.push(("nodes", Value::num(f64::from(nodes))));
+                fields.push(("target_s", Value::num(target_s)));
+            }
+            EventKind::EpochEnd { workers, wall_s, max_shard_s } => {
+                kind = "epoch-end";
+                fields.push(("workers", Value::num(f64::from(workers))));
+                fields.push(("wall_s", Value::num(wall_s)));
+                fields.push(("max_shard_s", Value::num(max_shard_s)));
+            }
+        }
+        fields.push(("kind", Value::str(kind)));
+        Value::obj(fields)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming metrics
+// ---------------------------------------------------------------------------
+
+/// Number of log buckets per histogram.
+pub const HIST_BUCKETS: usize = 64;
+/// Lower bound of bucket 0 (values below land in bucket 0; ≤ 0 in `zero`).
+const HIST_MIN: f64 = 1e-6;
+
+/// A streaming log₂-bucketed histogram: bucket `i` covers
+/// `[HIST_MIN·2^i, HIST_MIN·2^(i+1))` seconds, so 64 buckets span 1 µs to
+/// ~10¹³ s. O(1) observe, O(buckets) quantile, exact count/sum/max;
+/// merging is element-wise addition (commutative — fleet merges are
+/// thread-count-independent by construction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: [u64; HIST_BUCKETS],
+    /// Observations ≤ 0 (zero-work jobs have zero queue wait / JCT).
+    zero: u64,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: [0; HIST_BUCKETS], zero: 0, count: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return; // non-finite observations are dropped, never panic
+        }
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        if v <= 0.0 {
+            self.zero += 1;
+            return;
+        }
+        let idx = ((v / HIST_MIN).log2().floor() as i64).clamp(0, HIST_BUCKETS as i64 - 1);
+        self.counts[idx as usize] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Estimated `q`-quantile (geometric bucket midpoint interpolation).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = self.zero;
+        if cum >= target {
+            return 0.0;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let mid = HIST_MIN * 2f64.powf(i as f64 + 0.5);
+                // Never report beyond the observed max (top-bucket clamp).
+                return mid.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.zero += other.zero;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("count", Value::num(self.count as f64)),
+            ("mean", Value::num(self.mean())),
+            ("p50", Value::num(self.quantile(0.5))),
+            ("p90", Value::num(self.quantile(0.9))),
+            ("p99", Value::num(self.quantile(0.99))),
+            ("max", Value::num(self.max)),
+        ])
+    }
+}
+
+/// Monotonic counters + streaming histograms, accumulated online by every
+/// telemetry hook and merged across fleet nodes ([`Stats::merge`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Stats {
+    pub arrivals: u64,
+    pub placements: u64,
+    pub completions: u64,
+    /// MIG repartitions initiated.
+    pub repartitions: u64,
+    /// Profiling rounds (MPS or sequential-MIG) initiated.
+    pub profiling_rounds: u64,
+    /// Checkpoint windows and the total job-seconds spent checkpointed.
+    pub checkpoints: u64,
+    pub checkpoint_job_s: f64,
+    /// MISO multi-instance shared-profile fast-path placements.
+    pub policy_fastpath: u64,
+    /// Re-profiles forced by phase changes or missing tables.
+    pub policy_reprofiles: u64,
+    pub router_decisions: u64,
+    /// Router picks that fell through every shape-fit tier (fresh-GPU /
+    /// fragmented / saturated fallbacks in [`crate::fleet::FragAware`]).
+    pub router_fallbacks: u64,
+    /// Worker-pool epoch barriers completed.
+    pub epochs: u64,
+    pub jct_s: LogHistogram,
+    pub queue_wait_s: LogHistogram,
+    pub repartition_downtime_s: LogHistogram,
+    /// Wall-clock epoch barrier times (fleet only; not deterministic).
+    pub epoch_wall_s: LogHistogram,
+}
+
+impl Stats {
+    /// Fold one event into the counters/histograms (shared by counter-only
+    /// and full modes so the two never drift).
+    fn absorb(&mut self, kind: &EventKind) {
+        match *kind {
+            EventKind::Arrival { .. } => self.arrivals += 1,
+            EventKind::Placed { .. } => self.placements += 1,
+            EventKind::ProfilingBegin { .. } => self.profiling_rounds += 1,
+            EventKind::ProfilingEnd { .. } => {}
+            EventKind::RepartitionBegin { downtime_s, .. } => {
+                self.repartitions += 1;
+                self.repartition_downtime_s.observe(downtime_s);
+            }
+            EventKind::RepartitionEnd { .. } => {}
+            EventKind::Checkpoint { jobs, seconds, .. } => {
+                self.checkpoints += 1;
+                self.checkpoint_job_s += f64::from(jobs) * seconds;
+            }
+            EventKind::Completion { jct_s, queue_s, .. } => {
+                self.completions += 1;
+                self.jct_s.observe(jct_s);
+                self.queue_wait_s.observe(queue_s);
+            }
+            EventKind::RouterDecision { .. } => self.router_decisions += 1,
+            EventKind::EpochBegin { .. } => {}
+            EventKind::EpochEnd { wall_s, .. } => {
+                self.epochs += 1;
+                self.epoch_wall_s.observe(wall_s);
+            }
+        }
+    }
+
+    /// Element-wise addition — commutative and associative, so fleet
+    /// roll-ups are independent of merge order (and thread count).
+    pub fn merge(&mut self, other: &Stats) {
+        self.arrivals += other.arrivals;
+        self.placements += other.placements;
+        self.completions += other.completions;
+        self.repartitions += other.repartitions;
+        self.profiling_rounds += other.profiling_rounds;
+        self.checkpoints += other.checkpoints;
+        self.checkpoint_job_s += other.checkpoint_job_s;
+        self.policy_fastpath += other.policy_fastpath;
+        self.policy_reprofiles += other.policy_reprofiles;
+        self.router_decisions += other.router_decisions;
+        self.router_fallbacks += other.router_fallbacks;
+        self.epochs += other.epochs;
+        self.jct_s.merge(&other.jct_s);
+        self.queue_wait_s.merge(&other.queue_wait_s);
+        self.repartition_downtime_s.merge(&other.repartition_downtime_s);
+        self.epoch_wall_s.merge(&other.epoch_wall_s);
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj([
+            ("arrivals", Value::num(self.arrivals as f64)),
+            ("placements", Value::num(self.placements as f64)),
+            ("completions", Value::num(self.completions as f64)),
+            ("repartitions", Value::num(self.repartitions as f64)),
+            ("profiling_rounds", Value::num(self.profiling_rounds as f64)),
+            ("checkpoints", Value::num(self.checkpoints as f64)),
+            ("checkpoint_job_s", Value::num(self.checkpoint_job_s)),
+            ("policy_fastpath", Value::num(self.policy_fastpath as f64)),
+            ("policy_reprofiles", Value::num(self.policy_reprofiles as f64)),
+            ("router_decisions", Value::num(self.router_decisions as f64)),
+            ("router_fallbacks", Value::num(self.router_fallbacks as f64)),
+            ("epochs", Value::num(self.epochs as f64)),
+            (
+                "histograms",
+                Value::obj([
+                    ("jct_s", self.jct_s.to_json()),
+                    ("queue_wait_s", self.queue_wait_s.to_json()),
+                    ("repartition_downtime_s", self.repartition_downtime_s.to_json()),
+                    ("epoch_wall_s", self.epoch_wall_s.to_json()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable exposition (the `miso trace` / CLI surface).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("counters:\n");
+        let counters: [(&str, u64); 12] = [
+            ("arrivals", self.arrivals),
+            ("placements", self.placements),
+            ("completions", self.completions),
+            ("repartitions", self.repartitions),
+            ("profiling rounds", self.profiling_rounds),
+            ("checkpoints", self.checkpoints),
+            ("checkpoint job-seconds", self.checkpoint_job_s as u64),
+            ("policy fast-path hits", self.policy_fastpath),
+            ("policy re-profiles", self.policy_reprofiles),
+            ("router decisions", self.router_decisions),
+            ("router fallbacks", self.router_fallbacks),
+            ("pool epochs", self.epochs),
+        ];
+        for (name, v) in counters {
+            out.push_str(&format!("  {name:<24} {v}\n"));
+        }
+        out.push_str("histograms (count / mean / p50 / p90 / p99 / max, seconds):\n");
+        let hists: [(&str, &LogHistogram); 4] = [
+            ("jct", &self.jct_s),
+            ("queue wait", &self.queue_wait_s),
+            ("repartition downtime", &self.repartition_downtime_s),
+            ("epoch wall", &self.epoch_wall_s),
+        ];
+        for (name, h) in hists {
+            out.push_str(&format!(
+                "  {name:<24} {} / {:.3} / {:.3} / {:.3} / {:.3} / {:.3}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.9),
+                h.quantile(0.99),
+                h.max(),
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace buffer + per-engine telemetry handle
+// ---------------------------------------------------------------------------
+
+/// Default ring capacity (per engine). ~48 B/event ⇒ ≲ 3 MB at the cap.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// A bounded ring of [`TraceEvent`]s: O(1) push, oldest events overwritten
+/// once the capacity is reached (the live server keeps serving the most
+/// recent window without unbounded growth).
+#[derive(Debug, Clone)]
+pub struct TraceBuffer {
+    events: Vec<TraceEvent>,
+    /// Next overwrite position once `events.len() == cap`.
+    head: usize,
+    cap: usize,
+}
+
+impl Default for TraceBuffer {
+    fn default() -> Self {
+        TraceBuffer::with_capacity(DEFAULT_RING_CAP)
+    }
+}
+
+impl TraceBuffer {
+    pub fn with_capacity(cap: usize) -> TraceBuffer {
+        TraceBuffer { events: Vec::new(), head: 0, cap: cap.max(1) }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The buffered events in recording order (oldest first).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.events.len());
+        out.extend_from_slice(&self.events[self.head..]);
+        out.extend_from_slice(&self.events[..self.head]);
+        out
+    }
+
+    /// The most recent `n` events in recording order.
+    pub fn last_n(&self, n: usize) -> Vec<TraceEvent> {
+        let snap = self.snapshot();
+        let skip = snap.len().saturating_sub(n);
+        snap[skip..].to_vec()
+    }
+}
+
+/// Per-engine telemetry handle: mode + stats + ring buffer. Owned by
+/// [`crate::sim::ClusterState`] (node-local, mutated only by the node's
+/// own thread) and by [`crate::fleet::FleetEngine`] (gateway-level events
+/// on the control thread).
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    pub mode: TraceMode,
+    /// Stamped into every recorded event ([`FLEET_NODE`] for the gateway).
+    pub node: u32,
+    pub stats: Stats,
+    buf: TraceBuffer,
+    seq: u64,
+}
+
+impl Telemetry {
+    pub fn new(mode: TraceMode) -> Telemetry {
+        Telemetry { mode, ..Default::default() }
+    }
+
+    pub fn for_node(mode: TraceMode, node: u32) -> Telemetry {
+        Telemetry { mode, node, ..Default::default() }
+    }
+
+    #[inline]
+    pub fn is_off(&self) -> bool {
+        self.mode == TraceMode::Off
+    }
+
+    /// Record one decision. `Off` is a compare + return (the hot-path
+    /// budget); `Counters` folds into [`Stats`] only; `Full` also appends
+    /// to the ring buffer.
+    #[inline]
+    pub fn record(&mut self, t: f64, kind: EventKind) {
+        match self.mode {
+            TraceMode::Off => {}
+            TraceMode::Counters => self.stats.absorb(&kind),
+            TraceMode::Full => {
+                self.stats.absorb(&kind);
+                let seq = self.seq;
+                self.seq += 1;
+                self.buf.push(TraceEvent { t, seq, node: self.node, kind });
+            }
+        }
+    }
+
+    /// Bump counters directly (policy-level instrumentation without a
+    /// buffered event). No-op when off.
+    #[inline]
+    pub fn count(&mut self, f: impl FnOnce(&mut Stats)) {
+        if self.mode != TraceMode::Off {
+            f(&mut self.stats);
+        }
+    }
+
+    /// Buffered events in recording order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.buf.snapshot()
+    }
+
+    /// The most recent `n` buffered events in recording order.
+    pub fn last_n(&self, n: usize) -> Vec<TraceEvent> {
+        self.buf.last_n(n)
+    }
+
+    /// Events ever recorded to the buffer (≥ `events().len()` once the
+    /// ring has wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet merge
+// ---------------------------------------------------------------------------
+
+/// Merge per-node event streams into one fleet trace, ordered by
+/// `(virtual time, node, seq)` — a total order that depends only on the
+/// simulated decisions, never on how nodes were sharded across pool
+/// workers (`tests/fleet.rs` pins identity across pool sizes 1/2/8).
+pub fn merge_events(sources: impl IntoIterator<Item = Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = sources.into_iter().flatten().collect();
+    all.sort_by(|a, b| {
+        a.t.total_cmp(&b.t).then(a.node.cmp(&b.node)).then(a.seq.cmp(&b.seq))
+    });
+    all
+}
+
+// ---------------------------------------------------------------------------
+// Partition packing (compact old→new repartition payloads)
+// ---------------------------------------------------------------------------
+
+/// Pack a MIG partition into a nibble-per-slice `u32` (slices
+/// left-to-right, each nibble a GPC count; ≤ 7 slices of ≤ 7 GPCs always
+/// fits). 0 is reserved for "no partition" (the GPU was in MPS mode).
+pub fn pack_partition(cfg: &crate::mig::MigConfig) -> u32 {
+    let mut p = 0u32;
+    for s in &cfg.slices {
+        p = (p << 4) | u32::from(s.kind.gpcs());
+    }
+    p
+}
+
+/// Render a packed partition — `pack_partition` of `(4g,2g,1g)` becomes
+/// `"4g+2g+1g"`; 0 renders as `"mps"`.
+pub fn partition_label(p: u32) -> String {
+    if p == 0 {
+        return "mps".to_string();
+    }
+    let mut parts = Vec::new();
+    let mut v = p;
+    while v != 0 {
+        parts.push(format!("{}g", v & 0xF));
+        v >>= 4;
+    }
+    parts.reverse();
+    parts.join("+")
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event exporter
+// ---------------------------------------------------------------------------
+
+/// Synthetic lanes (tids) for non-GPU events, one set per process (node).
+const TID_SCHED: u32 = 900;
+const TID_ROUTER: u32 = 901;
+const TID_EPOCH: u32 = 902;
+
+fn chrome_entry(name: &str, ph: &str, t: f64, pid: u32, tid: u32, args: Value) -> Value {
+    Value::obj([
+        ("name", Value::str(name.to_string())),
+        ("ph", Value::str(ph.to_string())),
+        // Chrome expects microseconds.
+        ("ts", Value::num(t * 1e6)),
+        ("pid", Value::num(f64::from(pid))),
+        ("tid", Value::num(f64::from(tid))),
+        ("args", args),
+    ])
+}
+
+fn chrome_instant(name: &str, t: f64, pid: u32, tid: u32, args: Value) -> Value {
+    let mut v = chrome_entry(name, "i", t, pid, tid, args);
+    if let Value::Obj(m) = &mut v {
+        // Thread-scoped instant marker.
+        m.insert("s".to_string(), Value::str("t"));
+    }
+    v
+}
+
+fn chrome_meta(name: &str, pid: u32, tid: u32, label: String) -> Value {
+    chrome_entry(name, "M", 0.0, pid, tid, Value::obj([("name", Value::str(label))]))
+}
+
+/// Export events as a Chrome `trace_event` JSON document (object format,
+/// loadable in Perfetto / `chrome://tracing`): one process per node, one
+/// lane per GPU plus scheduler / router / worker-pool lanes. Spans
+/// (profiling rounds, repartitions, pool epochs) map to `B`/`E` pairs;
+/// point decisions map to instants.
+pub fn chrome_trace(events: &[TraceEvent]) -> Value {
+    use std::collections::BTreeSet;
+    let mut rows: Vec<Value> = Vec::new();
+    let mut lanes: BTreeSet<(u32, u32)> = BTreeSet::new();
+    let mut body: Vec<Value> = Vec::with_capacity(events.len());
+
+    for ev in events {
+        let pid = ev.node;
+        let row = match ev.kind {
+            EventKind::Arrival { job } => chrome_instant(
+                "arrival",
+                ev.t,
+                pid,
+                TID_SCHED,
+                Value::obj([("job", Value::num(job as f64))]),
+            ),
+            EventKind::Placed { job, gpu } => chrome_instant(
+                "place",
+                ev.t,
+                pid,
+                gpu,
+                Value::obj([("job", Value::num(job as f64))]),
+            ),
+            EventKind::ProfilingBegin { gpu, batch } => chrome_entry(
+                "profile",
+                "B",
+                ev.t,
+                pid,
+                gpu,
+                Value::obj([("batch", Value::num(f64::from(batch)))]),
+            ),
+            EventKind::ProfilingEnd { gpu } => {
+                chrome_entry("profile", "E", ev.t, pid, gpu, Value::obj([]))
+            }
+            EventKind::RepartitionBegin { gpu, old, new, downtime_s } => chrome_entry(
+                "repartition",
+                "B",
+                ev.t,
+                pid,
+                gpu,
+                Value::obj([
+                    ("old", Value::str(partition_label(old))),
+                    ("new", Value::str(partition_label(new))),
+                    ("downtime_s", Value::num(downtime_s)),
+                ]),
+            ),
+            EventKind::RepartitionEnd { gpu, restarted } => chrome_entry(
+                "repartition",
+                "E",
+                ev.t,
+                pid,
+                gpu,
+                Value::obj([("restarted", Value::num(f64::from(restarted)))]),
+            ),
+            EventKind::Checkpoint { gpu, jobs, seconds } => chrome_instant(
+                "checkpoint",
+                ev.t,
+                pid,
+                gpu,
+                Value::obj([
+                    ("jobs", Value::num(f64::from(jobs))),
+                    ("seconds", Value::num(seconds)),
+                ]),
+            ),
+            EventKind::Completion { job, jct_s, .. } => chrome_instant(
+                "complete",
+                ev.t,
+                pid,
+                TID_SCHED,
+                Value::obj([
+                    ("job", Value::num(job as f64)),
+                    ("jct_s", Value::num(jct_s)),
+                ]),
+            ),
+            EventKind::RouterDecision { job, node, live_jobs, candidates } => chrome_instant(
+                "route",
+                ev.t,
+                pid,
+                TID_ROUTER,
+                Value::obj([
+                    ("job", Value::num(job as f64)),
+                    ("node", Value::num(f64::from(node))),
+                    ("live_jobs", Value::num(f64::from(live_jobs))),
+                    ("candidates", Value::num(f64::from(candidates))),
+                ]),
+            ),
+            EventKind::EpochBegin { nodes, target_s } => chrome_entry(
+                "epoch",
+                "B",
+                ev.t,
+                pid,
+                TID_EPOCH,
+                Value::obj([
+                    ("nodes", Value::num(f64::from(nodes))),
+                    ("target_s", Value::num(target_s)),
+                ]),
+            ),
+            EventKind::EpochEnd { workers, wall_s, max_shard_s } => chrome_entry(
+                "epoch",
+                "E",
+                ev.t,
+                pid,
+                TID_EPOCH,
+                Value::obj([
+                    ("workers", Value::num(f64::from(workers))),
+                    ("wall_s", Value::num(wall_s)),
+                    ("max_shard_s", Value::num(max_shard_s)),
+                ]),
+            ),
+        };
+        let tid = row.get("tid").and_then(Value::as_f64).unwrap_or(0.0) as u32;
+        lanes.insert((pid, tid));
+        body.push(row);
+    }
+
+    // Lane metadata first (process/thread names), then the events.
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    for &(pid, tid) in &lanes {
+        if pids.insert(pid) {
+            let label = if pid == FLEET_NODE {
+                "fleet gateway".to_string()
+            } else {
+                format!("node {pid}")
+            };
+            rows.push(chrome_meta("process_name", pid, 0, label));
+        }
+        let label = match tid {
+            TID_SCHED => "scheduler".to_string(),
+            TID_ROUTER => "router".to_string(),
+            TID_EPOCH => "worker-pool".to_string(),
+            g => format!("gpu {g}"),
+        };
+        rows.push(chrome_meta("thread_name", pid, tid, label));
+    }
+    rows.extend(body);
+
+    Value::obj([
+        ("traceEvents", Value::arr(rows)),
+        ("displayTimeUnit", Value::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [TraceMode::Off, TraceMode::Counters, TraceMode::Full] {
+            assert_eq!(TraceMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(TraceMode::parse("verbose"), None);
+        assert_eq!(TraceMode::default(), TraceMode::Off);
+    }
+
+    #[test]
+    fn off_records_nothing_counters_skip_buffer() {
+        let mut t = Telemetry::new(TraceMode::Off);
+        t.record(1.0, EventKind::Arrival { job: 1 });
+        assert_eq!(t.stats.arrivals, 0);
+        assert!(t.events().is_empty());
+
+        let mut t = Telemetry::new(TraceMode::Counters);
+        t.record(1.0, EventKind::Arrival { job: 1 });
+        assert_eq!(t.stats.arrivals, 1);
+        assert!(t.events().is_empty(), "counters mode must not buffer events");
+
+        let mut t = Telemetry::new(TraceMode::Full);
+        t.record(1.0, EventKind::Arrival { job: 1 });
+        t.record(2.0, EventKind::Completion { job: 1, jct_s: 1.0, queue_s: 0.0 });
+        assert_eq!(t.stats.arrivals, 1);
+        assert_eq!(t.stats.completions, 1);
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.events()[0].seq, 0);
+        assert_eq!(t.events()[1].seq, 1);
+    }
+
+    #[test]
+    fn ring_buffer_wraps_keeping_latest() {
+        let mut buf = TraceBuffer::with_capacity(4);
+        for i in 0..10u64 {
+            buf.push(TraceEvent {
+                t: i as f64,
+                seq: i,
+                node: 0,
+                kind: EventKind::Arrival { job: i },
+            });
+        }
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), 4);
+        let seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest events overwritten, order kept");
+        let last = buf.last_n(2);
+        assert_eq!(last.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![8, 9]);
+    }
+
+    #[test]
+    fn histogram_quantiles_and_merge() {
+        let mut h = LogHistogram::default();
+        for v in [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0] {
+            h.observe(v);
+        }
+        h.observe(f64::NAN); // dropped, no panic
+        assert_eq!(h.count(), 10);
+        assert!((h.mean() - 51.1).abs() < 1e-9);
+        assert_eq!(h.max(), 256.0);
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 4.0 && p50 <= 16.0, "p50 = {p50}");
+        assert_eq!(h.quantile(0.0), 0.0, "zero bucket holds the 0.0 sample");
+        assert!(h.quantile(1.0) <= h.max());
+        // Quantiles are monotone in q.
+        let qs: Vec<f64> = [0.1, 0.3, 0.5, 0.7, 0.9, 0.99].iter().map(|&q| h.quantile(q)).collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]), "{qs:?}");
+
+        let mut a = LogHistogram::default();
+        a.observe(1.0);
+        let mut b = LogHistogram::default();
+        b.observe(100.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 100.0);
+        assert!((a.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_merge_is_elementwise() {
+        let mut a = Stats::default();
+        a.absorb(&EventKind::Arrival { job: 0 });
+        a.absorb(&EventKind::RepartitionBegin { gpu: 0, old: 0, new: 0x421, downtime_s: 4.0 });
+        let mut b = Stats::default();
+        b.absorb(&EventKind::Arrival { job: 1 });
+        b.absorb(&EventKind::Checkpoint { gpu: 0, jobs: 3, seconds: 2.0 });
+        a.merge(&b);
+        assert_eq!(a.arrivals, 2);
+        assert_eq!(a.repartitions, 1);
+        assert_eq!(a.checkpoints, 1);
+        assert!((a.checkpoint_job_s - 6.0).abs() < 1e-12);
+        assert_eq!(a.repartition_downtime_s.count(), 1);
+        // JSON exposition parses back.
+        let s = a.to_json().to_string();
+        let v = crate::util::json::parse(&s).unwrap();
+        assert_eq!(v.req_f64("arrivals").unwrap(), 2.0);
+        assert!(v.get("histograms").is_some());
+        assert!(a.render_text().contains("repartitions"));
+    }
+
+    #[test]
+    fn merge_orders_by_time_node_seq() {
+        let ev = |t: f64, node: u32, seq: u64| TraceEvent {
+            t,
+            seq,
+            node,
+            kind: EventKind::Arrival { job: seq },
+        };
+        let merged = merge_events([
+            vec![ev(1.0, 1, 0), ev(2.0, 1, 1)],
+            vec![ev(1.0, 0, 0), ev(1.0, 0, 1), ev(3.0, 0, 2)],
+        ]);
+        let key: Vec<(u32, u64)> = merged.iter().map(|e| (e.node, e.seq)).collect();
+        assert_eq!(key, vec![(0, 0), (0, 1), (1, 0), (1, 1), (0, 2)]);
+    }
+
+    #[test]
+    fn fingerprint_ignores_wall_clock_payloads() {
+        let a = TraceEvent {
+            t: 5.0,
+            seq: 3,
+            node: FLEET_NODE,
+            kind: EventKind::EpochEnd { workers: 1, wall_s: 0.001, max_shard_s: 0.0005 },
+        };
+        let b = TraceEvent {
+            t: 5.0,
+            seq: 3,
+            node: FLEET_NODE,
+            kind: EventKind::EpochEnd { workers: 8, wall_s: 0.07, max_shard_s: 0.05 },
+        };
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = TraceEvent { seq: 4, ..a };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn partition_packing_roundtrips() {
+        let cfg = crate::mig::ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![4, 2, 1])
+            .unwrap();
+        let p = pack_partition(cfg);
+        assert_eq!(partition_label(p), "4g+2g+1g");
+        assert_eq!(partition_label(0), "mps");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_spans() {
+        let events = vec![
+            TraceEvent { t: 0.0, seq: 0, node: 0, kind: EventKind::Arrival { job: 1 } },
+            TraceEvent {
+                t: 0.0,
+                seq: 1,
+                node: 0,
+                kind: EventKind::ProfilingBegin { gpu: 0, batch: 1 },
+            },
+            TraceEvent { t: 34.0, seq: 2, node: 0, kind: EventKind::ProfilingEnd { gpu: 0 } },
+            TraceEvent {
+                t: 34.0,
+                seq: 3,
+                node: 0,
+                kind: EventKind::RepartitionBegin { gpu: 0, old: 0, new: 0x7, downtime_s: 4.0 },
+            },
+            TraceEvent {
+                t: 38.0,
+                seq: 4,
+                node: 0,
+                kind: EventKind::RepartitionEnd { gpu: 0, restarted: 1 },
+            },
+            TraceEvent {
+                t: 100.0,
+                seq: 5,
+                node: 0,
+                kind: EventKind::Completion { job: 1, jct_s: 100.0, queue_s: 0.0 },
+            },
+        ];
+        let doc = chrome_trace(&events);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        let rows = parsed.req_arr("traceEvents").unwrap();
+        // 6 events + process_name + two thread lanes (gpu 0, scheduler).
+        assert_eq!(rows.len(), 6 + 3);
+        let phases: Vec<&str> =
+            rows.iter().filter_map(|r| r.get("ph").and_then(Value::as_str)).collect();
+        assert_eq!(phases.iter().filter(|p| **p == "B").count(), 2);
+        assert_eq!(phases.iter().filter(|p| **p == "E").count(), 2);
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 3);
+        // Timestamps are microseconds.
+        let ts: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.get("name").and_then(Value::as_str) == Some("complete"))
+            .filter_map(|r| r.get("ts").and_then(Value::as_f64))
+            .collect();
+        assert_eq!(ts, vec![100.0 * 1e6]);
+    }
+}

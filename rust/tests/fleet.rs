@@ -283,6 +283,7 @@ fn digests_identical_across_pool_sizes_batching_and_executors() {
             node_cfg: SystemConfig::testbed(),
             executor,
             batch_arrivals: batch,
+            ..Default::default()
         };
         let mut router = FragAware;
         let m = run_fleet(&cfg, "miso", 99, &mut router, &trace).unwrap();
@@ -297,6 +298,86 @@ fn digests_identical_across_pool_sizes_batching_and_executors() {
             (w[1].0, w[1].1, w[1].2)
         );
     }
+}
+
+#[test]
+fn telemetry_modes_and_pool_sizes_leave_digests_and_traces_invariant() {
+    // Observability invariants at fleet scale: (1) running with telemetry
+    // off / counters / full must leave the fleet metrics digest untouched
+    // at every pool size; (2) the merged trace's deterministic fingerprint
+    // stream must be identical across pool sizes 1/2/8 (wall-clock epoch
+    // payloads vary run to run, so fingerprints exclude them); (3) merged
+    // counters must be pool-size-independent.
+    use miso::telemetry::TraceMode;
+
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 96,
+        mean_interarrival_s: 8.0,
+        max_duration_s: 1200.0,
+        min_duration_s: 60.0,
+        seed: 21,
+        ..Default::default()
+    })
+    .generate();
+    let run_mode = |threads: usize, mode: TraceMode| {
+        let cfg = FleetConfig {
+            nodes: 6,
+            gpus_per_node: 2,
+            threads,
+            node_cfg: SystemConfig::testbed(),
+            telemetry: mode,
+            ..Default::default()
+        };
+        let mut router = FragAware;
+        miso::fleet::run_fleet_traced(&cfg, "miso", 99, &mut router, &trace).unwrap()
+    };
+
+    let (m_off, ev_off, _) = run_mode(1, TraceMode::Off);
+    assert!(ev_off.is_empty(), "off mode must not record events");
+
+    let mut fingerprints: Vec<Vec<String>> = Vec::new();
+    let mut counter_jsons: Vec<String> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        for mode in [TraceMode::Counters, TraceMode::Full] {
+            let (m, events, stats) = run_mode(threads, mode);
+            check_conservation(&m, trace.len());
+            assert_eq!(
+                m.digest(),
+                m_off.digest(),
+                "telemetry {} at {threads} threads perturbed the fleet digest",
+                mode.name()
+            );
+            assert_eq!(stats.arrivals as usize, trace.len());
+            assert_eq!(stats.completions as usize, trace.len());
+            assert_eq!(stats.router_decisions as usize, trace.len());
+            // Histograms merge commutatively: same shape at every pool size.
+            counter_jsons.push(
+                miso::util::json::Value::obj([
+                    ("jct", stats.jct_s.to_json()),
+                    ("queue", stats.queue_wait_s.to_json()),
+                    ("repart", stats.repartition_downtime_s.to_json()),
+                ])
+                .to_string(),
+            );
+            if mode == TraceMode::Full {
+                fingerprints
+                    .push(events.iter().map(miso::telemetry::TraceEvent::fingerprint).collect());
+            }
+        }
+    }
+    for w in counter_jsons.windows(2) {
+        assert_eq!(w[0], w[1], "deterministic stats differ across pool sizes/modes");
+    }
+    assert_eq!(fingerprints.len(), 3);
+    assert_eq!(
+        fingerprints[0], fingerprints[1],
+        "merged trace fingerprints differ between pool sizes 1 and 2"
+    );
+    assert_eq!(
+        fingerprints[0], fingerprints[2],
+        "merged trace fingerprints differ between pool sizes 1 and 8"
+    );
+    assert!(!fingerprints[0].is_empty());
 }
 
 #[test]

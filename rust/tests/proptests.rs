@@ -397,6 +397,48 @@ fn prop_runs_are_deterministic_bit_for_bit() {
     });
 }
 
+#[test]
+fn prop_telemetry_modes_never_perturb_digests() {
+    // Telemetry determinism invariant (DESIGN.md §Observability): the same
+    // run with tracing off, counters-only, or full must produce
+    // bit-identical metrics digests under every policy — recording can
+    // observe decisions but never influence them.
+    use miso::telemetry::TraceMode;
+    for_all("telemetry-digest-parity", 4, |rng| {
+        let trace = adversarial_trace(rng);
+        let cfg = SystemConfig {
+            num_gpus: 1 + rng.below(4),
+            checkpoint_s: rng.f64() * 20.0,
+            mig_reconfig_s: rng.f64() * 6.0,
+            ..SystemConfig::testbed()
+        };
+        let seed = rng.next_u64();
+        for mode in [TraceMode::Counters, TraceMode::Full] {
+            let base = all_policies(seed);
+            let inst = all_policies(seed);
+            for (mut a, mut b) in base.into_iter().zip(inst) {
+                let m_off = run(a.as_mut(), &trace, cfg.clone());
+                let (m_tel, tel) = miso::sim::run_with_mode(b.as_mut(), &trace, cfg.clone(), mode);
+                assert_eq!(
+                    m_off.digest(),
+                    m_tel.digest(),
+                    "{}: {} telemetry perturbed the run",
+                    a.name(),
+                    mode.name()
+                );
+                // Sanity: instrumentation actually observed the run.
+                assert_eq!(tel.stats.arrivals as usize, trace.len(), "{}", a.name());
+                assert_eq!(tel.stats.completions as usize, trace.len(), "{}", a.name());
+                if mode == TraceMode::Full {
+                    assert!(tel.recorded() > 0, "{}: no events buffered", a.name());
+                } else {
+                    assert_eq!(tel.recorded(), 0, "{}: counters mode must not buffer", a.name());
+                }
+            }
+        }
+    });
+}
+
 // ---------------------------------------------------------------- placement index
 
 /// Recompute the pre-index all-GPU-rescan answers from the raw device
