@@ -1,0 +1,533 @@
+//! The unified control plane: one trait over "a MISO cluster you can
+//! submit to", implemented by both deployment shapes the repo grows —
+//! a single node ([`SingleNode`] wrapping [`crate::sim::Engine`]) and a
+//! federation ([`FleetPlane`] wrapping [`crate::fleet::FleetEngine`]).
+//!
+//! MISO's value is one control loop — submit, predict via MPS profiling,
+//! repartition MIG, observe — and before this module the repo ran that
+//! loop through two parallel stacks: the live gateway kept near-duplicate
+//! single-node and fleet controllers, and the CLI forked simulate/fleet
+//! code paths. [`ControlPlane`] is the Gavel-style move (OSDI '20:
+//! many policies over one allocation interface) applied to deployment
+//! shape instead of scheduling policy: every consumer — the TCP gateway
+//! ([`crate::server`]), the `simulate`/`fleet`/`trace` subcommands, the
+//! parity tests — drives `dyn ControlPlane` and no longer branches on
+//! node count.
+//!
+//! Contract highlights:
+//!
+//! * **Node-shaped answers everywhere.** A single node answers
+//!   fleet-shaped queries as a one-element fleet: [`node_snapshots`]
+//!   returns one snapshot, [`finish`] aggregates into a 1-node
+//!   [`FleetMetrics`], and `FLEET`/`TRACE` protocol replies need no mode
+//!   detection ([`ControlPlane::node_snapshots`],
+//!   [`ControlPlane::finish`]).
+//! * **Typed construction errors.** Constructors return [`ControlError`]
+//!   (invalid shape, unknown policy, unknown router) instead of
+//!   panicking; the gateway surfaces them to `start_*` callers as
+//!   `ServerError` before any thread spawns.
+//! * **Digest neutrality.** [`replay`] drives a plane exactly like
+//!   [`crate::sim::run`] / [`crate::fleet::run_fleet`] drive their
+//!   engines (same sort, same advance/submit interleaving, same routing
+//!   epochs via [`FleetEngine::route_and_submit_burst`]), so metrics
+//!   digests and telemetry fingerprints are bit-identical across the
+//!   trait boundary — pinned by `tests/control_plane.rs`.
+//!
+//! [`node_snapshots`]: ControlPlane::node_snapshots
+//! [`finish`]: ControlPlane::finish
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::fleet::{FleetConfig, FleetEngine, NodeView, Router};
+use crate::metrics::{FleetMetrics, RunMetrics};
+use crate::sim::{Engine, Policy};
+use crate::telemetry::{Stats, Telemetry, TraceEvent, TraceMode};
+use crate::workload::Job;
+use crate::SystemConfig;
+
+/// Why a control plane could not be built (or refused a configuration).
+/// Every variant is a caller error surfaced *before* any controller
+/// thread exists — a bad config degrades the gateway start into a typed
+/// `Err`, never a panic on a detached thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ControlError {
+    /// Degenerate shape: zero nodes, zero GPUs, non-positive time scale.
+    InvalidConfig(String),
+    /// Unknown or unconstructible scheduling policy.
+    Policy(String),
+    /// Unknown fleet router.
+    Router(String),
+}
+
+impl std::fmt::Display for ControlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlError::InvalidConfig(msg) => write!(f, "invalid control-plane config: {msg}"),
+            ControlError::Policy(msg) => write!(f, "policy construction failed: {msg}"),
+            ControlError::Router(msg) => write!(f, "router construction failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ControlError {}
+
+/// A borrowed view of one node's engine, the uniform answer to
+/// fleet-shaped queries (`FLEET`, `JOBS`, `STATUS` GPU lists). A single
+/// node is a one-element fleet; node ids are dense from 0.
+#[derive(Clone, Copy)]
+pub struct NodeSnapshot<'a> {
+    pub node: usize,
+    pub engine: &'a Engine,
+}
+
+/// Aggregate counters a `METRICS`/`STATUS` reply needs — computed once
+/// over [`ControlPlane::node_snapshots`] so both impls answer uniformly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlaneMetrics {
+    /// Lock-step virtual clock, seconds.
+    pub now_s: f64,
+    pub nodes: usize,
+    /// Jobs waiting in some node's controller queue.
+    pub queued: usize,
+    /// Jobs arrived but not completed, plane-wide.
+    pub live: usize,
+    /// Jobs completed, plane-wide.
+    pub completed: usize,
+    /// In-memory job-table size (live + retention-window completions) —
+    /// observability for [`ControlPlane::purge_completed`].
+    pub tracked_jobs: usize,
+    /// Sum of per-node instantaneous cluster STP (paper Eq. 1).
+    pub instant_stp: f64,
+}
+
+/// Liveness of the plane's execution substrate. A healthy plane reports
+/// the default; a fleet that lost its worker pool (or quarantined a
+/// panicking node) reports `degraded` and keeps serving the survivors —
+/// a dead worker degrades the gateway instead of killing it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlaneHealth {
+    pub degraded: bool,
+    /// Nodes quarantined after panicking during degraded-mode stepping.
+    pub failed_nodes: usize,
+}
+
+/// One MISO cluster you can submit to — single node or federation. The
+/// live gateway's single generic controller loop and the CLI's
+/// simulate/fleet/trace paths all drive this trait; nothing above it
+/// branches on deployment shape.
+pub trait ControlPlane: Send {
+    /// Placement-policy label for status surfaces: the fleet router's
+    /// name, or `"local"` for a single node (jobs have nowhere else to
+    /// go).
+    fn router_name(&self) -> &str;
+
+    /// Current virtual time, seconds (the lock-step clock on a fleet).
+    fn now(&self) -> f64;
+
+    /// Advance virtual time to `t`, firing internal events on the way.
+    fn advance_to(&mut self, t: f64);
+
+    /// Run until no live jobs remain (trace replay's terminal drain).
+    fn drain(&mut self);
+
+    /// Place and submit one job; returns the chosen node id (always 0 on
+    /// a single node).
+    fn submit(&mut self, job: Job) -> usize;
+
+    /// Submit a same-instant burst as one routing epoch: a fleet takes
+    /// one view snapshot and folds optimistic deltas per submit
+    /// ([`NodeView::note_submitted`]); the default submits one at a
+    /// time. Returns the chosen node per job, in submission order.
+    fn submit_batch(&mut self, jobs: Vec<Job>) -> Vec<usize> {
+        jobs.into_iter().map(|job| self.submit(job)).collect()
+    }
+
+    /// Drop completed jobs older than `retention_s` virtual seconds from
+    /// the job tables (metrics records are kept); returns how many were
+    /// dropped. The long-running-gateway memory bound.
+    fn purge_completed(&mut self, retention_s: f64) -> usize;
+
+    /// Per-node engine views, indexed by dense node id (one element on a
+    /// single node).
+    fn node_snapshots(&self) -> Vec<NodeSnapshot<'_>>;
+
+    /// Execution-substrate liveness; healthy by default.
+    fn health(&self) -> PlaneHealth {
+        PlaneHealth::default()
+    }
+
+    /// The most recent `n` telemetry events, oldest first — merged
+    /// across every node plus gateway events on a fleet, ordered by
+    /// `(virtual time, node, seq)`.
+    fn telemetry_events(&self, n: usize) -> Vec<TraceEvent>;
+
+    /// Plane-wide streaming counters + histograms (gateway merged with
+    /// every node on a fleet).
+    fn telemetry_stats(&self) -> Stats;
+
+    /// Total telemetry ring capacity — the largest `telemetry_events`
+    /// request that can return more events; the gateway clamps `TRACE n`
+    /// to this so a client cannot force an oversized reply allocation.
+    fn telemetry_capacity(&self) -> usize;
+
+    /// Consume the plane, aggregating metrics. A single node returns a
+    /// one-element [`FleetMetrics`] so consumers stay shape-agnostic.
+    fn finish(self: Box<Self>) -> FleetMetrics;
+
+    fn num_nodes(&self) -> usize {
+        self.node_snapshots().len()
+    }
+
+    /// Jobs arrived but not completed, plane-wide.
+    fn live_jobs(&self) -> usize {
+        self.node_snapshots().iter().map(|s| s.engine.live_jobs()).sum()
+    }
+
+    /// Aggregate counters for `METRICS`/`STATUS`, uniform across impls.
+    fn metrics(&self) -> PlaneMetrics {
+        let snaps = self.node_snapshots();
+        PlaneMetrics {
+            now_s: self.now(),
+            nodes: snaps.len(),
+            queued: snaps.iter().map(|s| s.engine.queued_jobs()).sum(),
+            live: snaps.iter().map(|s| s.engine.live_jobs()).sum(),
+            completed: snaps.iter().map(|s| s.engine.completed_jobs()).sum(),
+            tracked_jobs: snaps.iter().map(|s| s.engine.tracked_jobs()).sum(),
+            instant_stp: snaps.iter().map(|s| s.engine.st.instant_stp()).sum(),
+        }
+    }
+
+    /// Router-grade load views per node (`STATUS` node_loads), computed
+    /// through the same [`NodeView::of`] read path the fleet router uses.
+    fn node_views(&self) -> Vec<NodeView> {
+        self.node_snapshots().iter().map(|s| NodeView::of(s.node, s.engine)).collect()
+    }
+}
+
+/// A bare [`Engine`] + owned policy behind the [`ControlPlane`] trait:
+/// the single-node deployment shape, answering fleet-shaped queries as a
+/// one-element fleet.
+pub struct SingleNode {
+    engine: Engine,
+    policy: Box<dyn Policy + Send>,
+}
+
+impl SingleNode {
+    /// Build from a policy name ([`crate::scheduler::build_policy`]).
+    pub fn new(
+        cfg: SystemConfig,
+        policy_name: &str,
+        seed: u64,
+        telemetry: TraceMode,
+    ) -> Result<SingleNode, ControlError> {
+        let policy = crate::scheduler::build_policy(policy_name, seed)
+            .map_err(|e| ControlError::Policy(e.to_string()))?;
+        SingleNode::with_policy(cfg, policy, telemetry)
+    }
+
+    /// Build from an already-constructed policy (the CLI's `miso-unet`
+    /// path, which loads trained artifacts outside the fleet registry).
+    pub fn with_policy(
+        cfg: SystemConfig,
+        mut policy: Box<dyn Policy + Send>,
+        telemetry: TraceMode,
+    ) -> Result<SingleNode, ControlError> {
+        if cfg.num_gpus == 0 {
+            return Err(ControlError::InvalidConfig("need at least one GPU".to_string()));
+        }
+        let mut engine = Engine::new(cfg);
+        engine.st.telemetry = Telemetry::for_node(telemetry, 0);
+        policy.init(&mut engine.st);
+        Ok(SingleNode { engine, policy })
+    }
+
+    /// The wrapped policy's display name.
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
+    }
+
+    /// Consume into the bare single-node metrics plus the node's
+    /// telemetry (the `simulate` CLI report; [`ControlPlane::finish`]
+    /// wraps the same records in a one-element [`FleetMetrics`]).
+    pub fn into_parts(mut self) -> (RunMetrics, Telemetry) {
+        let telemetry = std::mem::take(&mut self.engine.st.telemetry);
+        (self.engine.finish(), telemetry)
+    }
+}
+
+impl ControlPlane for SingleNode {
+    fn router_name(&self) -> &str {
+        "local"
+    }
+
+    fn now(&self) -> f64 {
+        self.engine.st.now
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        if t > self.engine.st.now {
+            self.engine.advance_to(self.policy.as_mut(), t);
+        }
+    }
+
+    fn drain(&mut self) {
+        self.engine.run_until_idle(self.policy.as_mut());
+    }
+
+    fn submit(&mut self, job: Job) -> usize {
+        self.engine.submit(self.policy.as_mut(), job);
+        0
+    }
+
+    fn purge_completed(&mut self, retention_s: f64) -> usize {
+        self.engine.purge_completed(retention_s)
+    }
+
+    fn node_snapshots(&self) -> Vec<NodeSnapshot<'_>> {
+        vec![NodeSnapshot { node: 0, engine: &self.engine }]
+    }
+
+    fn telemetry_events(&self, n: usize) -> Vec<TraceEvent> {
+        self.engine.st.telemetry.last_n(n)
+    }
+
+    fn telemetry_stats(&self) -> Stats {
+        self.engine.st.telemetry.stats.clone()
+    }
+
+    fn telemetry_capacity(&self) -> usize {
+        self.engine.st.telemetry.capacity()
+    }
+
+    fn finish(self: Box<Self>) -> FleetMetrics {
+        let SingleNode { engine, .. } = *self;
+        let gpus = engine.st.gpus.len();
+        FleetMetrics::aggregate(vec![engine.finish()], gpus)
+    }
+}
+
+/// A [`FleetEngine`] + owned router behind the [`ControlPlane`] trait:
+/// the federation deployment shape. Bursts route through
+/// [`FleetEngine::route_and_submit_burst`] — the same routing-epoch core
+/// [`crate::fleet::run_fleet`] uses — so gateway and CLI replays place
+/// jobs bit-identically.
+pub struct FleetPlane {
+    fleet: FleetEngine,
+    router: Box<dyn Router>,
+    router_name: String,
+    batch_arrivals: bool,
+    /// Reused view buffer: one allocation for the plane's lifetime
+    /// instead of one per routing epoch.
+    views: Vec<NodeView>,
+}
+
+impl FleetPlane {
+    pub fn new(
+        cfg: &FleetConfig,
+        policy_name: &str,
+        seed: u64,
+        router_name: &str,
+    ) -> Result<FleetPlane, ControlError> {
+        let router = crate::fleet::make_router(router_name)
+            .map_err(|e| ControlError::Router(e.to_string()))?;
+        let fleet = FleetEngine::new(cfg, policy_name, seed)?;
+        Ok(FleetPlane {
+            views: Vec::with_capacity(fleet.num_nodes()),
+            router_name: router.name().to_string(),
+            batch_arrivals: cfg.batch_arrivals,
+            fleet,
+            router,
+        })
+    }
+
+    /// Consume into the aggregated fleet metrics (the `fleet` CLI
+    /// report; identical to [`ControlPlane::finish`]).
+    pub fn into_metrics(self) -> FleetMetrics {
+        self.fleet.finish()
+    }
+}
+
+impl ControlPlane for FleetPlane {
+    fn router_name(&self) -> &str {
+        &self.router_name
+    }
+
+    fn now(&self) -> f64 {
+        self.fleet.now()
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        // Unconditional, like `run_fleet`'s trace loop: epoch telemetry
+        // counts stay identical between replay paths (per-node advances
+        // already no-op when `t` is not ahead).
+        self.fleet.advance_all_to(t);
+    }
+
+    fn drain(&mut self) {
+        self.fleet.drain();
+    }
+
+    fn submit(&mut self, job: Job) -> usize {
+        self.fleet.route_and_submit(self.router.as_mut(), job)
+    }
+
+    fn submit_batch(&mut self, jobs: Vec<Job>) -> Vec<usize> {
+        if self.batch_arrivals {
+            self.fleet.route_and_submit_burst(self.router.as_mut(), jobs, &mut self.views)
+        } else {
+            jobs.into_iter()
+                .map(|job| self.fleet.route_and_submit(self.router.as_mut(), job))
+                .collect()
+        }
+    }
+
+    fn purge_completed(&mut self, retention_s: f64) -> usize {
+        self.fleet.purge_completed(retention_s)
+    }
+
+    fn node_snapshots(&self) -> Vec<NodeSnapshot<'_>> {
+        self.fleet.nodes.iter().map(|n| NodeSnapshot { node: n.id, engine: &n.engine }).collect()
+    }
+
+    fn health(&self) -> PlaneHealth {
+        PlaneHealth {
+            degraded: self.fleet.is_degraded(),
+            failed_nodes: self.fleet.failed_nodes(),
+        }
+    }
+
+    fn telemetry_events(&self, n: usize) -> Vec<TraceEvent> {
+        let merged = self.fleet.merged_events();
+        let skip = merged.len().saturating_sub(n);
+        merged[skip..].to_vec()
+    }
+
+    fn telemetry_stats(&self) -> Stats {
+        self.fleet.merged_stats()
+    }
+
+    fn telemetry_capacity(&self) -> usize {
+        let node_caps: usize =
+            self.fleet.nodes.iter().map(|n| n.engine.st.telemetry.capacity()).sum();
+        node_caps + self.fleet.telemetry.capacity()
+    }
+
+    fn finish(self: Box<Self>) -> FleetMetrics {
+        self.fleet.finish()
+    }
+}
+
+/// Replay a job trace through any control plane: sort by `(arrival, id)`,
+/// group exact same-instant arrivals into one routing epoch (advance once,
+/// submit the burst), then drain. This is the shape-agnostic analogue of
+/// [`crate::sim::run`] and [`crate::fleet::run_fleet`] — for the traces
+/// the generator emits (strictly increasing arrivals) it drives the
+/// underlying engines through the identical call sequence, so metrics
+/// digests are bit-identical to the direct runners (pinned by
+/// `tests/control_plane.rs`).
+pub fn replay(plane: &mut dyn ControlPlane, trace: &[Job]) {
+    let mut arrivals: Vec<Job> = trace.to_vec();
+    arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+    let mut burst: Vec<Job> = Vec::new();
+    let mut it = arrivals.into_iter().peekable();
+    while let Some(first) = it.next() {
+        let epoch_t = first.arrival;
+        burst.push(first);
+        while it.peek().is_some_and(|next| next.arrival == epoch_t) {
+            if let Some(next) = it.next() {
+                burst.push(next);
+            }
+        }
+        plane.advance_to(epoch_t);
+        plane.submit_batch(std::mem::take(&mut burst));
+    }
+    plane.drain();
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::workload::{TraceConfig, TraceGenerator};
+
+    fn testbed(gpus: usize) -> SystemConfig {
+        SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() }
+    }
+
+    #[test]
+    fn constructors_return_typed_errors() {
+        assert!(matches!(
+            SingleNode::new(testbed(0), "miso", 1, TraceMode::Off),
+            Err(ControlError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            SingleNode::new(testbed(2), "no-such-policy", 1, TraceMode::Off),
+            Err(ControlError::Policy(_))
+        ));
+        let cfg = FleetConfig { nodes: 2, gpus_per_node: 1, threads: 1, ..Default::default() };
+        assert!(matches!(
+            FleetPlane::new(&cfg, "miso", 1, "no-such-router"),
+            Err(ControlError::Router(_))
+        ));
+        assert!(matches!(
+            FleetPlane::new(&FleetConfig { nodes: 0, ..cfg.clone() }, "miso", 1, "round-robin"),
+            Err(ControlError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            FleetPlane::new(&cfg, "no-such-policy", 1, "round-robin"),
+            Err(ControlError::Policy(_))
+        ));
+    }
+
+    #[test]
+    fn single_node_answers_fleet_shaped_queries() {
+        let mut plane = SingleNode::new(testbed(2), "miso", 7, TraceMode::Full).unwrap();
+        assert_eq!(plane.num_nodes(), 1);
+        assert_eq!(plane.router_name(), "local");
+        assert_eq!(plane.health(), PlaneHealth::default());
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 5,
+            mean_interarrival_s: 20.0,
+            seed: 7,
+            ..Default::default()
+        })
+        .generate();
+        replay(&mut plane, &trace);
+        let m = plane.metrics();
+        assert_eq!(m.nodes, 1);
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.live, 0);
+        let views = plane.node_views();
+        assert_eq!(views.len(), 1);
+        assert_eq!(views[0].num_gpus, 2);
+        assert!(!plane.telemetry_events(plane.telemetry_capacity()).is_empty());
+        let fm = ControlPlane::finish(Box::new(plane));
+        assert_eq!(fm.total_jobs(), 5);
+        assert_eq!(fm.per_node.len(), 1);
+    }
+
+    #[test]
+    fn fleet_plane_routes_and_reports() {
+        let cfg = FleetConfig {
+            nodes: 3,
+            gpus_per_node: 1,
+            threads: 1,
+            telemetry: TraceMode::Counters,
+            ..Default::default()
+        };
+        let mut plane = FleetPlane::new(&cfg, "miso", 5, "round-robin").unwrap();
+        assert_eq!(plane.router_name(), "round-robin");
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 6,
+            mean_interarrival_s: 15.0,
+            seed: 5,
+            ..Default::default()
+        })
+        .generate();
+        replay(&mut plane, &trace);
+        assert_eq!(plane.metrics().completed, 6);
+        assert_eq!(plane.telemetry_stats().router_decisions, 6);
+        assert_eq!(plane.node_snapshots().len(), 3);
+        let fm = plane.into_metrics();
+        assert_eq!(fm.total_jobs(), 6);
+    }
+}

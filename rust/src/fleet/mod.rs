@@ -51,6 +51,7 @@ mod router;
 
 pub use router::{make_router, FragAware, LeastLoaded, RoundRobin, Router, ROUTER_NAMES};
 
+use crate::control::ControlError;
 use crate::metrics::FleetMetrics;
 use crate::sim::Engine;
 use crate::telemetry::{EventKind, Stats, Telemetry, TraceEvent, TraceMode, FLEET_NODE};
@@ -195,40 +196,13 @@ impl NodeView {
             self.full_gpus += 1;
         }
     }
-}
 
-/// One datacenter node: engine + owned policy instance.
-pub struct FleetNode {
-    pub id: usize,
-    pub engine: Engine,
-    policy: Box<dyn crate::sim::Policy + Send>,
-    /// Jobs routed here (observability; completions live in the metrics).
-    pub arrivals: usize,
-}
-
-impl FleetNode {
-    /// Advance this node's virtual clock to `t`, firing its internal
-    /// events (completions, transitions, profiling) on the way.
-    pub fn advance_to(&mut self, t: f64) {
-        if t > self.engine.st.now {
-            self.engine.advance_to(self.policy.as_mut(), t);
-        }
-    }
-
-    /// Run this node's event loop until it has no live jobs.
-    pub fn run_until_idle(&mut self) {
-        self.engine.run_until_idle(self.policy.as_mut());
-    }
-
-    /// Hand a job to this node's controller at the current instant.
-    pub fn submit(&mut self, job: Job) {
-        self.arrivals += 1;
-        self.engine.submit(self.policy.as_mut(), job);
-    }
-
-    /// Snapshot the node for routing.
-    pub fn view(&self) -> NodeView {
-        let st = &self.engine.st;
+    /// Snapshot `engine` as the routing facts for node id `node` — the
+    /// shared read path behind [`FleetNode::view`] and the control plane's
+    /// uniform `STATUS` views ([`crate::control::ControlPlane::node_views`]),
+    /// so single-node and fleet gateways report load identically.
+    pub fn of(node: usize, engine: &Engine) -> NodeView {
+        let st = &engine.st;
         let pl = st.placement();
         let mut empty = 0;
         let mut partial = 0;
@@ -271,9 +245,9 @@ impl FleetNode {
             }
         }
         NodeView {
-            node: self.id,
+            node,
             num_gpus: st.gpus.len(),
-            live_jobs: self.engine.live_jobs(),
+            live_jobs: engine.live_jobs(),
             queued: st.queue.len(),
             resident_jobs: resident,
             empty_gpus: empty,
@@ -283,6 +257,46 @@ impl FleetNode {
             free_slices,
             instant_stp: st.instant_stp(),
         }
+    }
+}
+
+/// One datacenter node: engine + owned policy instance.
+pub struct FleetNode {
+    pub id: usize,
+    pub engine: Engine,
+    policy: Box<dyn crate::sim::Policy + Send>,
+    /// Jobs routed here (observability; completions live in the metrics).
+    pub arrivals: usize,
+    /// Quarantined after panicking during degraded-mode stepping: the
+    /// node is skipped by every subsequent epoch and avoided by routing
+    /// ([`FleetEngine::failed_nodes`] reports the count). Never set in a
+    /// healthy fleet.
+    failed: bool,
+}
+
+impl FleetNode {
+    /// Advance this node's virtual clock to `t`, firing its internal
+    /// events (completions, transitions, profiling) on the way.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.engine.st.now {
+            self.engine.advance_to(self.policy.as_mut(), t);
+        }
+    }
+
+    /// Run this node's event loop until it has no live jobs.
+    pub fn run_until_idle(&mut self) {
+        self.engine.run_until_idle(self.policy.as_mut());
+    }
+
+    /// Hand a job to this node's controller at the current instant.
+    pub fn submit(&mut self, job: Job) {
+        self.arrivals += 1;
+        self.engine.submit(self.policy.as_mut(), job);
+    }
+
+    /// Snapshot the node for routing.
+    pub fn view(&self) -> NodeView {
+        NodeView::of(self.id, &self.engine)
     }
 }
 
@@ -297,6 +311,11 @@ enum EpochOp {
 }
 
 fn apply_op(node: &mut FleetNode, op: EpochOp) {
+    // Quarantined nodes (degraded mode only) sit out every epoch; the
+    // check is shared by all executors.
+    if node.failed {
+        return;
+    }
     match op {
         EpochOp::Advance(t) => node.advance_to(t),
         EpochOp::Drain => node.run_until_idle(),
@@ -342,10 +361,28 @@ struct WorkerPool {
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// Why a pooled epoch failed. Both variants mean a worker panicked —
+/// either in an earlier epoch (its channel is closed) or during this one
+/// (it never acked its shard). The barrier has fully drained by the time
+/// either is reported, so no worker still holds a shard pointer and the
+/// caller may safely fall back to stepping the same nodes sequentially.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PoolError {
+    /// A worker from an earlier epoch is gone; its command channel is
+    /// closed.
+    WorkerDead,
+    /// A worker panicked mid-shard this epoch (acks came up short).
+    EpochIncomplete,
+}
+
 impl WorkerPool {
-    fn spawn(workers: usize) -> WorkerPool {
-        let mut cmd_txs = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
+    /// Spawn `workers` long-lived threads. Thread creation is the only
+    /// fallible step; on failure the partially-built pool shuts down its
+    /// already-spawned workers (via `Drop`) and the error propagates so
+    /// [`FleetEngine::new`] can degrade to sequential stepping.
+    fn spawn(workers: usize) -> std::io::Result<WorkerPool> {
+        let mut pool =
+            WorkerPool { cmd_txs: Vec::with_capacity(workers), handles: Vec::with_capacity(workers) };
         for w in 0..workers {
             let (tx, rx) = channel::<PoolCmd>();
             let handle = std::thread::Builder::new()
@@ -368,12 +405,11 @@ impl WorkerPool {
                             PoolCmd::Shutdown => break,
                         }
                     }
-                })
-                .expect("spawning fleet worker thread");
-            cmd_txs.push(tx);
-            handles.push(handle);
+                })?;
+            pool.cmd_txs.push(tx);
+            pool.handles.push(handle);
         }
-        WorkerPool { cmd_txs, handles }
+        Ok(pool)
     }
 
     /// One epoch: shard `nodes` across the workers, broadcast `op`, and
@@ -387,14 +423,16 @@ impl WorkerPool {
     /// stops dispatching — the unsent command (and the shard pointer in
     /// it) comes back in the `SendError` and is dropped — and the barrier
     /// below still waits for every shard that *was* dispatched before any
-    /// panic propagates, so no worker can touch node memory after this
+    /// error is reported, so no worker can touch node memory after this
     /// frame's `&mut [FleetNode]` borrow ends.
     /// Returns the slowest shard's wall-clock advance time in seconds
-    /// (telemetry payload; 0.0 when nothing was dispatched).
-    fn run_epoch(&self, nodes: &mut [FleetNode], op: EpochOp) -> f64 {
+    /// (telemetry payload; 0.0 when nothing was dispatched), or a
+    /// [`PoolError`] when a worker died — the caller degrades instead of
+    /// panicking the gateway.
+    fn run_epoch(&self, nodes: &mut [FleetNode], op: EpochOp) -> Result<f64, PoolError> {
         let workers = self.cmd_txs.len().min(nodes.len());
         if workers == 0 {
-            return 0.0;
+            return Ok(0.0);
         }
         let chunk = nodes.len().div_ceil(workers);
         let (ack_tx, ack_rx) = channel::<f64>();
@@ -422,9 +460,13 @@ impl WorkerPool {
             acked += 1;
             max_shard_s = max_shard_s.max(shard_s);
         }
-        assert!(!dead_worker, "a fleet worker died in an earlier epoch");
-        assert_eq!(acked, dispatched, "a fleet worker panicked during the epoch");
-        max_shard_s
+        if dead_worker {
+            return Err(PoolError::WorkerDead);
+        }
+        if acked != dispatched {
+            return Err(PoolError::EpochIncomplete);
+        }
+        Ok(max_shard_s)
     }
 }
 
@@ -455,24 +497,39 @@ pub struct FleetEngine {
     threads: usize,
     executor: FleetExecutor,
     gpus_per_node: usize,
+    /// Set when the worker pool was lost (spawn failure at construction
+    /// or a worker panic mid-epoch): the fleet keeps running with
+    /// sequential stepping and per-node panic quarantine instead of
+    /// taking the gateway down. Never set in a healthy run, so healthy
+    /// digests are untouched.
+    degraded: bool,
 }
 
 impl FleetEngine {
     /// Build a fleet of `cfg.nodes` nodes, each with its own
     /// `policy_name` instance seeded from the shared `seed`
-    /// ([`crate::scheduler::node_seed`]).
-    pub fn new(cfg: &FleetConfig, policy_name: &str, seed: u64) -> Result<FleetEngine> {
-        anyhow::ensure!(cfg.nodes > 0, "fleet needs at least one node");
-        anyhow::ensure!(cfg.gpus_per_node > 0, "nodes need at least one GPU");
+    /// ([`crate::scheduler::node_seed`]). Errors are typed
+    /// ([`ControlError`]) so gateway callers can surface them without a
+    /// panic; a failed worker-pool spawn degrades to sequential stepping
+    /// rather than failing construction (results are identical, only
+    /// slower).
+    pub fn new(cfg: &FleetConfig, policy_name: &str, seed: u64) -> Result<FleetEngine, ControlError> {
+        if cfg.nodes == 0 {
+            return Err(ControlError::InvalidConfig("fleet needs at least one node".to_string()));
+        }
+        if cfg.gpus_per_node == 0 {
+            return Err(ControlError::InvalidConfig("nodes need at least one GPU".to_string()));
+        }
         let node_cfg = SystemConfig { num_gpus: cfg.gpus_per_node, ..cfg.node_cfg.clone() };
         let mut nodes = Vec::with_capacity(cfg.nodes);
         for id in 0..cfg.nodes {
             let mut policy =
-                crate::scheduler::build_policy(policy_name, crate::scheduler::node_seed(seed, id))?;
+                crate::scheduler::build_policy(policy_name, crate::scheduler::node_seed(seed, id))
+                    .map_err(|e| ControlError::Policy(e.to_string()))?;
             let mut engine = Engine::new(node_cfg.clone());
             engine.st.telemetry = Telemetry::for_node(cfg.telemetry, id as u32);
             policy.init(&mut engine.st);
-            nodes.push(FleetNode { id, engine, policy, arrivals: 0 });
+            nodes.push(FleetNode { id, engine, policy, arrivals: 0, failed: false });
         }
         let threads = if cfg.threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())
@@ -482,16 +539,41 @@ impl FleetEngine {
         // More workers than nodes can never help; a 1-worker pool is just
         // the sequential path with extra channel hops.
         let workers = threads.min(cfg.nodes);
-        let pool = (cfg.executor == FleetExecutor::PersistentPool && workers > 1)
-            .then(|| WorkerPool::spawn(workers));
+        let mut telemetry = Telemetry::for_node(cfg.telemetry, FLEET_NODE);
+        let mut degraded = false;
+        let pool = if cfg.executor == FleetExecutor::PersistentPool && workers > 1 {
+            match WorkerPool::spawn(workers) {
+                Ok(p) => Some(p),
+                Err(_) => {
+                    // Can't get threads? Run sequentially and say so.
+                    degraded = true;
+                    telemetry.count(|s| s.pool_failures += 1);
+                    None
+                }
+            }
+        } else {
+            None
+        };
         Ok(FleetEngine {
             nodes,
             pool,
-            telemetry: Telemetry::for_node(cfg.telemetry, FLEET_NODE),
+            telemetry,
             threads,
             executor: cfg.executor,
             gpus_per_node: cfg.gpus_per_node,
+            degraded,
         })
+    }
+
+    /// Whether the engine lost its worker pool (or quarantined a node)
+    /// and is running in sequential degraded mode.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Nodes quarantined after panicking during degraded-mode stepping.
+    pub fn failed_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.failed).count()
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -565,12 +647,16 @@ impl FleetEngine {
     }
 
     /// Execute the epoch on whichever executor is configured; returns
-    /// `(workers used, slowest shard's wall seconds)` for telemetry.
+    /// `(workers used, slowest shard's wall seconds)` for telemetry. A
+    /// worker death is absorbed here: the pool is dropped, the fleet
+    /// flips to degraded sequential stepping, and the epoch re-runs.
     fn run_epoch_op(&mut self, op: EpochOp) -> (usize, f64) {
         if let Some(pool) = &self.pool {
             let workers = pool.cmd_txs.len().min(self.nodes.len());
-            let max_shard_s = pool.run_epoch(&mut self.nodes, op);
-            return (workers, max_shard_s);
+            match pool.run_epoch(&mut self.nodes, op) {
+                Ok(max_shard_s) => return (workers, max_shard_s),
+                Err(_) => return self.recover_epoch(op),
+            }
         }
         let threads = self.threads.min(self.nodes.len()).max(1);
         if self.executor == FleetExecutor::SpawnPerCall && threads > 1 {
@@ -589,9 +675,46 @@ impl FleetEngine {
             });
             return (threads, t0.elapsed().as_secs_f64());
         }
+        if self.degraded {
+            return self.degraded_epoch(op);
+        }
         let t0 = std::time::Instant::now();
         for node in &mut self.nodes {
             apply_op(node, op);
+        }
+        (1, t0.elapsed().as_secs_f64())
+    }
+
+    /// A pool worker died mid-epoch. Drop the pool, flag degraded mode,
+    /// count the failure, and re-run the whole epoch sequentially.
+    /// Re-applying the op to shards the dead pool already finished is
+    /// idempotent — `advance_to` past its target and `run_until_idle` on
+    /// an idle node are both no-ops — so the re-run is safe regardless of
+    /// how far the failed epoch got.
+    fn recover_epoch(&mut self, op: EpochOp) -> (usize, f64) {
+        self.pool = None;
+        self.degraded = true;
+        self.telemetry.count(|s| s.pool_failures += 1);
+        self.degraded_epoch(op)
+    }
+
+    /// Sequential epoch with per-node panic quarantine: a node whose
+    /// step panics is marked failed and skipped from then on (routing
+    /// steers around it via [`Self::live_node`]) instead of taking the
+    /// gateway down. Only reached in degraded mode — the healthy paths
+    /// deliberately propagate panics so bugs surface loudly in tests.
+    fn degraded_epoch(&mut self, op: EpochOp) -> (usize, f64) {
+        let t0 = std::time::Instant::now();
+        for node in &mut self.nodes {
+            if node.failed {
+                continue;
+            }
+            let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                apply_op(node, op);
+            }));
+            if step.is_err() {
+                node.failed = true;
+            }
         }
         (1, t0.elapsed().as_secs_f64())
     }
@@ -610,15 +733,58 @@ impl FleetEngine {
         node.min(self.nodes.len() - 1)
     }
 
+    /// Remap a routed node onto a live (non-quarantined) one. Healthy
+    /// fleets have no failed nodes, so this is a branch-and-return on the
+    /// hot path and digests are untouched; in degraded mode a job bound
+    /// for a quarantined node falls to the next live node (wrapping), so
+    /// the gateway keeps serving with whatever capacity remains.
+    fn live_node(&self, node: usize) -> usize {
+        if !self.nodes[node].failed {
+            return node;
+        }
+        let n = self.nodes.len();
+        (1..n).map(|d| (node + d) % n).find(|&i| !self.nodes[i].failed).unwrap_or(node)
+    }
+
     /// Route `job` through `router` (observing fresh node views) and
     /// submit it to the chosen node. Returns the node id.
     pub fn route_and_submit(&mut self, router: &mut dyn Router, job: Job) -> usize {
         let views = self.views();
         let mut fallbacks = 0u64;
-        let node = self.checked_node(router.route_traced(&job, &views, &mut fallbacks));
+        let node =
+            self.live_node(self.checked_node(router.route_traced(&job, &views, &mut fallbacks)));
         self.record_routing(&job, node, &views, fallbacks);
         self.nodes[node].submit(job);
         node
+    }
+
+    /// Route and submit a burst of same-instant arrivals against one view
+    /// snapshot (taken into the caller's reused buffer), folding each
+    /// submit's optimistic delta into the snapshot via
+    /// [`Router::on_submitted`]. A one-job burst behaves exactly like
+    /// [`Self::route_and_submit`], so traces whose arrival instants are
+    /// all distinct route bit-identically batched or not. Returns the
+    /// chosen node for each job, in submission order.
+    pub fn route_and_submit_burst(
+        &mut self,
+        router: &mut dyn Router,
+        jobs: impl IntoIterator<Item = Job>,
+        views: &mut Vec<NodeView>,
+    ) -> Vec<usize> {
+        self.views_into(views);
+        let mut placed = Vec::new();
+        for job in jobs {
+            let mut fallbacks = 0u64;
+            let node =
+                self.live_node(self.checked_node(router.route_traced(&job, views, &mut fallbacks)));
+            // Record against the pre-submit view so the `live_jobs`
+            // payload matches the unbatched path bit-for-bit.
+            self.record_routing(&job, node, views, fallbacks);
+            router.on_submitted(&job, node, views);
+            self.nodes[node].submit(job);
+            placed.push(node);
+        }
+        placed
     }
 
     /// Gateway-side routing telemetry: one `RouterDecision` event per job
@@ -737,25 +903,16 @@ fn run_fleet_core(
     arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap().then(a.id.cmp(&b.id)));
     if cfg.batch_arrivals {
         let mut views: Vec<NodeView> = Vec::with_capacity(fleet.num_nodes());
+        let mut burst: Vec<Job> = Vec::new();
         let mut it = arrivals.into_iter().peekable();
         while let Some(first) = it.next() {
             let epoch_t = first.arrival;
             fleet.advance_all_to(epoch_t);
-            fleet.views_into(&mut views);
-            let mut job = first;
-            loop {
-                let mut fallbacks = 0u64;
-                let node = fleet.checked_node(router.route_traced(&job, &views, &mut fallbacks));
-                // Record against the pre-submit view so the `live_jobs`
-                // payload matches the unbatched path bit-for-bit.
-                fleet.record_routing(&job, node, &views, fallbacks);
-                router.on_submitted(&job, node, &mut views);
-                fleet.nodes[node].submit(job);
-                match it.peek() {
-                    Some(next) if next.arrival == epoch_t => job = it.next().unwrap(),
-                    _ => break,
-                }
+            burst.push(first);
+            while it.peek().is_some_and(|next| next.arrival == epoch_t) {
+                burst.extend(it.next());
             }
+            fleet.route_and_submit_burst(router, burst.drain(..), &mut views);
         }
     } else {
         for job in arrivals {

@@ -16,7 +16,10 @@
 //!   and MIG-fragmentation-aware. The [`telemetry`] subsystem records
 //!   every controller decision (profiling, repartitions, checkpoints,
 //!   routing, pool epochs) as deterministic trace events with streaming
-//!   counters/histograms and a Chrome `trace_event` exporter.
+//!   counters/histograms and a Chrome `trace_event` exporter. Both
+//!   deployment shapes sit behind one [`control::ControlPlane`] trait —
+//!   the live gateway and the CLI drive a single node and a whole fleet
+//!   through the same interface.
 //! * **Layer 2 (python/compile, build time only)** — the U-Net autoencoder
 //!   performance predictor in JAX, AOT-lowered to HLO text.
 //! * **Layer 1 (python/compile/kernels, build time only)** — Pallas kernels
@@ -30,6 +33,7 @@
 //! anchors the benches assert against.
 
 pub mod config;
+pub mod control;
 pub mod experiments;
 pub mod fleet;
 pub mod gpu;

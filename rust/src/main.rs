@@ -133,10 +133,11 @@ fn run() -> Result<()> {
                     // Sizes the gateway's persistent worker pool (0 = auto).
                     flags.num("fleet-threads", 0usize)?,
                     telemetry,
-                )
+                )?;
             } else {
-                miso::server::serve(port, gpus, time_scale, telemetry)
+                miso::server::serve(port, gpus, time_scale, telemetry)?;
             }
+            Ok(())
         }
         "list" => {
             for (id, desc) in miso::experiments::catalog() {
@@ -160,7 +161,8 @@ fn telemetry_flag(flags: &Flags, default: TraceMode) -> Result<TraceMode> {
 
 /// Build a policy by name. `miso` uses the paper-accuracy noisy predictor;
 /// `miso-unet` loads the trained U-Net artifacts (requires `make artifacts`).
-fn make_policy(name: &str, seed: u64) -> Result<Box<dyn Policy>> {
+/// `Send` so the policy can ride inside a [`miso::control::SingleNode`].
+fn make_policy(name: &str, seed: u64) -> Result<Box<dyn Policy + Send>> {
     Ok(match name {
         "miso" => Box::new(MisoPolicy::paper(seed)),
         "miso-unet" => Box::new(MisoPolicy::new(
@@ -200,12 +202,18 @@ fn simulate(flags: &Flags) -> Result<()> {
         cfg
     };
     let telemetry = telemetry_flag(flags, TraceMode::Off)?;
-    let mut policy = make_policy(policy_name, seed ^ 0xD15C0)?;
+    let policy = make_policy(policy_name, seed ^ 0xD15C0)?;
+    // The single-node shape behind the unified control plane: `replay`
+    // drives it through the same call sequence as `miso::sim::run`, so
+    // results are bit-identical to the pre-trait CLI.
+    let mut plane = miso::control::SingleNode::with_policy(cfg, policy, telemetry)?;
     let t0 = std::time::Instant::now();
-    let (m, tel) = miso::sim::run_with_mode(policy.as_mut(), &trace, cfg, telemetry);
+    miso::control::replay(&mut plane, &trace);
     let wall = t0.elapsed().as_secs_f64();
+    let policy_display = plane.policy_name().to_string();
+    let (m, tel) = plane.into_parts();
     let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
-    println!("policy            : {}", policy.name());
+    println!("policy            : {policy_display}");
     println!("jobs              : {}", m.records.len());
     println!("avg JCT           : {:.1} s", m.avg_jct());
     println!("makespan          : {:.1} s", m.makespan());
@@ -227,7 +235,8 @@ fn simulate(flags: &Flags) -> Result<()> {
 /// fully deterministic given `--seed` (the printed digest is bit-stable
 /// across repetitions and `--threads` values).
 fn fleet(flags: &Flags) -> Result<()> {
-    use miso::fleet::{make_router, run_fleet_traced, FleetConfig, FleetExecutor, ROUTER_NAMES};
+    use miso::control::{replay, ControlPlane, FleetPlane};
+    use miso::fleet::{FleetConfig, FleetExecutor, ROUTER_NAMES};
 
     let nodes = flags.num("nodes", 4usize)?;
     let gpus = flags.num("gpus", 8usize)?;
@@ -275,11 +284,16 @@ fn fleet(flags: &Flags) -> Result<()> {
     };
     let per_node = routers.len() == 1;
     for name in routers {
-        let mut router = make_router(name)?;
+        // The fleet shape behind the unified control plane: `replay`
+        // reproduces `run_fleet`'s routing epochs exactly, so the printed
+        // digest is bit-identical to the pre-trait CLI (and independent
+        // of `--threads`).
+        let mut plane = FleetPlane::new(&fleet_cfg, policy, seed ^ 0xF1EE7, name)?;
         let t0 = std::time::Instant::now();
-        let (m, _events, stats) =
-            run_fleet_traced(&fleet_cfg, policy, seed ^ 0xF1EE7, router.as_mut(), &trace)?;
+        replay(&mut plane, &trace);
         let wall = t0.elapsed().as_secs_f64();
+        let stats = plane.telemetry_stats();
+        let m = plane.into_metrics();
         let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
         println!("\nrouter {name}");
         println!("  avg JCT         : {:.1} s", m.avg_jct());
@@ -315,7 +329,8 @@ fn fleet(flags: &Flags) -> Result<()> {
 /// prints the streaming stats and writes a Chrome `trace_event` JSON file
 /// loadable in Perfetto / `chrome://tracing`.
 fn trace_cmd(flags: &Flags) -> Result<()> {
-    use miso::telemetry::{chrome_trace, Stats, TraceEvent};
+    use miso::control::{replay, ControlPlane, FleetPlane, SingleNode};
+    use miso::telemetry::chrome_trace;
 
     let policy_name = flags.get("policy").unwrap_or("miso");
     let nodes = flags.num("nodes", 1usize)?;
@@ -333,7 +348,10 @@ fn trace_cmd(flags: &Flags) -> Result<()> {
     };
     let trace = TraceGenerator::new(trace_cfg).generate();
 
-    let (events, stats): (Vec<TraceEvent>, Stats) = if nodes > 1 {
+    // Both deployment shapes behind one `dyn ControlPlane`: the replay,
+    // the event export, and the stats report no longer branch on node
+    // count.
+    let mut plane: Box<dyn ControlPlane> = if nodes > 1 {
         let fleet_cfg = miso::fleet::FleetConfig {
             nodes,
             gpus_per_node: gpus,
@@ -341,22 +359,20 @@ fn trace_cmd(flags: &Flags) -> Result<()> {
             telemetry: TraceMode::Full,
             ..Default::default()
         };
-        let mut router = miso::fleet::make_router(flags.get("router").unwrap_or("frag-aware"))?;
-        let (_m, events, stats) = miso::fleet::run_fleet_traced(
+        Box::new(FleetPlane::new(
             &fleet_cfg,
             policy_name,
             seed ^ 0xF1EE7,
-            router.as_mut(),
-            &trace,
-        )?;
-        (events, stats)
+            flags.get("router").unwrap_or("frag-aware"),
+        )?)
     } else {
         let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
-        let mut policy = make_policy(policy_name, seed ^ 0xD15C0)?;
-        let (_m, tel) =
-            miso::sim::run_with_mode(policy.as_mut(), &trace, cfg, TraceMode::Full);
-        (tel.events(), tel.stats)
+        let policy = make_policy(policy_name, seed ^ 0xD15C0)?;
+        Box::new(SingleNode::with_policy(cfg, policy, TraceMode::Full)?)
     };
+    replay(plane.as_mut(), &trace);
+    let events = plane.telemetry_events(plane.telemetry_capacity());
+    let stats = plane.telemetry_stats();
 
     std::fs::write(&out_path, format!("{}\n", chrome_trace(&events)))
         .with_context(|| format!("writing {out_path}"))?;

@@ -1,14 +1,15 @@
-//! The live controller (paper Fig. 6): a central controller thread owning
-//! the cluster engine + MISO policy, per-connection server threads speaking
-//! a line-oriented TCP protocol, and virtual time advancing at a
-//! configurable multiple of wall-clock time.
+//! The live gateway (paper Fig. 6): ONE controller thread owning a
+//! [`ControlPlane`] — a single MISO node or a whole fleet behind the same
+//! trait — per-connection server threads speaking a line-oriented TCP
+//! protocol, and virtual time advancing at a configurable multiple of
+//! wall-clock time.
 //!
 //! Protocol (one request per line, one JSON reply per line):
 //!
 //! ```text
 //! SUBMIT <family> <batch_index 0..3> <exclusive_seconds>   -> {"ok":true,"job":<id>,"node":<n>}
-//! STATUS                                                   -> cluster snapshot
-//! JOBS                                                     -> per-job states
+//! STATUS                                                   -> plane snapshot (+ per-node loads)
+//! JOBS                                                     -> per-job states, all nodes
 //! METRICS                                                  -> aggregate metrics so far
 //! FLEET                                                    -> per-node snapshots
 //! TRACE [n]                                                -> most recent n trace events (default 100)
@@ -16,12 +17,31 @@
 //! QUIT                                                     -> closes the connection
 //! ```
 //!
+//! There is exactly one controller loop ([`controller_loop`]), generic
+//! over `dyn ControlPlane`: every command — SUBMIT placement, FLEET's
+//! node list, TRACE's merged event stream — dispatches through the trait,
+//! so the single-node and fleet gateways cannot drift. A single node
+//! answers fleet-shaped queries as a one-element fleet (FLEET lists one
+//! node, STATUS reports `nodes: 1` and `router: "local"`), so gateway
+//! clients need no mode detection.
+//!
+//! Startup is fallible end to end: plane construction happens on the
+//! *caller's* thread and a bad config (zero GPUs, unknown router, unknown
+//! policy) comes back as a typed [`ServerError`] before any thread
+//! spawns — never a panic on a detached controller. At runtime a fleet
+//! that loses a worker degrades to sequential stepping (and quarantines
+//! panicking nodes) instead of killing the gateway; STATUS exposes
+//! `degraded` / `failed_nodes` from [`ControlPlane::health`].
+//!
 //! Both gateways run with full telemetry ([`crate::telemetry`]) enabled:
 //! `TRACE n` returns the last `n` decision events — merged across every
 //! node (plus gateway routing/epoch events) on a fleet, ordered by
-//! `(virtual time, node, seq)` — and `STATS` exposes the streaming
-//! counters and log-bucketed histograms as JSON. Live servers are
-//! wall-clock-driven and thus not replay-deterministic; determinism
+//! `(virtual time, node, seq)` — with `n` clamped to the plane's total
+//! ring capacity ([`ControlPlane::telemetry_capacity`]) so a client
+//! sending `TRACE 999999999` cannot force an oversized reply allocation;
+//! the reply carries the clamp bound as `capacity`. `STATS` exposes the
+//! streaming counters and log-bucketed histograms as JSON. Live servers
+//! are wall-clock-driven and thus not replay-deterministic; determinism
 //! guarantees apply to `miso sim` / `miso fleet` runs.
 //!
 //! `JOBS` replies carry every queued/running job but only *recently*
@@ -33,21 +53,14 @@
 //! substrates) update job completion / partition state centrally; the
 //! controller decides placement; the MISO policy drives MPS profiling and
 //! MIG repartitioning. Python is nowhere in this path.
-//!
-//! With [`serve_fleet`]/[`start_fleet`] the same protocol fronts a whole
-//! [`crate::fleet::FleetEngine`]: SUBMIT routes the job through the
-//! configured fleet router, and FLEET exposes every node's snapshot (a
-//! single-node server answers FLEET with a one-element list, so gateway
-//! clients need no mode detection).
 
-use crate::fleet::{make_router, FleetConfig, FleetEngine, Router};
-use crate::scheduler::MisoPolicy;
-use crate::sim::{Engine, GpuSim, JobState, Policy};
+use crate::control::{ControlError, ControlPlane, FleetPlane, SingleNode};
+use crate::fleet::FleetConfig;
+use crate::sim::{Engine, GpuSim, JobState};
 use crate::telemetry::{TraceEvent, TraceMode};
 use crate::util::json::Value;
 use crate::workload::{Job, ModelFamily, WorkloadSpec};
 use crate::SystemConfig;
-use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -59,6 +72,53 @@ use std::time::{Duration, Instant};
 /// seconds: jobs that finished longer ago than this are dropped from the
 /// serialization (they remain in the engine's metrics).
 pub const JOBS_RETENTION_S: f64 = 600.0;
+
+/// Scheduling policy both gateways run (the paper's MISO controller).
+const GATEWAY_POLICY: &str = "miso";
+/// Policy seed for gateway planes (per-node seeds derive via
+/// [`crate::scheduler::node_seed`] on a fleet).
+const GATEWAY_SEED: u64 = 0x11FE;
+
+/// How the gateway failed to start. Construction errors are typed and
+/// surface on the caller's thread — the controller never panics over a
+/// bad config.
+#[derive(Debug)]
+pub enum ServerError {
+    /// The control plane rejected the configuration ([`ControlError`]).
+    Control(ControlError),
+    /// Binding the listener or spawning a gateway thread failed.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerError::Control(e) => write!(f, "gateway configuration rejected: {e}"),
+            ServerError::Io(e) => write!(f, "gateway startup I/O failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServerError::Control(e) => Some(e),
+            ServerError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<ControlError> for ServerError {
+    fn from(e: ControlError) -> ServerError {
+        ServerError::Control(e)
+    }
+}
+
+impl From<std::io::Error> for ServerError {
+    fn from(e: std::io::Error) -> ServerError {
+        ServerError::Io(e)
+    }
+}
 
 /// A request forwarded from a connection thread to the controller.
 enum Request {
@@ -74,10 +134,12 @@ enum Request {
 /// Default `TRACE` depth when the client sends no count.
 const TRACE_DEFAULT_N: usize = 100;
 
-/// Serialize a `TRACE` reply: the most recent events, oldest first.
-fn trace_json(events: &[TraceEvent]) -> Value {
+/// Serialize a `TRACE` reply: the most recent events, oldest first, plus
+/// the ring capacity the request was clamped to.
+fn trace_json(events: &[TraceEvent], capacity: usize) -> Value {
     Value::obj([
         ("count", Value::num(events.len() as f64)),
+        ("capacity", Value::num(capacity as f64)),
         ("events", Value::arr(events.iter().map(TraceEvent::to_json))),
     ])
 }
@@ -115,7 +177,7 @@ impl Drop for LiveServer {
 
 /// Start the live server on `port` (0 = ephemeral) with `gpus` simulated
 /// A100s; virtual time runs at `time_scale` × wall-clock.
-pub fn start(port: u16, gpus: usize, time_scale: f64) -> Result<LiveServer> {
+pub fn start(port: u16, gpus: usize, time_scale: f64) -> Result<LiveServer, ServerError> {
     start_with(port, gpus, time_scale, TraceMode::Full)
 }
 
@@ -126,27 +188,104 @@ pub fn start_with(
     gpus: usize,
     time_scale: f64,
     telemetry: TraceMode,
-) -> Result<LiveServer> {
-    anyhow::ensure!(gpus > 0, "need at least one GPU");
-    anyhow::ensure!(time_scale > 0.0, "time scale must be positive");
-    let listener = TcpListener::bind(("127.0.0.1", port)).context("binding TCP listener")?;
+) -> Result<LiveServer, ServerError> {
+    let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
+    let plane = SingleNode::new(cfg, GATEWAY_POLICY, GATEWAY_SEED, telemetry)?;
+    start_plane(port, Box::new(plane), time_scale)
+}
+
+/// Start a fleet gateway on `port` (0 = ephemeral): `nodes` simulated
+/// MISO nodes of `gpus_per_node` A100s each, SUBMITs placed by the named
+/// fleet router, all advancing at `time_scale` × wall-clock.
+/// `fleet_threads` sizes the engine's persistent worker pool (0 = one per
+/// core); every per-tick advance is then an O(1) pool wakeup rather than a
+/// thread fan-out.
+pub fn start_fleet(
+    port: u16,
+    nodes: usize,
+    gpus_per_node: usize,
+    time_scale: f64,
+    router: &str,
+    fleet_threads: usize,
+) -> Result<LiveServer, ServerError> {
+    start_fleet_with(port, nodes, gpus_per_node, time_scale, router, fleet_threads, TraceMode::Full)
+}
+
+/// [`start_fleet`] with an explicit telemetry mode. The plane is built on
+/// the caller's thread, so an invalid fleet shape or unknown router comes
+/// back as `Err` here instead of panicking the controller.
+#[allow(clippy::too_many_arguments)]
+pub fn start_fleet_with(
+    port: u16,
+    nodes: usize,
+    gpus_per_node: usize,
+    time_scale: f64,
+    router: &str,
+    fleet_threads: usize,
+    telemetry: TraceMode,
+) -> Result<LiveServer, ServerError> {
+    let cfg = FleetConfig {
+        nodes,
+        gpus_per_node,
+        // Per-tick advances reuse the engine's persistent worker pool (an
+        // O(1) wakeup per worker), so the gateway no longer has to cap
+        // itself at one thread to avoid per-tick spawn churn.
+        threads: fleet_threads,
+        node_cfg: SystemConfig::testbed(),
+        // Gateways record by default (TRACE/STATS are part of the
+        // protocol; a wall-clock-driven server has no digest-replay
+        // determinism to protect), but `--telemetry off` disables it for
+        // overhead-sensitive deployments.
+        telemetry,
+        ..Default::default()
+    };
+    let plane = FleetPlane::new(&cfg, GATEWAY_POLICY, GATEWAY_SEED, router)?;
+    start_plane(port, Box::new(plane), time_scale)
+}
+
+/// Start a gateway over an already-constructed control plane — the one
+/// startup path [`start_with`] and [`start_fleet_with`] both reduce to.
+/// Fails with a typed [`ServerError`] on a non-positive time scale, a
+/// bind failure, or a thread-spawn failure (cleaning up anything already
+/// started).
+pub fn start_plane(
+    port: u16,
+    plane: Box<dyn ControlPlane>,
+    time_scale: f64,
+) -> Result<LiveServer, ServerError> {
+    if time_scale <= 0.0 {
+        return Err(ServerError::Control(ControlError::InvalidConfig(
+            "time scale must be positive".to_string(),
+        )));
+    }
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
 
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = channel::<Request>();
 
-    // --- controller thread: owns engine + policy (not Send-constrained) ---
+    // --- controller thread: owns the plane (policy/router state) ---
     let stop_c = stop.clone();
-    let controller = std::thread::spawn(move || {
-        controller_loop(rx, stop_c, gpus, time_scale, telemetry);
-    });
+    let controller = std::thread::Builder::new()
+        .name("miso-controller".to_string())
+        .spawn(move || controller_loop(plane, rx, stop_c, time_scale))?;
 
     // --- listener thread: accepts connections, one handler thread each ---
     let stop_l = stop.clone();
-    let listener_handle = std::thread::spawn(move || {
-        accept_loop(listener, tx, stop_l);
-    });
+    let listener_handle = match std::thread::Builder::new()
+        .name("miso-listener".to_string())
+        .spawn(move || accept_loop(listener, tx, stop_l))
+    {
+        Ok(h) => h,
+        Err(e) => {
+            // The controller is already running; shut it down before
+            // reporting the failed start.
+            stop.store(true, Ordering::SeqCst);
+            let _ = controller.join();
+            return Err(ServerError::Io(e));
+        }
+    };
 
     Ok(LiveServer { addr, stop, controller: Some(controller), listener: Some(listener_handle) })
 }
@@ -170,78 +309,19 @@ fn accept_loop(listener: TcpListener, tx: Sender<Request>, stop: Arc<AtomicBool>
     }
 }
 
-/// Start a fleet gateway on `port` (0 = ephemeral): `nodes` simulated
-/// MISO nodes of `gpus_per_node` A100s each, SUBMITs placed by the named
-/// fleet router, all advancing at `time_scale` × wall-clock.
-/// `fleet_threads` sizes the engine's persistent worker pool (0 = one per
-/// core); every per-tick advance is then an O(1) pool wakeup rather than a
-/// thread fan-out.
-pub fn start_fleet(
-    port: u16,
-    nodes: usize,
-    gpus_per_node: usize,
-    time_scale: f64,
-    router: &str,
-    fleet_threads: usize,
-) -> Result<LiveServer> {
-    start_fleet_with(port, nodes, gpus_per_node, time_scale, router, fleet_threads, TraceMode::Full)
-}
-
-/// [`start_fleet`] with an explicit telemetry mode.
-#[allow(clippy::too_many_arguments)]
-pub fn start_fleet_with(
-    port: u16,
-    nodes: usize,
-    gpus_per_node: usize,
-    time_scale: f64,
-    router: &str,
-    fleet_threads: usize,
-    telemetry: TraceMode,
-) -> Result<LiveServer> {
-    anyhow::ensure!(nodes > 0, "need at least one node");
-    anyhow::ensure!(gpus_per_node > 0, "need at least one GPU per node");
-    anyhow::ensure!(time_scale > 0.0, "time scale must be positive");
-    make_router(router)?; // validate the name before spawning threads
-    let listener = TcpListener::bind(("127.0.0.1", port)).context("binding TCP listener")?;
-    let addr = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
-
-    let stop = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = channel::<Request>();
-
-    let stop_c = stop.clone();
-    let router = router.to_string();
-    let controller = std::thread::spawn(move || {
-        controller_loop_fleet(
-            rx,
-            stop_c,
-            nodes,
-            gpus_per_node,
-            time_scale,
-            router,
-            fleet_threads,
-            telemetry,
-        );
-    });
-
-    let stop_l = stop.clone();
-    let listener_handle = std::thread::spawn(move || {
-        accept_loop(listener, tx, stop_l);
-    });
-
-    Ok(LiveServer { addr, stop, controller: Some(controller), listener: Some(listener_handle) })
-}
-
 /// Blocking entrypoint for `miso serve`.
-pub fn serve(port: u16, gpus: usize, time_scale: f64, telemetry: TraceMode) -> Result<()> {
+pub fn serve(
+    port: u16,
+    gpus: usize,
+    time_scale: f64,
+    telemetry: TraceMode,
+) -> Result<(), ServerError> {
     let server = start_with(port, gpus, time_scale, telemetry)?;
     println!(
         "MISO live controller on {} — {gpus} simulated A100s, virtual time ×{time_scale}",
         server.addr()
     );
-    println!(
-        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | TRACE [n] | STATS | QUIT"
-    );
+    print_protocol();
     // Block until killed.
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -258,44 +338,36 @@ pub fn serve_fleet(
     router: &str,
     fleet_threads: usize,
     telemetry: TraceMode,
-) -> Result<()> {
-    let server = start_fleet_with(
-        port,
-        nodes,
-        gpus_per_node,
-        time_scale,
-        router,
-        fleet_threads,
-        telemetry,
-    )?;
+) -> Result<(), ServerError> {
+    let server =
+        start_fleet_with(port, nodes, gpus_per_node, time_scale, router, fleet_threads, telemetry)?;
     println!(
         "MISO fleet gateway on {} — {nodes} nodes × {gpus_per_node} A100s, router {router}, virtual time ×{time_scale}",
         server.addr()
     );
-    println!(
-        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | TRACE [n] | STATS | QUIT"
-    );
+    print_protocol();
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
 }
 
+fn print_protocol() {
+    println!(
+        "protocol: SUBMIT <family> <batch 0-3> <seconds> | STATUS | JOBS | METRICS | FLEET | TRACE [n] | STATS | QUIT"
+    );
+}
+
+/// THE controller loop — generic over the deployment shape. Owns the
+/// plane, advances virtual time to scaled wall-clock, purges the job
+/// table on a quarter-retention cadence, and serves every protocol
+/// request through [`ControlPlane`] alone: no single-node-vs-fleet
+/// branches exist below this line.
 fn controller_loop(
+    mut plane: Box<dyn ControlPlane>,
     rx: Receiver<Request>,
     stop: Arc<AtomicBool>,
-    gpus: usize,
     time_scale: f64,
-    telemetry: TraceMode,
 ) {
-    let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
-    let mut engine = Engine::new(cfg);
-    // The live controller records decisions by default (TRACE/STATS are
-    // part of the protocol; a wall-clock-driven server has no
-    // digest-replay determinism to protect), but `--telemetry off`
-    // disables it for overhead-sensitive deployments.
-    engine.st.telemetry.mode = telemetry;
-    let mut policy = MisoPolicy::paper(0x11FE);
-    policy.init(&mut engine.st);
     let mut next_id: u64 = 0;
     let started = Instant::now();
     let mut next_purge_vt = JOBS_RETENTION_S;
@@ -303,17 +375,17 @@ fn controller_loop(
     while !stop.load(Ordering::SeqCst) {
         // Advance virtual time to scaled wall-clock.
         let target = started.elapsed().as_secs_f64() * time_scale;
-        if target > engine.st.now {
-            engine.advance_to(&mut policy, target);
+        if target > plane.now() {
+            plane.advance_to(target);
         }
         // Long-run memory bound: completed jobs past the JOBS retention
-        // window leave the job table (their metrics records remain).
+        // window leave the job tables (their metrics records remain).
         // Throttled to a fraction of the retention window — the O(table)
         // retain scan need not run on every 5 ms tick to bound memory at
         // live jobs + ~one window.
-        if engine.st.now >= next_purge_vt {
-            engine.purge_completed(JOBS_RETENTION_S);
-            next_purge_vt = engine.st.now + JOBS_RETENTION_S / 4.0;
+        if plane.now() >= next_purge_vt {
+            plane.purge_completed(JOBS_RETENTION_S);
+            next_purge_vt = plane.now() + JOBS_RETENTION_S / 4.0;
         }
 
         // Serve all pending requests.
@@ -321,100 +393,10 @@ fn controller_loop(
             match req {
                 Request::Submit { family, batch, work_s, reply } => {
                     let spec = WorkloadSpec::new(family, batch.min(3), (0.0, 0.0));
-                    let job = Job::new(next_id, spec, engine.st.now, work_s.max(1.0));
+                    let job = Job::new(next_id, spec, plane.now(), work_s.max(1.0));
                     let id = job.id;
                     next_id += 1;
-                    engine.submit(&mut policy, job);
-                    // "node" is always present so gateway clients need no
-                    // single-node vs fleet mode detection.
-                    let _ = reply.send(
-                        Value::obj([
-                            ("ok", Value::Bool(true)),
-                            ("job", Value::num(id.0 as f64)),
-                            ("node", Value::num(0.0)),
-                        ])
-                        .to_string(),
-                    );
-                }
-                Request::Status { reply } => {
-                    let _ = reply.send(status_json(&engine).to_string());
-                }
-                Request::Jobs { reply } => {
-                    let _ = reply.send(jobs_json(&engine).to_string());
-                }
-                Request::Metrics { reply } => {
-                    let _ = reply.send(metrics_json(&engine).to_string());
-                }
-                Request::Fleet { reply } => {
-                    // Uniform gateway protocol: a single node answers FLEET
-                    // with a one-element node list.
-                    let nodes = Value::arr(vec![node_json(0, &engine)]);
-                    let _ = reply.send(Value::obj([("nodes", nodes)]).to_string());
-                }
-                Request::Trace { n, reply } => {
-                    let _ = reply.send(trace_json(&engine.st.telemetry.last_n(n)).to_string());
-                }
-                Request::Stats { reply } => {
-                    let _ = reply.send(engine.st.telemetry.stats.to_json().to_string());
-                }
-            }
-        }
-        std::thread::sleep(Duration::from_millis(5));
-    }
-}
-
-/// Fleet-gateway controller: owns a [`FleetEngine`] + router; every node
-/// advances to the same scaled wall-clock instant before requests are
-/// served, and SUBMIT places jobs through the router.
-#[allow(clippy::too_many_arguments)]
-fn controller_loop_fleet(
-    rx: Receiver<Request>,
-    stop: Arc<AtomicBool>,
-    nodes: usize,
-    gpus_per_node: usize,
-    time_scale: f64,
-    router_name: String,
-    fleet_threads: usize,
-    telemetry: TraceMode,
-) {
-    let cfg = FleetConfig {
-        nodes,
-        gpus_per_node,
-        // Per-tick advances reuse the engine's persistent worker pool (an
-        // O(1) wakeup per worker), so the gateway no longer has to cap
-        // itself at one thread to avoid per-tick spawn churn.
-        threads: fleet_threads,
-        node_cfg: crate::SystemConfig::testbed(),
-        // Gateways record by default (see the single-node controller).
-        telemetry,
-        ..Default::default()
-    };
-    let mut fleet = FleetEngine::new(&cfg, "miso", 0x11FE).expect("fleet construction");
-    let mut router: Box<dyn Router> = make_router(&router_name).expect("router construction");
-    let mut next_id: u64 = 0;
-    let started = Instant::now();
-    let mut next_purge_vt = JOBS_RETENTION_S;
-
-    while !stop.load(Ordering::SeqCst) {
-        let target = started.elapsed().as_secs_f64() * time_scale;
-        if target > fleet.now() {
-            fleet.advance_all_to(target);
-        }
-        // Long-run memory bound, same as (and throttled like) the
-        // single-node controller.
-        if fleet.now() >= next_purge_vt {
-            fleet.purge_completed(JOBS_RETENTION_S);
-            next_purge_vt = fleet.now() + JOBS_RETENTION_S / 4.0;
-        }
-
-        while let Ok(req) = rx.try_recv() {
-            match req {
-                Request::Submit { family, batch, work_s, reply } => {
-                    let spec = WorkloadSpec::new(family, batch.min(3), (0.0, 0.0));
-                    let job = Job::new(next_id, spec, fleet.now(), work_s.max(1.0));
-                    let id = job.id;
-                    next_id += 1;
-                    let node = fleet.route_and_submit(router.as_mut(), job);
+                    let node = plane.submit(job);
                     let _ = reply.send(
                         Value::obj([
                             ("ok", Value::Bool(true)),
@@ -425,50 +407,27 @@ fn controller_loop_fleet(
                     );
                 }
                 Request::Status { reply } => {
-                    let _ = reply.send(fleet_status_json(&fleet, &router_name).to_string());
+                    let _ = reply.send(status_json(plane.as_ref()).to_string());
                 }
                 Request::Jobs { reply } => {
-                    let all: Vec<Value> = fleet
-                        .nodes
-                        .iter()
-                        .flat_map(|n| match jobs_json(&n.engine) {
-                            Value::Arr(v) => v,
-                            _ => vec![],
-                        })
-                        .collect();
-                    let _ = reply.send(Value::arr(all).to_string());
+                    let _ = reply.send(jobs_json_all(plane.as_ref()).to_string());
                 }
                 Request::Metrics { reply } => {
-                    let completed: usize =
-                        fleet.nodes.iter().map(|n| n.engine.completed_jobs()).sum();
-                    let stp: f64 = fleet.nodes.iter().map(|n| n.engine.st.instant_stp()).sum();
-                    let _ = reply.send(
-                        Value::obj([
-                            ("now_s", Value::num(fleet.now())),
-                            ("completed", Value::num(completed as f64)),
-                            ("live", Value::num(fleet.live_jobs() as f64)),
-                            ("instant_stp", Value::num(stp)),
-                        ])
-                        .to_string(),
-                    );
+                    let _ = reply.send(metrics_json(plane.as_ref()).to_string());
                 }
                 Request::Fleet { reply } => {
-                    let nodes: Vec<Value> = fleet
-                        .nodes
-                        .iter()
-                        .map(|n| node_json(n.id, &n.engine))
-                        .collect();
-                    let _ = reply.send(Value::obj([("nodes", Value::arr(nodes))]).to_string());
+                    let _ = reply.send(fleet_json(plane.as_ref()).to_string());
                 }
                 Request::Trace { n, reply } => {
-                    // Merge every node's buffer with the gateway's own
-                    // (routing + epoch events), then keep the tail.
-                    let merged = fleet.merged_events();
-                    let skip = merged.len().saturating_sub(n);
-                    let _ = reply.send(trace_json(&merged[skip..]).to_string());
+                    // Clamp to the plane's total ring capacity: larger
+                    // requests cannot return more events, only force a
+                    // larger allocation.
+                    let capacity = plane.telemetry_capacity();
+                    let events = plane.telemetry_events(n.min(capacity));
+                    let _ = reply.send(trace_json(&events, capacity).to_string());
                 }
                 Request::Stats { reply } => {
-                    let _ = reply.send(fleet.merged_stats().to_json().to_string());
+                    let _ = reply.send(plane.telemetry_stats().to_json().to_string());
                 }
             }
         }
@@ -476,12 +435,14 @@ fn controller_loop_fleet(
     }
 }
 
-fn gpu_json(g: &GpuSim) -> Value {
+/// One GPU's snapshot, tagged with the node that owns it.
+fn gpu_json(node: usize, g: &GpuSim) -> Value {
     let (mode, partition) = match &g.gpu.mode {
         crate::gpu::GpuMode::Mig { config, .. } => ("mig", format!("{config}")),
         crate::gpu::GpuMode::Mps { .. } => ("mps", "7g.40gb+MPS".to_string()),
     };
     Value::obj([
+        ("node", Value::num(node as f64)),
         ("id", Value::num(g.gpu.id as f64)),
         ("mode", Value::str(mode)),
         ("partition", Value::str(partition)),
@@ -490,60 +451,86 @@ fn gpu_json(g: &GpuSim) -> Value {
     ])
 }
 
-fn status_json(engine: &Engine) -> Value {
-    let gpus: Vec<Value> = engine.st.gpus.iter().map(gpu_json).collect();
+/// Plane-wide STATUS: aggregate counters, substrate health, per-node load
+/// digests (router-grade [`crate::fleet::NodeView`]s), and every GPU.
+/// Identical shape for both gateways — a single node reports `nodes: 1`,
+/// `router: "local"`, one load entry.
+fn status_json(plane: &dyn ControlPlane) -> Value {
+    let m = plane.metrics();
+    let health = plane.health();
+    let loads: Vec<Value> = plane
+        .node_views()
+        .iter()
+        .map(|v| {
+            Value::obj([
+                ("node", Value::num(v.node as f64)),
+                ("queued", Value::num(v.queued as f64)),
+                ("live_jobs", Value::num(v.live_jobs as f64)),
+                ("empty_gpus", Value::num(v.empty_gpus as f64)),
+                ("partial_gpus", Value::num(v.partial_gpus as f64)),
+                ("full_gpus", Value::num(v.full_gpus as f64)),
+            ])
+        })
+        .collect();
+    let gpus: Vec<Value> = plane
+        .node_snapshots()
+        .iter()
+        .flat_map(|s| {
+            let node = s.node;
+            s.engine.st.gpus.iter().map(move |g| gpu_json(node, g))
+        })
+        .collect();
     Value::obj([
-        ("now_s", Value::num(engine.st.now)),
-        ("queued", Value::num(engine.st.queue.len() as f64)),
-        ("live_jobs", Value::num(engine.live_jobs() as f64)),
-        // Size of the in-memory job table (live + retention-window
+        ("now_s", Value::num(m.now_s)),
+        ("nodes", Value::num(m.nodes as f64)),
+        ("router", Value::str(plane.router_name())),
+        ("degraded", Value::Bool(health.degraded)),
+        ("failed_nodes", Value::num(health.failed_nodes as f64)),
+        ("queued", Value::num(m.queued as f64)),
+        ("live_jobs", Value::num(m.live as f64)),
+        // Size of the in-memory job tables (live + retention-window
         // completions) — observability for the purge that keeps a
         // long-running server's memory bounded.
-        ("tracked_jobs", Value::num(engine.st.jobs.len() as f64)),
-        ("instant_stp", Value::num(engine.st.instant_stp())),
+        ("tracked_jobs", Value::num(m.tracked_jobs as f64)),
+        ("instant_stp", Value::num(m.instant_stp)),
+        ("node_loads", Value::arr(loads)),
         ("gpus", Value::arr(gpus)),
     ])
 }
 
 /// One fleet node's snapshot (the per-node element of a FLEET reply).
 fn node_json(node: usize, engine: &Engine) -> Value {
-    let gpus: Vec<Value> = engine.st.gpus.iter().map(gpu_json).collect();
+    let gpus: Vec<Value> = engine.st.gpus.iter().map(|g| gpu_json(node, g)).collect();
     Value::obj([
         ("node", Value::num(node as f64)),
         ("now_s", Value::num(engine.st.now)),
-        ("queued", Value::num(engine.st.queue.len() as f64)),
+        ("queued", Value::num(engine.queued_jobs() as f64)),
         ("live_jobs", Value::num(engine.live_jobs() as f64)),
-        ("tracked_jobs", Value::num(engine.st.jobs.len() as f64)),
+        ("tracked_jobs", Value::num(engine.tracked_jobs() as f64)),
         ("instant_stp", Value::num(engine.st.instant_stp())),
         ("gpus", Value::arr(gpus)),
     ])
 }
 
-/// Fleet-wide STATUS: aggregate counters plus per-node load digests.
-fn fleet_status_json(fleet: &FleetEngine, router: &str) -> Value {
-    let stp: f64 = fleet.nodes.iter().map(|n| n.engine.st.instant_stp()).sum();
-    let queued: usize = fleet.nodes.iter().map(|n| n.engine.st.queue.len()).sum();
-    let loads: Vec<Value> = fleet
-        .views()
+/// FLEET reply: every node's snapshot (one element on a single node).
+fn fleet_json(plane: &dyn ControlPlane) -> Value {
+    let nodes: Vec<Value> =
+        plane.node_snapshots().iter().map(|s| node_json(s.node, s.engine)).collect();
+    Value::obj([("nodes", Value::arr(nodes))])
+}
+
+/// JOBS reply: every node's job table concatenated (ids are globally
+/// unique — the gateway assigns them — and sorted within each node).
+fn jobs_json_all(plane: &dyn ControlPlane) -> Value {
+    let all: Vec<Value> = plane
+        .node_snapshots()
         .iter()
-        .map(|v| {
-            Value::obj([
-                ("node", Value::num(v.node as f64)),
-                ("live_jobs", Value::num(v.live_jobs as f64)),
-                ("empty_gpus", Value::num(v.empty_gpus as f64)),
-                ("partial_gpus", Value::num(v.partial_gpus as f64)),
-            ])
+        .flat_map(|s| match jobs_json(s.engine) {
+            Value::Arr(v) => v,
+            _ => vec![],
         })
         .collect();
-    Value::obj([
-        ("now_s", Value::num(fleet.now())),
-        ("nodes", Value::num(fleet.num_nodes() as f64)),
-        ("router", Value::str(router)),
-        ("queued", Value::num(queued as f64)),
-        ("live_jobs", Value::num(fleet.live_jobs() as f64)),
-        ("instant_stp", Value::num(stp)),
-        ("node_loads", Value::arr(loads)),
-    ])
+    Value::arr(all)
 }
 
 fn jobs_json(engine: &Engine) -> Value {
@@ -585,17 +572,20 @@ fn jobs_json(engine: &Engine) -> Value {
     Value::arr(jobs.into_iter().map(|(_, v)| v))
 }
 
-fn metrics_json(engine: &Engine) -> Value {
-    let completed = engine.completed_jobs();
+fn metrics_json(plane: &dyn ControlPlane) -> Value {
+    let m = plane.metrics();
     Value::obj([
-        ("now_s", Value::num(engine.st.now)),
-        ("completed", Value::num(completed as f64)),
-        ("live", Value::num(engine.live_jobs() as f64)),
-        ("instant_stp", Value::num(engine.st.instant_stp())),
+        ("now_s", Value::num(m.now_s)),
+        ("nodes", Value::num(m.nodes as f64)),
+        ("completed", Value::num(m.completed as f64)),
+        ("live", Value::num(m.live as f64)),
+        ("queued", Value::num(m.queued as f64)),
+        ("tracked_jobs", Value::num(m.tracked_jobs as f64)),
+        ("instant_stp", Value::num(m.instant_stp)),
     ])
 }
 
-fn handle_connection(stream: TcpStream, tx: Sender<Request>) -> Result<()> {
+fn handle_connection(stream: TcpStream, tx: Sender<Request>) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -645,7 +635,7 @@ fn request(tx: &Sender<Request>, make: impl FnOnce(Sender<String>) -> Request) -
     reply_rx.recv_timeout(Duration::from_secs(5)).ok()
 }
 
-fn respond(w: &mut TcpStream, msg: &str) -> Result<()> {
+fn respond(w: &mut TcpStream, msg: &str) -> std::io::Result<()> {
     writeln!(w, "{msg}")?;
     Ok(())
 }
@@ -662,8 +652,11 @@ fn parse_family(name: &str) -> Option<ModelFamily> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use crate::scheduler::MisoPolicy;
+    use crate::sim::Policy;
 
     fn send_line(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<String> {
         let mut stream = TcpStream::connect(addr).unwrap();
@@ -695,6 +688,10 @@ mod tests {
         assert_eq!(sub.get("ok"), Some(&Value::Bool(true)));
         let status = crate::util::json::parse(&resp[1]).unwrap();
         assert!(status.req_f64("live_jobs").unwrap() >= 1.0);
+        // Single node answers the unified STATUS shape.
+        assert_eq!(status.req_f64("nodes").unwrap(), 1.0);
+        assert_eq!(status.get("router"), Some(&Value::str("local")));
+        assert_eq!(status.get("degraded"), Some(&Value::Bool(false)));
 
         // Wait until virtual time passes profiling + execution.
         let deadline = Instant::now() + Duration::from_secs(30);
@@ -770,12 +767,17 @@ mod tests {
         let resp = send_line(addr, &["STATUS"]);
         let s = crate::util::json::parse(&resp[0]).unwrap();
         assert_eq!(s.req_f64("nodes").unwrap(), 3.0);
+        assert_eq!(s.get("router"), Some(&Value::str("round-robin")));
+        assert_eq!(s.req_arr("node_loads").unwrap().len(), 3);
         server.shutdown();
     }
 
     #[test]
     fn fleet_gateway_rejects_bad_router() {
-        assert!(start_fleet(0, 2, 1, 60.0, "no-such-router", 1).is_err());
+        assert!(matches!(
+            start_fleet(0, 2, 1, 60.0, "no-such-router", 1),
+            Err(ServerError::Control(ControlError::Router(_)))
+        ));
     }
 
     #[test]
@@ -793,6 +795,7 @@ mod tests {
             "{trace}"
         );
         assert_eq!(trace.req_f64("count").unwrap() as usize, events.len());
+        assert!(trace.req_f64("capacity").unwrap() > 0.0, "{trace}");
 
         let stats = crate::util::json::parse(&resp[2]).unwrap();
         assert!(stats.req_f64("arrivals").unwrap() >= 1.0, "{stats}");

@@ -1,8 +1,18 @@
-//! Live mode (paper Fig. 6): a central controller + per-GPU "server API"
-//! threads over TCP, with simulated GPUs advancing in scaled wall-clock
-//! time. Implemented with std::net + threads (tokio is unavailable in this
-//! offline build). See server/live.rs.
+//! Live mode (paper Fig. 6): a central controller driving a
+//! [`crate::control::ControlPlane`] — single node or fleet — plus
+//! per-connection "server API" threads over TCP, with simulated GPUs
+//! advancing in scaled wall-clock time. Implemented with std::net +
+//! threads (tokio is unavailable in this offline build). See
+//! server/live.rs.
+//!
+//! Gateway code is panic-free by construction: startup errors are typed
+//! ([`ServerError`]) and `unwrap`/`expect` are denied module-wide
+//! (allowed back inside `#[cfg(test)]`).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 mod live;
 
-pub use live::{serve, serve_fleet, start, start_fleet, start_fleet_with, start_with, LiveServer};
+pub use live::{
+    serve, serve_fleet, start, start_fleet, start_fleet_with, start_plane, start_with, LiveServer,
+    ServerError, JOBS_RETENTION_S,
+};

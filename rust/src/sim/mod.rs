@@ -971,6 +971,17 @@ impl Engine {
         self.submitted - self.live
     }
 
+    /// Jobs waiting in the controller queue (not yet placed).
+    pub fn queued_jobs(&self) -> usize {
+        self.st.queue.len()
+    }
+
+    /// In-memory job-table size: live jobs plus completions still inside
+    /// the [`Self::purge_completed`] retention window.
+    pub fn tracked_jobs(&self) -> usize {
+        self.st.jobs.len()
+    }
+
     /// Event-index instrumentation counters.
     pub fn stats(&self) -> CoreStats {
         self.st.stats

@@ -366,6 +366,9 @@ pub struct Stats {
     pub router_fallbacks: u64,
     /// Worker-pool epoch barriers completed.
     pub epochs: u64,
+    /// Worker-pool losses absorbed (spawn failure or worker death) — each
+    /// one flips the fleet into sequential degraded mode.
+    pub pool_failures: u64,
     pub jct_s: LogHistogram,
     pub queue_wait_s: LogHistogram,
     pub repartition_downtime_s: LogHistogram,
@@ -420,6 +423,7 @@ impl Stats {
         self.router_decisions += other.router_decisions;
         self.router_fallbacks += other.router_fallbacks;
         self.epochs += other.epochs;
+        self.pool_failures += other.pool_failures;
         self.jct_s.merge(&other.jct_s);
         self.queue_wait_s.merge(&other.queue_wait_s);
         self.repartition_downtime_s.merge(&other.repartition_downtime_s);
@@ -440,6 +444,7 @@ impl Stats {
             ("router_decisions", Value::num(self.router_decisions as f64)),
             ("router_fallbacks", Value::num(self.router_fallbacks as f64)),
             ("epochs", Value::num(self.epochs as f64)),
+            ("pool_failures", Value::num(self.pool_failures as f64)),
             (
                 "histograms",
                 Value::obj([
@@ -456,7 +461,7 @@ impl Stats {
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         out.push_str("counters:\n");
-        let counters: [(&str, u64); 12] = [
+        let counters: [(&str, u64); 13] = [
             ("arrivals", self.arrivals),
             ("placements", self.placements),
             ("completions", self.completions),
@@ -469,6 +474,7 @@ impl Stats {
             ("router decisions", self.router_decisions),
             ("router fallbacks", self.router_fallbacks),
             ("pool epochs", self.epochs),
+            ("pool failures", self.pool_failures),
         ];
         for (name, v) in counters {
             out.push_str(&format!("  {name:<24} {v}\n"));
@@ -555,6 +561,12 @@ impl TraceBuffer {
         let skip = snap.len().saturating_sub(n);
         snap[skip..].to_vec()
     }
+
+    /// Maximum events the ring retains — the useful upper bound for a
+    /// [`Self::last_n`] request.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
 }
 
 /// Per-engine telemetry handle: mode + stats + ring buffer. Owned by
@@ -625,6 +637,12 @@ impl Telemetry {
     /// ring has wrapped).
     pub fn recorded(&self) -> u64 {
         self.seq
+    }
+
+    /// Ring capacity — the most events [`Self::last_n`] can ever return.
+    /// The live gateway clamps `TRACE n` requests to this bound.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
     }
 }
 

@@ -1,0 +1,286 @@
+//! Control-plane unification tests: the `ControlPlane` trait must be a
+//! zero-cost seam. (1) Digest parity — driving either deployment shape
+//! through `control::replay` produces bit-identical metrics digests to
+//! the direct runners (`sim::run`, `fleet::run_fleet`), and a 1-node
+//! fleet agrees with a bare engine event-for-event. (2) Gateway
+//! robustness — one parameterized protocol-abuse harness runs against
+//! BOTH trait impls behind the live TCP gateway, and bad configurations
+//! surface typed errors on the caller's thread instead of panicking a
+//! detached controller.
+
+use miso::control::{replay, ControlError, ControlPlane, FleetPlane, SingleNode};
+use miso::fleet::FleetConfig;
+use miso::server::{start_fleet_with, start_with, LiveServer, ServerError};
+use miso::telemetry::{TraceMode, DEFAULT_RING_CAP, FLEET_NODE};
+use miso::util::json::Value;
+use miso::workload::{Job, TraceConfig, TraceGenerator};
+use miso::SystemConfig;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn poisson_trace(jobs: usize, lambda_s: f64, seed: u64) -> Vec<Job> {
+    TraceGenerator::new(TraceConfig {
+        num_jobs: jobs,
+        mean_interarrival_s: lambda_s,
+        max_duration_s: 1200.0,
+        min_duration_s: 60.0,
+        seed,
+        ..Default::default()
+    })
+    .generate()
+}
+
+// ---------------------------------------------------------------------------
+// Digest parity across the trait boundary
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replay_matches_direct_single_node_run() {
+    let trace = poisson_trace(48, 12.0, 33);
+    let cfg = SystemConfig { num_gpus: 4, ..SystemConfig::testbed() };
+
+    let mut policy = miso::scheduler::MisoPolicy::paper(5);
+    let m_direct = miso::sim::run(&mut policy, &trace, cfg.clone());
+
+    // `SingleNode::new("miso", 5)` builds the same `MisoPolicy::paper(5)`
+    // through the fleet policy registry.
+    let mut plane = SingleNode::new(cfg, "miso", 5, TraceMode::Off).unwrap();
+    replay(&mut plane, &trace);
+    let (m_plane, _tel) = plane.into_parts();
+
+    assert_eq!(m_plane.records.len(), m_direct.records.len());
+    assert_eq!(
+        m_plane.digest(),
+        m_direct.digest(),
+        "replay through ControlPlane must be bit-identical to sim::run"
+    );
+}
+
+#[test]
+fn replay_matches_direct_fleet_run() {
+    let trace = poisson_trace(64, 6.0, 21);
+    let cfg = FleetConfig {
+        nodes: 4,
+        gpus_per_node: 2,
+        threads: 2,
+        node_cfg: SystemConfig::testbed(),
+        ..Default::default()
+    };
+
+    let mut router = miso::fleet::make_router("frag-aware").unwrap();
+    let m_direct = miso::fleet::run_fleet(&cfg, "miso", 99, router.as_mut(), &trace).unwrap();
+
+    let mut plane = FleetPlane::new(&cfg, "miso", 99, "frag-aware").unwrap();
+    replay(&mut plane, &trace);
+    let m_plane = plane.into_metrics();
+
+    assert_eq!(m_plane.total_jobs(), m_direct.total_jobs());
+    assert_eq!(
+        m_plane.digest(),
+        m_direct.digest(),
+        "replay through ControlPlane must be bit-identical to fleet::run_fleet"
+    );
+}
+
+#[test]
+fn one_node_fleet_and_bare_engine_agree_through_the_trait() {
+    // The pinning satellite: a 1-node FleetPlane and a bare-Engine
+    // SingleNode, both driven through `dyn ControlPlane`, must produce
+    // identical metrics digests AND identical node-level telemetry
+    // fingerprint streams (the fleet's extra gateway events — router
+    // decisions, epoch barriers — live on FLEET_NODE and are excluded).
+    let trace = poisson_trace(40, 15.0, 17);
+    let seed = 17u64;
+
+    let fcfg = FleetConfig {
+        nodes: 1,
+        gpus_per_node: 4,
+        threads: 1,
+        node_cfg: SystemConfig::testbed(),
+        telemetry: TraceMode::Full,
+        ..Default::default()
+    };
+    let mut fleet: Box<dyn ControlPlane> =
+        Box::new(FleetPlane::new(&fcfg, "miso", seed, "round-robin").unwrap());
+    replay(fleet.as_mut(), &trace);
+
+    let scfg = SystemConfig { num_gpus: 4, ..SystemConfig::testbed() };
+    let node_seed = miso::scheduler::node_seed(seed, 0);
+    let mut single: Box<dyn ControlPlane> =
+        Box::new(SingleNode::new(scfg, "miso", node_seed, TraceMode::Full).unwrap());
+    replay(single.as_mut(), &trace);
+
+    // Same shape-agnostic answers.
+    assert_eq!(fleet.num_nodes(), 1);
+    assert_eq!(single.num_nodes(), 1);
+    assert_eq!(fleet.metrics().completed, single.metrics().completed);
+
+    // Node-level decision streams are fingerprint-identical.
+    let fleet_events: Vec<String> = fleet
+        .telemetry_events(fleet.telemetry_capacity())
+        .iter()
+        .filter(|e| e.node != FLEET_NODE)
+        .map(|e| e.fingerprint())
+        .collect();
+    let single_events: Vec<String> = single
+        .telemetry_events(single.telemetry_capacity())
+        .iter()
+        .map(|e| e.fingerprint())
+        .collect();
+    assert!(!fleet_events.is_empty());
+    assert_eq!(fleet_events, single_events, "node telemetry must not see the fleet wrapper");
+
+    // Metrics digests are bit-identical, per node and fleet-wide.
+    let fm = fleet.finish();
+    let sm = single.finish();
+    assert_eq!(fm.per_node.len(), 1);
+    assert_eq!(sm.per_node.len(), 1);
+    assert_eq!(fm.per_node[0].digest(), sm.per_node[0].digest());
+    assert_eq!(fm.digest(), sm.digest());
+}
+
+// ---------------------------------------------------------------------------
+// Typed startup errors (no panicking controllers)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bad_configs_surface_typed_errors_not_panics() {
+    // Fleet shapes.
+    assert!(matches!(
+        start_fleet_with(0, 0, 1, 60.0, "round-robin", 1, TraceMode::Off),
+        Err(ServerError::Control(ControlError::InvalidConfig(_)))
+    ));
+    assert!(matches!(
+        start_fleet_with(0, 2, 0, 60.0, "round-robin", 1, TraceMode::Off),
+        Err(ServerError::Control(ControlError::InvalidConfig(_)))
+    ));
+    assert!(matches!(
+        start_fleet_with(0, 2, 1, 0.0, "round-robin", 1, TraceMode::Off),
+        Err(ServerError::Control(ControlError::InvalidConfig(_)))
+    ));
+    assert!(matches!(
+        start_fleet_with(0, 2, 1, 60.0, "no-such-router", 1, TraceMode::Off),
+        Err(ServerError::Control(ControlError::Router(_)))
+    ));
+    // Single-node shapes.
+    assert!(matches!(
+        start_with(0, 0, 60.0, TraceMode::Off),
+        Err(ServerError::Control(ControlError::InvalidConfig(_)))
+    ));
+    assert!(matches!(
+        start_with(0, 2, -1.0, TraceMode::Off),
+        Err(ServerError::Control(ControlError::InvalidConfig(_)))
+    ));
+    // The errors render something a caller can print.
+    let msg = start_with(0, 0, 60.0, TraceMode::Off).map(|_| ()).unwrap_err().to_string();
+    assert!(msg.contains("GPU"), "unhelpful startup error: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Protocol-abuse harness, parameterized over BOTH gateway shapes
+// ---------------------------------------------------------------------------
+
+fn send_lines(addr: std::net::SocketAddr, lines: &[&str]) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut out = Vec::new();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for l in lines {
+        writeln!(stream, "{l}").unwrap();
+        if *l == "QUIT" {
+            break;
+        }
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        out.push(resp.trim().to_string());
+    }
+    out
+}
+
+/// Throw every protocol error path at a live gateway and assert the
+/// controller survives all of them: malformed SUBMITs, unknown commands,
+/// an oversized TRACE (clamped, not allocated), QUIT mid-stream, and two
+/// concurrent clients. `expected_capacity` pins the TRACE clamp bound
+/// for the gateway's shape.
+fn abuse_gateway(server: LiveServer, expected_capacity: usize) {
+    let addr = server.addr();
+
+    // Malformed input never takes the gateway down; each line gets a
+    // structured error (or for a wrong-arity SUBMIT, "unknown command").
+    let resp = send_lines(
+        addr,
+        &[
+            "SUBMIT NotAModel 0 10",
+            "SUBMIT ResNet50 zero 10",
+            "SUBMIT ResNet50 0",
+            "SUBMIT",
+            "BOGUS",
+            "TRACE nope",
+            "TRACE -5",
+        ],
+    );
+    for r in &resp {
+        let v = miso::util::json::parse(r).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "abuse accepted: {r}");
+    }
+
+    // Oversized TRACE: the reply reports the clamp bound and never echoes
+    // the absurd request size back as an allocation.
+    let resp = send_lines(addr, &["SUBMIT ResNet50 0 30", "TRACE 999999999"]);
+    let sub = miso::util::json::parse(&resp[0]).unwrap();
+    assert_eq!(sub.get("ok"), Some(&Value::Bool(true)));
+    let trace = miso::util::json::parse(&resp[1]).unwrap();
+    let capacity = trace.req_f64("capacity").unwrap() as usize;
+    let count = trace.req_f64("count").unwrap() as usize;
+    assert_eq!(capacity, expected_capacity);
+    assert!(count <= capacity, "TRACE returned more events than the ring holds");
+    assert!(!trace.req_arr("events").unwrap().is_empty(), "a submit must be traced");
+
+    // QUIT mid-stream closes only that connection; the gateway keeps
+    // serving fresh ones.
+    send_lines(addr, &["QUIT"]);
+    let resp = send_lines(addr, &["STATUS"]);
+    let status = miso::util::json::parse(&resp[0]).unwrap();
+    assert!(status.req_f64("nodes").unwrap() >= 1.0, "{status}");
+
+    // Two concurrent clients interleave submits and reads without
+    // wedging the single controller loop.
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let resp = send_lines(addr, &["SUBMIT ResNet50 0 30", "STATUS", "METRICS"]);
+                    assert_eq!(resp.len(), 3);
+                    let sub = miso::util::json::parse(&resp[0]).unwrap();
+                    assert_eq!(sub.get("ok"), Some(&Value::Bool(true)), "{}", resp[0]);
+                    let status = miso::util::json::parse(&resp[1]).unwrap();
+                    assert!(status.req_f64("live_jobs").unwrap() >= 1.0, "{status}");
+                    miso::util::json::parse(&resp[2]).unwrap().req_f64("completed").unwrap();
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // The gateway still answers after the abuse.
+    let resp = send_lines(addr, &["METRICS"]);
+    assert!(miso::util::json::parse(&resp[0]).unwrap().req_f64("live").is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn protocol_abuse_survives_single_node_gateway() {
+    let server = start_with(0, 2, 60.0, TraceMode::Full).unwrap();
+    // One engine ring.
+    abuse_gateway(server, DEFAULT_RING_CAP);
+}
+
+#[test]
+fn protocol_abuse_survives_fleet_gateway() {
+    let server = start_fleet_with(0, 2, 1, 60.0, "least-loaded", 1, TraceMode::Full).unwrap();
+    // Two node rings plus the gateway's own.
+    abuse_gateway(server, 3 * DEFAULT_RING_CAP);
+}
