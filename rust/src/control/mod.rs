@@ -209,6 +209,12 @@ pub trait ControlPlane: Send {
 pub struct SingleNode {
     engine: Engine,
     policy: Box<dyn Policy + Send>,
+    /// Lazily materialized [`ControlPlane::node_views`] answer, so STATUS
+    /// polls between state changes stop rebuilding the `NodeView` (and
+    /// re-walking the placement index) per call. Interior mutability
+    /// because the trait reads views through `&self`; invalidated by every
+    /// mutating entry point (submit / advance / drain / purge).
+    views_cache: std::cell::RefCell<Option<Vec<NodeView>>>,
 }
 
 impl SingleNode {
@@ -237,7 +243,14 @@ impl SingleNode {
         let mut engine = Engine::new(cfg);
         engine.st.telemetry = Telemetry::for_node(telemetry, 0);
         policy.init(&mut engine.st);
-        Ok(SingleNode { engine, policy })
+        Ok(SingleNode { engine, policy, views_cache: std::cell::RefCell::new(None) })
+    }
+
+    /// Drop the memoized `node_views` answer; called by every `&mut self`
+    /// entry point so a cached view can never outlive the state it
+    /// describes.
+    fn invalidate_views(&mut self) {
+        *self.views_cache.get_mut() = None;
     }
 
     /// The wrapped policy's display name.
@@ -265,20 +278,24 @@ impl ControlPlane for SingleNode {
 
     fn advance_to(&mut self, t: f64) {
         if t > self.engine.st.now {
+            self.invalidate_views();
             self.engine.advance_to(self.policy.as_mut(), t);
         }
     }
 
     fn drain(&mut self) {
+        self.invalidate_views();
         self.engine.run_until_idle(self.policy.as_mut());
     }
 
     fn submit(&mut self, job: Job) -> usize {
+        self.invalidate_views();
         self.engine.submit(self.policy.as_mut(), job);
         0
     }
 
     fn purge_completed(&mut self, retention_s: f64) -> usize {
+        self.invalidate_views();
         self.engine.purge_completed(retention_s)
     }
 
@@ -302,6 +319,15 @@ impl ControlPlane for SingleNode {
         let SingleNode { engine, .. } = *self;
         let gpus = engine.st.gpus.len();
         FleetMetrics::aggregate(vec![engine.finish()], gpus)
+    }
+
+    fn node_views(&self) -> Vec<NodeView> {
+        if let Some(views) = self.views_cache.borrow().as_ref() {
+            return views.clone();
+        }
+        let views = vec![NodeView::of(0, &self.engine)];
+        *self.views_cache.borrow_mut() = Some(views.clone());
+        views
     }
 }
 
@@ -503,6 +529,37 @@ mod tests {
         let fm = ControlPlane::finish(Box::new(plane));
         assert_eq!(fm.total_jobs(), 5);
         assert_eq!(fm.per_node.len(), 1);
+    }
+
+    #[test]
+    fn node_views_cache_reflects_every_mutation() {
+        let mut plane = SingleNode::new(testbed(2), "miso", 11, TraceMode::Off).unwrap();
+        let trace = TraceGenerator::new(TraceConfig {
+            num_jobs: 2,
+            mean_interarrival_s: 10.0,
+            seed: 11,
+            ..Default::default()
+        })
+        .generate();
+        // Prime the cache, then hit every mutating entry point: a stale
+        // cached view must never be served.
+        assert_eq!(plane.node_views()[0].live_jobs, 0);
+        let mut it = trace.into_iter();
+        let job = it.next().unwrap();
+        plane.advance_to(job.arrival);
+        plane.submit(job);
+        let v = plane.node_views();
+        assert_eq!(v[0].live_jobs, 1, "view served after submit must reflect the submit");
+        // The cached answer must match a fresh default-path materialization.
+        let fresh: Vec<NodeView> =
+            plane.node_snapshots().iter().map(|s| NodeView::of(s.node, s.engine)).collect();
+        assert_eq!(format!("{v:?}"), format!("{fresh:?}"));
+        let job2 = it.next().unwrap();
+        plane.advance_to(job2.arrival);
+        plane.submit_batch(vec![job2]);
+        assert_eq!(plane.node_views()[0].live_jobs, 2);
+        plane.drain();
+        assert_eq!(plane.node_views()[0].live_jobs, 0);
     }
 
     #[test]

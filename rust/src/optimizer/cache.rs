@@ -1,0 +1,526 @@
+//! Memoized partition planning: a bounded plan cache in front of
+//! Algorithm 1, plus the pruned per-`m` config tables it (and
+//! [`super::optimize`]) scan.
+//!
+//! MISO re-solves the partition optimization on *every* arrival and
+//! completion, but co-located job mixes recur constantly — most solves
+//! are exact repeats modulo job identity. [`optimize_cached`] makes the
+//! repeat case amortized O(1):
+//!
+//! 1. **Quantize.** Each [`SpeedupTable`] maps to a fixed-point key of
+//!    five `u16`s ([`quantize`]). Strictly positive speedups clamp up to
+//!    at least 1, so *feasibility* (speedup > 0) survives quantization
+//!    exactly; the dequantization error is ≤ [`QUANT_EPS`] = 1/65535 per
+//!    entry.
+//! 2. **Canonicalize.** Jobs are sorted by key (ties broken by caller
+//!    index, so the order is total and deterministic); the permutation is
+//!    remembered and the cached assignment is remapped back to caller
+//!    order on the way out. All permutations of one job multiset share a
+//!    single cache entry.
+//! 3. **Memoize.** A bounded [`PlanCache`] (HashMap + generation-based
+//!    eviction) stores the chosen `(config, assignment)` per canonical
+//!    key — infeasible keys are cached too, since feasibility is a
+//!    function of the key.
+//! 4. **Prune the miss path.** Misses scan only
+//!    [`pruned_config_indices`]`(m)`: one representative per distinct
+//!    GPC multiset among the configs with exactly `m` slices. The
+//!    assignment DP's optimum depends only on the slice-kind multiset,
+//!    and strict-`>` selection keeps the earliest config in enumeration
+//!    order — which is exactly the group representative — so the pruned
+//!    scan returns the identical plan the full 18-config scan returns.
+//!
+//! **Determinism contract.** Plan *selection* is a pure function of the
+//! quantized canonical key: the miss path solves the DP over the
+//! *dequantized* key (not the caller's exact tables), so any two table
+//! sets sharing a key — across hits, misses, evictions, cache capacities,
+//! and fleet pool sizes — yield the bit-identical `(config, assignment)`.
+//! The plan *objective* is then recomputed from the caller's unquantized
+//! tables, so scoring stays exact for the selected plan. Consequently a
+//! run with any cache capacity (including 0 = disabled) is bit-identical
+//! to any other — pinned by `tests/proptests.rs`.
+//!
+//! **Error bound.** Selecting on dequantized tables can forgo at most
+//! `2·m·QUANT_EPS` of objective versus the exact optimum
+//! ([`objective_tolerance`]): for any assignment the quantized and exact
+//! objectives differ by ≤ `m·QUANT_EPS`, and the quantized-optimal
+//! assignment beats the exact-optimal one under the quantized score, so
+//! the two bounds chain. At `m = 7` that is ≈ 2.1e-4 on an objective in
+//! `(0, 7]` — far below the predictor's own noise floor (σ ≈ 0.1 for the
+//! paper-accuracy predictor).
+
+use super::{best_assignment, PartitionPlan, SpeedupTable};
+use crate::mig::enumerate_configs;
+use crate::util::FastMap;
+use std::sync::OnceLock;
+
+/// Fixed-point full scale of a plan-cache key entry (`u16::MAX`).
+pub const QUANT_SCALE: f64 = 65535.0;
+
+/// Per-entry dequantization error bound: `|v - dq(quantize(v))| ≤ 1/65535`
+/// for `v ∈ [0, 1]` (½ ULP from rounding, or < 1 ULP for tiny positive
+/// values clamped up to 1 to preserve feasibility).
+pub const QUANT_EPS: f64 = 1.0 / QUANT_SCALE;
+
+/// Default per-policy plan-cache capacity (entries). An entry is ~100 B
+/// (70 B key + packed plan), so the default costs ≲ 64 KiB per policy
+/// instance — per *node* on a fleet, since every node owns its policy.
+pub const DEFAULT_PLAN_CACHE_CAP: usize = 512;
+
+/// Worst-case objective shortfall of quantized-selection planning versus
+/// the exact optimum, for `m` jobs (see the module docs for the proof).
+pub fn objective_tolerance(m: usize) -> f64 {
+    2.0 * m as f64 * QUANT_EPS
+}
+
+/// Quantize one speedup to its fixed-point key entry. Non-positive
+/// (infeasible) values map to exactly 0; strictly positive values map to
+/// at least 1, so the feasible set of the DP is preserved bit-exactly.
+fn quantize(v: f64) -> u16 {
+    if v <= 0.0 {
+        0
+    } else {
+        let q = (v.min(1.0) * QUANT_SCALE).round() as u32;
+        q.clamp(1, 65535) as u16
+    }
+}
+
+/// Canonical cache key: the job count plus the per-job quantized tables
+/// in canonical (sorted) order. Unused trailing slots stay zeroed so the
+/// derived `Hash`/`Eq` see a fixed-width value.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    m: u8,
+    keys: [[u16; 5]; 7],
+}
+
+/// A memoized plan in canonical job order, packed small: the config as an
+/// index into [`enumerate_configs`] and the assignment as slice indices.
+#[derive(Clone, Copy)]
+struct CachedPlan {
+    config: u16,
+    assignment: [u8; 7],
+}
+
+struct Entry {
+    /// `None` memoizes infeasibility (a function of the key).
+    plan: Option<CachedPlan>,
+    /// Generation stamp for eviction: refreshed on every hit.
+    gen: u64,
+}
+
+/// Bounded memo table for [`optimize_cached`]. Eviction is
+/// generation-based: when an insert finds the map at capacity, every
+/// entry not touched since the previous sweep is dropped and the
+/// generation advances — an O(len) sweep amortized over ≥ 1 insert per
+/// evicted entry, with the map bounded by `cap` plus the keys touched
+/// since the last sweep. Capacity 0 disables memoization entirely (every
+/// call recomputes); results are bit-identical at any capacity because
+/// selection is a pure function of the key.
+///
+/// Deliberately **not** shared across fleet nodes: each policy instance
+/// (and therefore each node) owns its cache, so node digests cannot
+/// depend on pool size or stepping order. Only the immutable pruned
+/// config tables ([`pruned_config_indices`]) are process-wide statics.
+pub struct PlanCache {
+    map: FastMap<PlanKey, Entry>,
+    cap: usize,
+    gen: u64,
+    /// Solves answered from the memo table.
+    pub hits: u64,
+    /// Solves that ran the pruned scan (including all solves at cap 0).
+    pub misses: u64,
+    /// Entries dropped by generation sweeps.
+    pub evictions: u64,
+}
+
+impl PlanCache {
+    /// A cache bounded at `cap` entries (0 disables memoization).
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache { map: FastMap::default(), cap, gen: 0, hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// A cache that never stores: every solve is a miss. Used by tests to
+    /// pin cached ≡ uncached digests.
+    pub fn disabled() -> PlanCache {
+        PlanCache::new(0)
+    }
+
+    /// Entries currently memoized.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fraction of solves answered from the memo table so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    fn insert(&mut self, key: PlanKey, plan: Option<CachedPlan>) {
+        if self.map.len() >= self.cap {
+            let live = self.gen;
+            let before = self.map.len();
+            self.map.retain(|_, e| e.gen == live);
+            self.evictions += (before - self.map.len()) as u64;
+            self.gen += 1;
+        }
+        self.map.insert(key, Entry { plan, gen: self.gen });
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache::new(DEFAULT_PLAN_CACHE_CAP)
+    }
+}
+
+/// Indices (into [`enumerate_configs`]) of the configs Algorithm 1 must
+/// actually scan for `m` jobs: one representative — the first in
+/// enumeration order — per distinct GPC multiset among the configs with
+/// exactly `m` slices. Computed once, process-wide (immutable, so safe to
+/// share across fleet nodes).
+pub fn pruned_config_indices(m: usize) -> &'static [usize] {
+    static TABLE: OnceLock<Vec<Vec<usize>>> = OnceLock::new();
+    let by_len = TABLE.get_or_init(|| {
+        let mut by_len: Vec<Vec<usize>> = vec![Vec::new(); 8];
+        let mut seen: Vec<Vec<Vec<u8>>> = vec![Vec::new(); 8];
+        for (i, c) in enumerate_configs().iter().enumerate() {
+            let ms = c.gpc_multiset();
+            let bucket = &mut seen[c.len()];
+            if !bucket.contains(&ms) {
+                bucket.push(ms);
+                by_len[c.len()].push(i);
+            }
+        }
+        by_len
+    });
+    &by_len[m.min(7)]
+}
+
+/// Solve the canonical key from scratch: DP over the dequantized tables,
+/// scanning only the pruned per-`m` representatives. Pure in the key —
+/// the determinism anchor for the whole cache.
+fn solve_canonical(key: &PlanKey) -> Option<CachedPlan> {
+    let m = key.m as usize;
+    let mut dq = [SpeedupTable([0.0; 5]); 7];
+    for slot in 0..m {
+        for (k, &q) in key.keys[slot].iter().enumerate() {
+            dq[slot].0[k] = f64::from(q) / QUANT_SCALE;
+        }
+    }
+    let dq = &dq[..m];
+    let configs = enumerate_configs();
+    let mut best: Option<(usize, Vec<usize>, f64)> = None;
+    for &ci in pruned_config_indices(m) {
+        if let Some((assignment, obj)) = best_assignment(dq, &configs[ci]) {
+            if best.as_ref().map_or(true, |(_, _, b)| obj > *b) {
+                best = Some((ci, assignment, obj));
+            }
+        }
+    }
+    let (ci, assignment, _) = best?;
+    let mut packed = [0u8; 7];
+    for (slot, &s) in assignment.iter().enumerate() {
+        packed[slot] = s as u8;
+    }
+    Some(CachedPlan { config: ci as u16, assignment: packed })
+}
+
+/// Memoized Algorithm 1: [`super::optimize`] fronted by `cache`.
+///
+/// Selection (which config, which job→slice assignment) is keyed on the
+/// quantized canonical tables and therefore identical across hits,
+/// misses, and cache capacities; the returned objective is recomputed
+/// from the caller's exact `tables`. The plan's objective is within
+/// [`objective_tolerance`]`(m)` of [`super::optimize`]'s exact optimum,
+/// and feasibility (`Some` vs `None`) matches it exactly.
+pub fn optimize_cached(cache: &mut PlanCache, tables: &[SpeedupTable]) -> Option<PartitionPlan> {
+    let m = tables.len();
+    if m == 0 || m > 7 {
+        return None;
+    }
+    // Quantize, then canonicalize: sort job indices by (key, caller
+    // index) — a total order, so the permutation is deterministic even
+    // for identical keys.
+    let mut qkeys = [[0u16; 5]; 7];
+    for (j, t) in tables.iter().enumerate() {
+        for (k, &v) in t.0.iter().enumerate() {
+            qkeys[j][k] = quantize(v);
+        }
+    }
+    let mut order = [0usize; 7];
+    for (slot, o) in order.iter_mut().enumerate() {
+        *o = slot;
+    }
+    order[..m].sort_unstable_by(|&a, &b| qkeys[a].cmp(&qkeys[b]).then(a.cmp(&b)));
+    let mut key = PlanKey { m: m as u8, keys: [[0; 5]; 7] };
+    for (slot, &j) in order[..m].iter().enumerate() {
+        key.keys[slot] = qkeys[j];
+    }
+
+    let cached = if cache.cap == 0 {
+        cache.misses += 1;
+        solve_canonical(&key)
+    } else if let Some(e) = cache.map.get_mut(&key) {
+        e.gen = cache.gen;
+        cache.hits += 1;
+        e.plan
+    } else {
+        cache.misses += 1;
+        let plan = solve_canonical(&key);
+        cache.insert(key, plan);
+        plan
+    };
+
+    // Remap the canonical assignment back to caller order and score the
+    // selected plan exactly, from the unquantized tables.
+    let plan = cached?;
+    let config = enumerate_configs()[plan.config as usize].clone();
+    let mut assignment = vec![0usize; m];
+    let mut objective = 0.0;
+    for (slot, &j) in order[..m].iter().enumerate() {
+        let s = plan.assignment[slot] as usize;
+        assignment[j] = s;
+        objective += tables[j].get(config.slices[s].kind);
+    }
+    Some(PartitionPlan { config, assignment, objective })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{optimize, optimize_bruteforce};
+    use super::*;
+    use crate::mig::{SliceKind, ALL_CONFIGS};
+    use crate::util::Rng;
+
+    fn random_tables(rng: &mut Rng, m: usize) -> Vec<SpeedupTable> {
+        (0..m)
+            .map(|_| {
+                let mut t =
+                    SpeedupTable::from_fn(|k| (rng.f64() * k.sm_fraction() * 2.0).min(1.0));
+                if rng.bool(0.25) {
+                    t.set(SliceKind::G1, 0.0);
+                }
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantization_preserves_feasibility_and_error_bound() {
+        assert_eq!(quantize(0.0), 0);
+        assert_eq!(quantize(-0.5), 0);
+        assert_eq!(quantize(1.0), 65535);
+        assert_eq!(quantize(2.0), 65535);
+        assert!(quantize(1e-12) >= 1, "tiny positive speedups must stay feasible");
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            let dq = f64::from(quantize(v)) / QUANT_SCALE;
+            assert!((v - dq).abs() <= QUANT_EPS, "{v} -> {dq}");
+        }
+    }
+
+    #[test]
+    fn pruned_tables_cover_every_m_and_dedup_multisets() {
+        let mut total = 0;
+        for m in 1..=7usize {
+            let reps = pruned_config_indices(m);
+            assert!(!reps.is_empty(), "no pruned config for m={m}");
+            total += reps.len();
+            let mut seen: Vec<Vec<u8>> = Vec::new();
+            let configs = enumerate_configs();
+            for &ci in reps {
+                assert_eq!(configs[ci].len(), m);
+                let ms = configs[ci].gpc_multiset();
+                assert!(!seen.contains(&ms), "duplicate multiset {ms:?} at m={m}");
+                // Representative = first config in enumeration order with
+                // this multiset (the strict-`>` tie-break winner).
+                let first = configs.iter().position(|c| c.gpc_multiset() == ms);
+                assert_eq!(first, Some(ci));
+                seen.push(ms);
+            }
+        }
+        assert!(
+            total < ALL_CONFIGS.len(),
+            "dedup must prune something (got {total} reps over 18 configs)"
+        );
+        assert!(pruned_config_indices(0).is_empty());
+    }
+
+    #[test]
+    fn cached_matches_exact_optimizer_within_tolerance() {
+        let mut rng = Rng::seed_from_u64(0xCAC4E);
+        let mut cache = PlanCache::default();
+        for _ in 0..300 {
+            let m = 1 + rng.below(7);
+            let tables = random_tables(&mut rng, m);
+            let exact = optimize(&tables);
+            let cached = optimize_cached(&mut cache, &tables);
+            match (exact, cached) {
+                (Some(a), Some(b)) => {
+                    assert!(
+                        (a.objective - b.objective).abs() <= objective_tolerance(m),
+                        "{} vs {} at m={m}",
+                        a.objective,
+                        b.objective
+                    );
+                    // The returned objective must be the exact score of
+                    // the returned plan.
+                    let sum: f64 = (0..m).map(|j| tables[j].get(b.slice_for(j))).sum();
+                    assert!((b.objective - sum).abs() < 1e-12);
+                }
+                (None, None) => {}
+                (a, b) => panic!("feasibility mismatch: {a:?} vs {b:?}"),
+            }
+        }
+        assert!(cache.misses > 0);
+    }
+
+    #[test]
+    fn hits_reproduce_misses_bit_for_bit() {
+        let mut rng = Rng::seed_from_u64(0x41A);
+        for _ in 0..100 {
+            let m = 1 + rng.below(7);
+            let tables = random_tables(&mut rng, m);
+            let mut cache = PlanCache::new(8);
+            let miss = optimize_cached(&mut cache, &tables);
+            let hit = optimize_cached(&mut cache, &tables);
+            assert_eq!((cache.hits, cache.misses), (1, 1));
+            match (miss, hit) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.config, b.config);
+                    assert_eq!(a.assignment, b.assignment);
+                    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+                }
+                (None, None) => {}
+                (a, b) => panic!("hit diverged from miss: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn permuted_callers_share_one_entry_and_get_remapped_plans() {
+        let mut rng = Rng::seed_from_u64(0x9E12);
+        for _ in 0..100 {
+            let m = 2 + rng.below(6);
+            let tables = random_tables(&mut rng, m);
+            let mut perm: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut perm);
+            let shuffled: Vec<SpeedupTable> = perm.iter().map(|&j| tables[j]).collect();
+            let mut cache = PlanCache::new(8);
+            let a = optimize_cached(&mut cache, &tables);
+            let b = optimize_cached(&mut cache, &shuffled);
+            assert_eq!(
+                (cache.hits, cache.misses),
+                (1, 1),
+                "permutations must share one canonical entry"
+            );
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.config, b.config);
+                    // Same physical plan, remapped: job `perm[i]` of the
+                    // original call is job `i` of the shuffled call.
+                    assert!((a.objective - b.objective).abs() < 1e-12);
+                    // Both assignments are valid permutations scored from
+                    // their caller's own tables.
+                    for (plan, t) in [(&a, &tables), (&b, &shuffled)] {
+                        let mut seen = vec![false; m];
+                        let mut sum = 0.0;
+                        for (j, &s) in plan.assignment.iter().enumerate() {
+                            assert!(!seen[s]);
+                            seen[s] = true;
+                            sum += t[j].get(plan.config.slices[s].kind);
+                        }
+                        assert!((plan.objective - sum).abs() < 1e-12);
+                    }
+                }
+                (None, None) => {}
+                (a, b) => panic!("permutation changed feasibility: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_zero_never_stores_and_always_misses() {
+        let mut cache = PlanCache::disabled();
+        let tables = random_tables(&mut Rng::seed_from_u64(3), 3);
+        for _ in 0..5 {
+            optimize_cached(&mut cache, &tables);
+        }
+        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses, 5);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn bounded_cache_evicts_and_stays_bounded() {
+        let mut rng = Rng::seed_from_u64(0xE71C7);
+        let cap = 8;
+        let mut cache = PlanCache::new(cap);
+        // Far more distinct mixes than capacity.
+        let mixes: Vec<Vec<SpeedupTable>> =
+            (0..200).map(|_| random_tables(&mut rng, 1 + rng.below(7))).collect();
+        for mix in &mixes {
+            optimize_cached(&mut cache, mix);
+        }
+        assert!(cache.evictions > 0, "overflow must evict");
+        // Bounded by cap + keys touched since the last sweep; with no
+        // hits between sweeps that is cap + 1.
+        assert!(cache.len() <= cap + 1, "cache grew to {}", cache.len());
+        // Eviction never changes answers: replay against fresh solves.
+        for mix in &mixes {
+            let replay = optimize_cached(&mut cache, mix);
+            let fresh = optimize_cached(&mut PlanCache::disabled(), mix);
+            match (replay, fresh) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.config, b.config);
+                    assert_eq!(a.assignment, b.assignment);
+                    assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+                }
+                (None, None) => {}
+                (a, b) => panic!("eviction changed a plan: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn cached_matches_bruteforce_on_quantized_grid() {
+        // On tables that sit exactly on the quantization grid, selection
+        // sees the same values the exact scan sees, so objectives match
+        // bruteforce to float tolerance (not just the quantization bound).
+        let mut rng = Rng::seed_from_u64(0x60D0);
+        let mut cache = PlanCache::default();
+        for _ in 0..100 {
+            let m = 1 + rng.below(5); // bruteforce is m! per config
+            let tables: Vec<SpeedupTable> = (0..m)
+                .map(|_| {
+                    SpeedupTable::from_fn(|k| {
+                        let v = (rng.f64() * k.sm_fraction()).min(1.0);
+                        f64::from(quantize(v)) / QUANT_SCALE
+                    })
+                })
+                .collect();
+            match (optimize_cached(&mut cache, &tables), optimize_bruteforce(&tables)) {
+                (Some(a), Some(b)) => {
+                    assert!(
+                        (a.objective - b.objective).abs() < 1e-9,
+                        "{} vs {}",
+                        a.objective,
+                        b.objective
+                    )
+                }
+                (None, None) => {}
+                (a, b) => panic!("feasibility mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+}

@@ -17,7 +17,14 @@
 //! bitmask DP (m ≤ 7 ⇒ ≤ 896 states), still well within the paper's 0.5 ms
 //! budget.
 
-use crate::mig::{MigConfig, SliceKind, ALL_CONFIGS};
+mod cache;
+
+pub use cache::{
+    objective_tolerance, optimize_cached, pruned_config_indices, PlanCache,
+    DEFAULT_PLAN_CACHE_CAP, QUANT_EPS, QUANT_SCALE,
+};
+
+use crate::mig::{enumerate_configs, MigConfig, SliceKind, ALL_CONFIGS};
 
 /// Per-job speedup table over the five slice kinds, indexed by
 /// [`slice_index`]. Values ∈ [0, 1]; 0 = the job cannot run there.
@@ -79,7 +86,18 @@ impl PartitionPlan {
 /// `require_all_feasible`: when true (MISO's default), a plan is rejected
 /// if any job would land on a slice where its speedup is 0 (OOM/QoS).
 pub fn optimize(tables: &[SpeedupTable]) -> Option<PartitionPlan> {
-    optimize_over(tables, ALL_CONFIGS.iter())
+    let m = tables.len();
+    if m == 0 || m > 7 {
+        return None;
+    }
+    // Scan only one representative config per distinct GPC multiset: the
+    // assignment DP's optimum depends solely on the slice-kind multiset,
+    // and the representative is the earliest config in enumeration order
+    // — exactly the one the full scan's strict-`>` tie-break would keep —
+    // so this returns the identical plan the 18-config scan returns
+    // (pinned by `matches_bruteforce` below and the cache proptests).
+    let configs = enumerate_configs();
+    optimize_over(tables, cache::pruned_config_indices(m).iter().map(|&i| &configs[i]))
 }
 
 /// As [`optimize`] but over a caller-supplied configuration universe —

@@ -8,7 +8,7 @@
 //! On every completion the GPU repartitions immediately from the stored
 //! tables (no new profiling) so no slice sits idle.
 
-use crate::optimizer::{optimize, SpeedupTable};
+use crate::optimizer::{optimize_cached, PlanCache, SpeedupTable};
 use crate::predictor::{mask_infeasible, Predictor};
 use crate::sim::{ClusterState, Policy};
 use crate::workload::JobId;
@@ -47,6 +47,11 @@ pub struct MisoPolicy {
     /// GPUs whose mix needs re-profiling once their current transition or
     /// profiling round finishes (phase change detected while busy).
     pending_reprofile: std::collections::HashSet<usize>,
+    /// Memoized Algorithm-1 solves, reused across repartitions. Per-policy
+    /// (and therefore per fleet node), never shared: node digests must not
+    /// depend on pool size. Hit/miss/evict deltas flow into
+    /// `telemetry::Stats` after every repartition.
+    plan_cache: PlanCache,
 }
 
 impl MisoPolicy {
@@ -59,7 +64,16 @@ impl MisoPolicy {
             phase_reprofiles: 0,
             group_fastpath: 0,
             pending_reprofile: std::collections::HashSet::new(),
+            plan_cache: PlanCache::default(),
         }
+    }
+
+    /// Replace the plan cache (capacity 0 disables memoization). Results
+    /// are bit-identical at any capacity — the cache only trades CPU for
+    /// memory — which `tests/proptests.rs` pins across all policies.
+    pub fn with_plan_cache(mut self, cache: PlanCache) -> MisoPolicy {
+        self.plan_cache = cache;
+        self
     }
 
     /// MISO with the paper-accuracy noisy predictor.
@@ -213,7 +227,22 @@ impl MisoPolicy {
                 }
             }
         }
-        let Some(plan) = optimize(&tables) else {
+        let (h0, m0, e0) =
+            (self.plan_cache.hits, self.plan_cache.misses, self.plan_cache.evictions);
+        let plan = optimize_cached(&mut self.plan_cache, &tables);
+        // Counters go through Stats only (never TraceEvents), so cached and
+        // uncached runs keep bit-identical telemetry fingerprints.
+        let (dh, dm, de) = (
+            self.plan_cache.hits - h0,
+            self.plan_cache.misses - m0,
+            self.plan_cache.evictions - e0,
+        );
+        st.telemetry.count(|s| {
+            s.plan_cache_hits += dh;
+            s.plan_cache_misses += dm;
+            s.plan_cache_evictions += de;
+        });
+        let Some(plan) = plan else {
             // With placement gating via `can_host` this cannot happen for
             // feasible mixes; fall back to keeping jobs where they are.
             debug_assert!(false, "no feasible partition for residents of GPU {gpu}");

@@ -371,6 +371,14 @@ fn controller_loop(
     let mut next_id: u64 = 0;
     let started = Instant::now();
     let mut next_purge_vt = JOBS_RETENTION_S;
+    // Tick-batched SUBMIT drain: submits queued within one tick share the
+    // same virtual arrival instant, so routing them as ONE burst through
+    // `submit_batch` takes one view snapshot per tick instead of one per
+    // request — the fleet's routing-epoch core ([`NodeView::note_submitted`]
+    // optimistic folds) instead of N full view rebuilds. Reads flush first
+    // (read-your-writes), so this is invisible to clients.
+    let mut pending_jobs: Vec<Job> = Vec::new();
+    let mut pending_replies: Vec<(u64, Sender<String>)> = Vec::new();
 
     while !stop.load(Ordering::SeqCst) {
         // Advance virtual time to scaled wall-clock.
@@ -388,50 +396,79 @@ fn controller_loop(
             next_purge_vt = plane.now() + JOBS_RETENTION_S / 4.0;
         }
 
-        // Serve all pending requests.
+        // Serve all pending requests: queue SUBMITs, flush the queued burst
+        // before any read so every reply reflects every prior submit.
         while let Ok(req) = rx.try_recv() {
             match req {
                 Request::Submit { family, batch, work_s, reply } => {
                     let spec = WorkloadSpec::new(family, batch.min(3), (0.0, 0.0));
-                    let job = Job::new(next_id, spec, plane.now(), work_s.max(1.0));
-                    let id = job.id;
+                    pending_jobs.push(Job::new(next_id, spec, plane.now(), work_s.max(1.0)));
+                    pending_replies.push((next_id, reply));
                     next_id += 1;
-                    let node = plane.submit(job);
-                    let _ = reply.send(
-                        Value::obj([
-                            ("ok", Value::Bool(true)),
-                            ("job", Value::num(id.0 as f64)),
-                            ("node", Value::num(node as f64)),
-                        ])
-                        .to_string(),
-                    );
                 }
-                Request::Status { reply } => {
-                    let _ = reply.send(status_json(plane.as_ref()).to_string());
-                }
-                Request::Jobs { reply } => {
-                    let _ = reply.send(jobs_json_all(plane.as_ref()).to_string());
-                }
-                Request::Metrics { reply } => {
-                    let _ = reply.send(metrics_json(plane.as_ref()).to_string());
-                }
-                Request::Fleet { reply } => {
-                    let _ = reply.send(fleet_json(plane.as_ref()).to_string());
-                }
-                Request::Trace { n, reply } => {
-                    // Clamp to the plane's total ring capacity: larger
-                    // requests cannot return more events, only force a
-                    // larger allocation.
-                    let capacity = plane.telemetry_capacity();
-                    let events = plane.telemetry_events(n.min(capacity));
-                    let _ = reply.send(trace_json(&events, capacity).to_string());
-                }
-                Request::Stats { reply } => {
-                    let _ = reply.send(plane.telemetry_stats().to_json().to_string());
+                read => {
+                    flush_submits(plane.as_mut(), &mut pending_jobs, &mut pending_replies);
+                    serve_read(plane.as_ref(), read);
                 }
             }
         }
+        flush_submits(plane.as_mut(), &mut pending_jobs, &mut pending_replies);
         std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Route every SUBMIT queued this tick as one same-instant burst through
+/// [`ControlPlane::submit_batch`] (one routing epoch, one view snapshot),
+/// then answer each submitter with its assigned id and node.
+fn flush_submits(
+    plane: &mut dyn ControlPlane,
+    jobs: &mut Vec<Job>,
+    replies: &mut Vec<(u64, Sender<String>)>,
+) {
+    if jobs.is_empty() {
+        return;
+    }
+    let nodes = plane.submit_batch(std::mem::take(jobs));
+    debug_assert_eq!(nodes.len(), replies.len());
+    for ((id, reply), node) in replies.drain(..).zip(nodes) {
+        let _ = reply.send(
+            Value::obj([
+                ("ok", Value::Bool(true)),
+                ("job", Value::num(id as f64)),
+                ("node", Value::num(node as f64)),
+            ])
+            .to_string(),
+        );
+    }
+}
+
+/// Serve one read-only protocol request. SUBMITs never reach here — the
+/// controller loop queues them for the tick's batched drain.
+fn serve_read(plane: &dyn ControlPlane, req: Request) {
+    match req {
+        Request::Submit { .. } => debug_assert!(false, "submits are batched by the caller"),
+        Request::Status { reply } => {
+            let _ = reply.send(status_json(plane).to_string());
+        }
+        Request::Jobs { reply } => {
+            let _ = reply.send(jobs_json_all(plane).to_string());
+        }
+        Request::Metrics { reply } => {
+            let _ = reply.send(metrics_json(plane).to_string());
+        }
+        Request::Fleet { reply } => {
+            let _ = reply.send(fleet_json(plane).to_string());
+        }
+        Request::Trace { n, reply } => {
+            // Clamp to the plane's total ring capacity: larger requests
+            // cannot return more events, only force a larger allocation.
+            let capacity = plane.telemetry_capacity();
+            let events = plane.telemetry_events(n.min(capacity));
+            let _ = reply.send(trace_json(&events, capacity).to_string());
+        }
+        Request::Stats { reply } => {
+            let _ = reply.send(plane.telemetry_stats().to_json().to_string());
+        }
     }
 }
 
@@ -675,6 +712,37 @@ mod tests {
             out.push(resp.trim().to_string());
         }
         out
+    }
+
+    #[test]
+    fn flush_submits_routes_one_burst_and_replies_in_order() {
+        let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+        let mut plane: Box<dyn ControlPlane> =
+            Box::new(SingleNode::new(cfg, GATEWAY_POLICY, GATEWAY_SEED, TraceMode::Off).unwrap());
+        // An empty flush is a no-op.
+        flush_submits(plane.as_mut(), &mut Vec::new(), &mut Vec::new());
+        assert_eq!(plane.live_jobs(), 0);
+
+        let mut jobs = Vec::new();
+        let mut replies = Vec::new();
+        let mut rxs = Vec::new();
+        for id in 0..3u64 {
+            let spec = WorkloadSpec::new(crate::workload::ALL_FAMILIES[id as usize], 0, (0.0, 0.0));
+            jobs.push(Job::new(id, spec, plane.now(), 30.0));
+            let (tx, rx) = channel();
+            replies.push((id, tx));
+            rxs.push(rx);
+        }
+        flush_submits(plane.as_mut(), &mut jobs, &mut replies);
+        assert!(jobs.is_empty() && replies.is_empty());
+        assert_eq!(plane.live_jobs(), 3, "the whole burst must land in one flush");
+        for (id, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+            let v = crate::util::json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+            assert_eq!(v.req_f64("job").unwrap(), id as f64, "replies must keep submit order");
+            assert_eq!(v.req_f64("node").unwrap(), 0.0);
+        }
     }
 
     #[test]

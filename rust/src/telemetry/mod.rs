@@ -369,6 +369,12 @@ pub struct Stats {
     /// Worker-pool losses absorbed (spawn failure or worker death) — each
     /// one flips the fleet into sequential degraded mode.
     pub pool_failures: u64,
+    /// Partition-plan cache hits ([`crate::optimizer::PlanCache`]).
+    pub plan_cache_hits: u64,
+    /// Partition-plan cache misses (full pruned-scan solves).
+    pub plan_cache_misses: u64,
+    /// Partition-plan cache entries dropped by generation sweeps.
+    pub plan_cache_evictions: u64,
     pub jct_s: LogHistogram,
     pub queue_wait_s: LogHistogram,
     pub repartition_downtime_s: LogHistogram,
@@ -424,6 +430,9 @@ impl Stats {
         self.router_fallbacks += other.router_fallbacks;
         self.epochs += other.epochs;
         self.pool_failures += other.pool_failures;
+        self.plan_cache_hits += other.plan_cache_hits;
+        self.plan_cache_misses += other.plan_cache_misses;
+        self.plan_cache_evictions += other.plan_cache_evictions;
         self.jct_s.merge(&other.jct_s);
         self.queue_wait_s.merge(&other.queue_wait_s);
         self.repartition_downtime_s.merge(&other.repartition_downtime_s);
@@ -445,6 +454,9 @@ impl Stats {
             ("router_fallbacks", Value::num(self.router_fallbacks as f64)),
             ("epochs", Value::num(self.epochs as f64)),
             ("pool_failures", Value::num(self.pool_failures as f64)),
+            ("plan_cache_hits", Value::num(self.plan_cache_hits as f64)),
+            ("plan_cache_misses", Value::num(self.plan_cache_misses as f64)),
+            ("plan_cache_evictions", Value::num(self.plan_cache_evictions as f64)),
             (
                 "histograms",
                 Value::obj([
@@ -461,7 +473,7 @@ impl Stats {
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         out.push_str("counters:\n");
-        let counters: [(&str, u64); 13] = [
+        let counters: [(&str, u64); 16] = [
             ("arrivals", self.arrivals),
             ("placements", self.placements),
             ("completions", self.completions),
@@ -475,6 +487,9 @@ impl Stats {
             ("router fallbacks", self.router_fallbacks),
             ("pool epochs", self.epochs),
             ("pool failures", self.pool_failures),
+            ("plan cache hits", self.plan_cache_hits),
+            ("plan cache misses", self.plan_cache_misses),
+            ("plan cache evictions", self.plan_cache_evictions),
         ];
         for (name, v) in counters {
             out.push_str(&format!("  {name:<24} {v}\n"));

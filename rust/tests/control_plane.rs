@@ -140,6 +140,76 @@ fn one_node_fleet_and_bare_engine_agree_through_the_trait() {
     assert_eq!(fm.digest(), sm.digest());
 }
 
+/// Drive a plane through a distinct-instant request stream either one
+/// `submit` per request (the pre-batching gateway) or one single-job
+/// `submit_batch` per request (what the tick-batched drain degenerates to
+/// when requests never share a tick).
+fn drive_submits(plane: &mut dyn ControlPlane, trace: &[Job], batched: bool) {
+    let mut jobs = trace.to_vec();
+    jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+    for job in jobs {
+        plane.advance_to(job.arrival);
+        if batched {
+            plane.submit_batch(vec![job]);
+        } else {
+            plane.submit(job);
+        }
+    }
+    plane.drain();
+}
+
+#[test]
+fn single_submit_and_batched_drain_gateways_agree() {
+    // The tick-batched gateway drain regression: routing requests through
+    // `submit_batch` instead of per-request `submit` must be invisible for
+    // distinct-instant request streams — identical metrics digests and
+    // telemetry fingerprint streams on BOTH deployment shapes.
+    let trace = poisson_trace(36, 10.0, 77);
+
+    let scfg = SystemConfig { num_gpus: 3, ..SystemConfig::testbed() };
+    let mut single: Box<dyn ControlPlane> =
+        Box::new(SingleNode::new(scfg.clone(), "miso", 7, TraceMode::Full).unwrap());
+    let mut single_batched: Box<dyn ControlPlane> =
+        Box::new(SingleNode::new(scfg, "miso", 7, TraceMode::Full).unwrap());
+
+    let fcfg = FleetConfig {
+        nodes: 3,
+        gpus_per_node: 2,
+        threads: 1,
+        node_cfg: SystemConfig::testbed(),
+        telemetry: TraceMode::Full,
+        ..Default::default()
+    };
+    let mut fleet: Box<dyn ControlPlane> =
+        Box::new(FleetPlane::new(&fcfg, "miso", 77, "frag-aware").unwrap());
+    let mut fleet_batched: Box<dyn ControlPlane> =
+        Box::new(FleetPlane::new(&fcfg, "miso", 77, "frag-aware").unwrap());
+
+    for (label, a, b) in [
+        ("single-node", &mut single, &mut single_batched),
+        ("fleet", &mut fleet, &mut fleet_batched),
+    ] {
+        drive_submits(a.as_mut(), &trace, false);
+        drive_submits(b.as_mut(), &trace, true);
+        let fa: Vec<String> =
+            a.telemetry_events(a.telemetry_capacity()).iter().map(|e| e.fingerprint()).collect();
+        let fb: Vec<String> =
+            b.telemetry_events(b.telemetry_capacity()).iter().map(|e| e.fingerprint()).collect();
+        assert!(!fa.is_empty(), "{label}: no telemetry recorded");
+        assert_eq!(fa, fb, "{label}: batched drain perturbed the trace stream");
+    }
+    assert_eq!(
+        single.finish().digest(),
+        single_batched.finish().digest(),
+        "single-node: batched drain changed the run"
+    );
+    assert_eq!(
+        fleet.finish().digest(),
+        fleet_batched.finish().digest(),
+        "fleet: batched drain changed the run"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Typed startup errors (no panicking controllers)
 // ---------------------------------------------------------------------------

@@ -381,6 +381,60 @@ fn telemetry_modes_and_pool_sizes_leave_digests_and_traces_invariant() {
 }
 
 #[test]
+fn plan_cache_counters_surface_in_merged_stats_without_perturbing_digests() {
+    // Each FleetNode owns its policy and therefore its own PlanCache, so the
+    // memoized planner must be invisible to the fleet's deterministic
+    // surfaces: digests and trace fingerprints are identical at every pool
+    // size, while the merged Stats expose the per-node cache counters.
+    // hits + misses is the total number of repartition solves, which is a
+    // deterministic property of the run and thus pool-size-independent.
+    use miso::telemetry::TraceMode;
+
+    let trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 80,
+        mean_interarrival_s: 7.0,
+        max_duration_s: 1000.0,
+        min_duration_s: 60.0,
+        seed: 33,
+        ..Default::default()
+    })
+    .generate();
+    let run = |threads: usize| {
+        let cfg = FleetConfig {
+            nodes: 5,
+            gpus_per_node: 2,
+            threads,
+            node_cfg: SystemConfig::testbed(),
+            telemetry: TraceMode::Counters,
+            ..Default::default()
+        };
+        let mut router = FragAware;
+        miso::fleet::run_fleet_traced(&cfg, "miso", 13, &mut router, &trace).unwrap()
+    };
+
+    let (m1, _, s1) = run(1);
+    check_conservation(&m1, trace.len());
+    assert!(
+        s1.plan_cache_misses > 0,
+        "a miso fleet run must solve at least one partition plan"
+    );
+    for threads in [2usize, 8] {
+        let (m, _, s) = run(threads);
+        check_conservation(&m, trace.len());
+        assert_eq!(
+            m.digest(),
+            m1.digest(),
+            "plan cache perturbed the fleet digest at {threads} threads"
+        );
+        assert_eq!(
+            (s.plan_cache_hits, s.plan_cache_misses, s.plan_cache_evictions),
+            (s1.plan_cache_hits, s1.plan_cache_misses, s1.plan_cache_evictions),
+            "plan cache counters must be pool-size-independent"
+        );
+    }
+}
+
+#[test]
 fn two_run_fleet_calls_in_one_process_agree() {
     // Pool shutdown/re-entry: each run_fleet spawns and tears down its own
     // worker pool; a second run in the same process must come up clean and
