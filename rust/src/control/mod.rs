@@ -56,6 +56,13 @@ pub enum ControlError {
     Policy(String),
     /// Unknown fleet router.
     Router(String),
+    /// The plane cannot accept work right now: every fleet node is
+    /// quarantined or evicted. Unlike the construction errors above this
+    /// is a *runtime* refusal — the satellite fix for the former
+    /// infinite wrap-around scan in `FleetEngine::live_node`. The
+    /// gateway surfaces it as a typed error reply; `replay` aborts with
+    /// it instead of spinning.
+    Unavailable(String),
 }
 
 impl std::fmt::Display for ControlError {
@@ -64,6 +71,7 @@ impl std::fmt::Display for ControlError {
             ControlError::InvalidConfig(msg) => write!(f, "invalid control-plane config: {msg}"),
             ControlError::Policy(msg) => write!(f, "policy construction failed: {msg}"),
             ControlError::Router(msg) => write!(f, "router construction failed: {msg}"),
+            ControlError::Unavailable(msg) => write!(f, "control plane unavailable: {msg}"),
         }
     }
 }
@@ -108,6 +116,9 @@ pub struct PlaneHealth {
     pub degraded: bool,
     /// Nodes quarantined after panicking during degraded-mode stepping.
     pub failed_nodes: usize,
+    /// Every node has failed: the plane refuses new work
+    /// ([`ControlError::Unavailable`]) until a quarantined node rejoins.
+    pub unhealthy: bool,
 }
 
 /// One MISO cluster you can submit to — single node or federation. The
@@ -130,16 +141,34 @@ pub trait ControlPlane: Send {
     fn drain(&mut self);
 
     /// Place and submit one job; returns the chosen node id (always 0 on
-    /// a single node).
-    fn submit(&mut self, job: Job) -> usize;
+    /// a single node), or [`ControlError::Unavailable`] when the plane
+    /// has no live node to place on.
+    fn submit(&mut self, job: Job) -> Result<usize, ControlError>;
 
     /// Submit a same-instant burst as one routing epoch: a fleet takes
     /// one view snapshot and folds optimistic deltas per submit
     /// ([`NodeView::note_submitted`]); the default submits one at a
-    /// time. Returns the chosen node per job, in submission order.
-    fn submit_batch(&mut self, jobs: Vec<Job>) -> Vec<usize> {
+    /// time. Returns the chosen node per job, in submission order; an
+    /// unavailable plane rejects the whole burst (no partial submission
+    /// on the fleet path).
+    fn submit_batch(&mut self, jobs: Vec<Job>) -> Result<Vec<usize>, ControlError> {
         jobs.into_iter().map(|job| self.submit(job)).collect()
     }
+
+    /// Inject one chaos fault ([`crate::fault::FaultKind`]) at the
+    /// current virtual time. Returns whether the fault was actually
+    /// applied (e.g. a `DropTable` on a policy that stores no tables, or
+    /// a node fault aimed at an already-failed node, reports `false`).
+    /// Planes that support nothing simply refuse every fault — the
+    /// default — so the chaos wrapper composes over any impl.
+    fn inject_fault(&mut self, _kind: &crate::fault::FaultKind) -> bool {
+        false
+    }
+
+    /// Count `n` gateway-shed submissions (bounded submit queue overflow)
+    /// into the plane's telemetry, so `STATS` surfaces `submits_shed`
+    /// next to the engine counters. No-op by default.
+    fn record_gateway_shed(&mut self, _n: u64) {}
 
     /// Drop completed jobs older than `retention_s` virtual seconds from
     /// the job tables (metrics records are kept); returns how many were
@@ -288,10 +317,29 @@ impl ControlPlane for SingleNode {
         self.engine.run_until_idle(self.policy.as_mut());
     }
 
-    fn submit(&mut self, job: Job) -> usize {
+    fn submit(&mut self, job: Job) -> Result<usize, ControlError> {
         self.invalidate_views();
         self.engine.submit(self.policy.as_mut(), job);
-        0
+        Ok(0)
+    }
+
+    fn inject_fault(&mut self, kind: &crate::fault::FaultKind) -> bool {
+        // A single node has no pool, no peers, and no quarantine path —
+        // only the profiling-table fault applies.
+        let applied = match kind {
+            crate::fault::FaultKind::DropTable { .. } => {
+                self.policy.inject_table_fault(&mut self.engine.st)
+            }
+            _ => false,
+        };
+        if applied {
+            self.engine.st.telemetry.count(|s| s.faults_injected += 1);
+        }
+        applied
+    }
+
+    fn record_gateway_shed(&mut self, n: u64) {
+        self.engine.st.telemetry.count(|s| s.submits_shed += n);
     }
 
     fn purge_completed(&mut self, retention_s: f64) -> usize {
@@ -386,17 +434,30 @@ impl ControlPlane for FleetPlane {
         // counts stay identical between replay paths (per-node advances
         // already no-op when `t` is not ahead).
         self.fleet.advance_all_to(t);
+        // Re-route any jobs a quarantine orphaned during the advance. An
+        // `Unavailable` error (all nodes failed) keeps them pending — a
+        // node may yet rejoin on a later advance.
+        let _ = self.fleet.flush_orphans(self.router.as_mut(), &mut self.views);
     }
 
     fn drain(&mut self) {
         self.fleet.drain();
+        // A drain that quarantined a node leaves its queued jobs
+        // orphaned; keep re-routing and draining until either every
+        // orphan landed somewhere or no live node remains to take them.
+        while self.fleet.has_orphans() {
+            if self.fleet.flush_orphans(self.router.as_mut(), &mut self.views).is_err() {
+                break;
+            }
+            self.fleet.drain();
+        }
     }
 
-    fn submit(&mut self, job: Job) -> usize {
+    fn submit(&mut self, job: Job) -> Result<usize, ControlError> {
         self.fleet.route_and_submit(self.router.as_mut(), job)
     }
 
-    fn submit_batch(&mut self, jobs: Vec<Job>) -> Vec<usize> {
+    fn submit_batch(&mut self, jobs: Vec<Job>) -> Result<Vec<usize>, ControlError> {
         if self.batch_arrivals {
             self.fleet.route_and_submit_burst(self.router.as_mut(), jobs, &mut self.views)
         } else {
@@ -404,6 +465,24 @@ impl ControlPlane for FleetPlane {
                 .map(|job| self.fleet.route_and_submit(self.router.as_mut(), job))
                 .collect()
         }
+    }
+
+    fn inject_fault(&mut self, kind: &crate::fault::FaultKind) -> bool {
+        use crate::fault::FaultKind;
+        let applied = match *kind {
+            FaultKind::KillPool => self.fleet.chaos_kill_pool(),
+            FaultKind::PanicNode { node } => self.fleet.chaos_panic_node(node),
+            FaultKind::StallNode { node, millis } => self.fleet.chaos_stall_node(node, millis),
+            FaultKind::DropTable { node } => self.fleet.chaos_drop_table(node),
+        };
+        if applied {
+            self.fleet.telemetry.count(|s| s.faults_injected += 1);
+        }
+        applied
+    }
+
+    fn record_gateway_shed(&mut self, n: u64) {
+        self.fleet.telemetry.count(|s| s.submits_shed += n);
     }
 
     fn purge_completed(&mut self, retention_s: f64) -> usize {
@@ -418,6 +497,7 @@ impl ControlPlane for FleetPlane {
         PlaneHealth {
             degraded: self.fleet.is_degraded(),
             failed_nodes: self.fleet.failed_nodes(),
+            unhealthy: self.fleet.all_nodes_failed(),
         }
     }
 
@@ -449,8 +529,9 @@ impl ControlPlane for FleetPlane {
 /// the generator emits (strictly increasing arrivals) it drives the
 /// underlying engines through the identical call sequence, so metrics
 /// digests are bit-identical to the direct runners (pinned by
-/// `tests/control_plane.rs`).
-pub fn replay(plane: &mut dyn ControlPlane, trace: &[Job]) {
+/// `tests/control_plane.rs`). Aborts with [`ControlError::Unavailable`]
+/// if the plane loses every node mid-replay (chaos runs).
+pub fn replay(plane: &mut dyn ControlPlane, trace: &[Job]) -> Result<(), ControlError> {
     let mut arrivals: Vec<Job> = trace.to_vec();
     arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
     let mut burst: Vec<Job> = Vec::new();
@@ -464,9 +545,10 @@ pub fn replay(plane: &mut dyn ControlPlane, trace: &[Job]) {
             }
         }
         plane.advance_to(epoch_t);
-        plane.submit_batch(std::mem::take(&mut burst));
+        plane.submit_batch(std::mem::take(&mut burst))?;
     }
     plane.drain();
+    Ok(())
 }
 
 #[cfg(test)]
@@ -517,7 +599,7 @@ mod tests {
             ..Default::default()
         })
         .generate();
-        replay(&mut plane, &trace);
+        replay(&mut plane, &trace).unwrap();
         let m = plane.metrics();
         assert_eq!(m.nodes, 1);
         assert_eq!(m.completed, 5);
@@ -547,7 +629,7 @@ mod tests {
         let mut it = trace.into_iter();
         let job = it.next().unwrap();
         plane.advance_to(job.arrival);
-        plane.submit(job);
+        plane.submit(job).unwrap();
         let v = plane.node_views();
         assert_eq!(v[0].live_jobs, 1, "view served after submit must reflect the submit");
         // The cached answer must match a fresh default-path materialization.
@@ -556,7 +638,7 @@ mod tests {
         assert_eq!(format!("{v:?}"), format!("{fresh:?}"));
         let job2 = it.next().unwrap();
         plane.advance_to(job2.arrival);
-        plane.submit_batch(vec![job2]);
+        plane.submit_batch(vec![job2]).unwrap();
         assert_eq!(plane.node_views()[0].live_jobs, 2);
         plane.drain();
         assert_eq!(plane.node_views()[0].live_jobs, 0);
@@ -580,7 +662,7 @@ mod tests {
             ..Default::default()
         })
         .generate();
-        replay(&mut plane, &trace);
+        replay(&mut plane, &trace).unwrap();
         assert_eq!(plane.metrics().completed, 6);
         assert_eq!(plane.telemetry_stats().router_decisions, 6);
         assert_eq!(plane.node_snapshots().len(), 3);

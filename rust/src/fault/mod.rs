@@ -1,0 +1,403 @@
+//! Deterministic fault injection: a chaos plan plus a [`ControlPlane`]
+//! wrapper that fires it.
+//!
+//! MISO's robustness story (ROADMAP PR-7) needs failures that are
+//! *reproducible*: a flaky worker thread that dies at a different virtual
+//! instant each run cannot pin a regression. This module keeps all
+//! nondeterminism out of the failure path by construction:
+//!
+//! * [`FaultPlan`] is a schedule of [`FaultSpec`]s keyed on **virtual
+//!   time** — either written explicitly (`FaultPlan::parse`, the CLI's
+//!   `--chaos` grammar) or drawn from the repo's own splitmix64/xorshift
+//!   [`crate::util::Rng`] (`FaultPlan::seeded`), so the same seed yields
+//!   the same faults bit-for-bit on every run and every machine.
+//! * [`ChaosPlane`] wraps **any** [`ControlPlane`] and fires due specs at
+//!   the trait boundary: before advancing past a spec's instant it
+//!   advances the inner plane exactly to that instant and calls
+//!   [`ControlPlane::inject_fault`]. Production code paths stay
+//!   untouched — the wrapper drives only public trait methods, so
+//!   `control::replay`, the parity tests, and both live gateways run
+//!   under injected faults unchanged.
+//! * An **empty plan is a pure pass-through**: every method delegates
+//!   verbatim, so metrics digests and telemetry fingerprints are
+//!   bit-identical to the unwrapped plane (pinned by
+//!   `tests/proptests.rs`).
+//!
+//! The faults themselves arm *existing* recovery paths (worker-pool
+//! death → degraded mode, node panic → quarantine/restart/rejoin, stall
+//! → epoch deadline, dropped profiling table → policy re-profile); see
+//! `DESIGN.md` §8 for the failure model.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::control::{ControlError, ControlPlane, NodeSnapshot, PlaneHealth};
+use crate::fleet::NodeView;
+use crate::metrics::FleetMetrics;
+use crate::telemetry::{Stats, TraceEvent};
+use crate::util::Rng;
+use crate::workload::Job;
+
+/// One injectable failure. Every kind maps onto a production recovery
+/// path that exists independently of chaos testing; injection only
+/// decides *when* it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Kill one fleet worker-pool thread mid-epoch: the next epoch
+    /// barrier sees a dead worker and the fleet enters degraded
+    /// sequential stepping (digest-neutral by the pooled≡degraded pin).
+    KillPool,
+    /// Panic `node` on its next step: guarded stepping converts the
+    /// unwind into quarantine, orphaned queued jobs re-route, and the
+    /// node rejoins after a deterministic virtual-time backoff.
+    PanicNode { node: usize },
+    /// Stall `node` for `millis` of wall-clock on its next step: under a
+    /// pool this trips the per-epoch deadline
+    /// ([`crate::fleet::FleetConfig::epoch_deadline_s`]); without one it
+    /// is merely slow. Virtual time and digests are unaffected.
+    StallNode { node: usize, millis: u64 },
+    /// Drop one stored MPS speedup table on `node`'s policy: the next
+    /// repartition hits the missing-table branch and falls back to
+    /// re-profiling (the `policy_reprofiles` counter).
+    DropTable { node: usize },
+}
+
+impl FaultKind {
+    /// Stable lower-case label for logs and status surfaces.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::KillPool => "kill-pool",
+            FaultKind::PanicNode { .. } => "panic-node",
+            FaultKind::StallNode { .. } => "stall-node",
+            FaultKind::DropTable { .. } => "drop-table",
+        }
+    }
+}
+
+/// A fault scheduled at a virtual instant (seconds on the plane clock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub at_s: f64,
+    pub kind: FaultKind,
+}
+
+/// An ordered schedule of faults. Construction sorts by instant (stable,
+/// so same-instant specs fire in authoring order); [`ChaosPlane`]
+/// consumes specs front to back as virtual time passes them.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    cursor: usize,
+}
+
+impl FaultPlan {
+    /// The no-fault plan: wrapping with it is a pure pass-through.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn new(mut specs: Vec<FaultSpec>) -> FaultPlan {
+        specs.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultPlan { specs, cursor: 0 }
+    }
+
+    /// Draw `count` faults uniformly over `[0, horizon_s)` from the
+    /// repo's deterministic RNG. Node-targeted kinds aim at a uniform
+    /// node in `0..nodes`. Same arguments → same plan, bit-for-bit.
+    pub fn seeded(seed: u64, nodes: usize, horizon_s: f64, count: usize) -> FaultPlan {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC4A0_5BAD);
+        let nodes = nodes.max(1);
+        let horizon = if horizon_s.is_finite() && horizon_s > 0.0 { horizon_s } else { 3600.0 };
+        let mut specs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let at_s = rng.range(0.0, horizon);
+            let node = rng.below(nodes);
+            let kind = match rng.below(4) {
+                0 => FaultKind::KillPool,
+                1 => FaultKind::PanicNode { node },
+                2 => FaultKind::StallNode { node, millis: 1 + rng.below(5) as u64 },
+                _ => FaultKind::DropTable { node },
+            };
+            specs.push(FaultSpec { at_s, kind });
+        }
+        FaultPlan::new(specs)
+    }
+
+    /// Parse the CLI `--chaos` grammar: either `seed:<u64>[:<count>]`
+    /// (a [`FaultPlan::seeded`] plan over a 3600 s horizon, default 4
+    /// faults) or a semicolon-separated list of explicit specs:
+    ///
+    /// ```text
+    /// kill@<t> ; panic@<t>:<node> ; stall@<t>:<node>:<millis> ; droptable@<t>:<node>
+    /// ```
+    ///
+    /// `nodes` bounds node-targeted specs so a typo fails at parse time,
+    /// not as a silently refused injection.
+    pub fn parse(src: &str, nodes: usize) -> anyhow::Result<FaultPlan> {
+        let src = src.trim();
+        if let Some(rest) = src.strip_prefix("seed:") {
+            let mut it = rest.split(':');
+            let seed: u64 = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--chaos seed: missing value"))?
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--chaos seed: {e}"))?;
+            let count: usize = match it.next() {
+                Some(c) => c.trim().parse().map_err(|e| anyhow::anyhow!("--chaos count: {e}"))?,
+                None => 4,
+            };
+            if it.next().is_some() {
+                anyhow::bail!("--chaos seed form is seed:<u64>[:<count>]");
+            }
+            return Ok(FaultPlan::seeded(seed, nodes, 3600.0, count));
+        }
+        let mut specs = Vec::new();
+        for entry in src.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind_s, args) = entry
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("chaos spec `{entry}`: expected kind@t[...]"))?;
+            let mut parts = args.split(':');
+            let at_s: f64 = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("chaos spec `{entry}`: missing instant"))?
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("chaos spec `{entry}`: bad instant: {e}"))?;
+            if !at_s.is_finite() || at_s < 0.0 {
+                anyhow::bail!("chaos spec `{entry}`: instant must be finite and >= 0");
+            }
+            let mut node_arg = |what: &str| -> anyhow::Result<usize> {
+                let node: usize = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("chaos spec `{entry}`: missing {what}"))?
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("chaos spec `{entry}`: bad {what}: {e}"))?;
+                if node >= nodes.max(1) {
+                    anyhow::bail!("chaos spec `{entry}`: node {node} out of range (fleet has {nodes})");
+                }
+                Ok(node)
+            };
+            let kind = match kind_s.trim() {
+                "kill" => FaultKind::KillPool,
+                "panic" => FaultKind::PanicNode { node: node_arg("node")? },
+                "droptable" => FaultKind::DropTable { node: node_arg("node")? },
+                "stall" => {
+                    let node = node_arg("node")?;
+                    let millis: u64 = parts
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("chaos spec `{entry}`: missing millis"))?
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("chaos spec `{entry}`: bad millis: {e}"))?;
+                    FaultKind::StallNode { node, millis }
+                }
+                other => anyhow::bail!(
+                    "chaos spec `{entry}`: unknown kind `{other}` (kill|panic|stall|droptable)"
+                ),
+            };
+            if parts.next().is_some() {
+                anyhow::bail!("chaos spec `{entry}`: trailing arguments");
+            }
+            specs.push(FaultSpec { at_s, kind });
+        }
+        Ok(FaultPlan::new(specs))
+    }
+
+    /// Specs not yet fired.
+    pub fn remaining(&self) -> usize {
+        self.specs.len() - self.cursor
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn peek(&self) -> Option<&FaultSpec> {
+        self.specs.get(self.cursor)
+    }
+
+    fn pop(&mut self) -> Option<FaultSpec> {
+        let spec = self.specs.get(self.cursor).copied();
+        if spec.is_some() {
+            self.cursor += 1;
+        }
+        spec
+    }
+}
+
+/// Any [`ControlPlane`] under an injected-fault schedule. Time-keyed
+/// specs fire inside [`ControlPlane::advance_to`]/[`ControlPlane::drain`]:
+/// the wrapper advances the inner plane exactly to each due spec's
+/// instant, injects, then continues — so a fault lands at the same
+/// virtual instant regardless of the caller's epoch granularity. All
+/// other methods delegate verbatim; with an empty plan *every* method
+/// delegates verbatim, making the wrapper digest- and
+/// fingerprint-invisible (pinned by `tests/proptests.rs`).
+pub struct ChaosPlane {
+    inner: Box<dyn ControlPlane>,
+    plan: FaultPlan,
+}
+
+impl ChaosPlane {
+    pub fn new(inner: Box<dyn ControlPlane>, plan: FaultPlan) -> ChaosPlane {
+        ChaosPlane { inner, plan }
+    }
+
+    /// Faults scheduled but not yet fired.
+    pub fn pending_faults(&self) -> usize {
+        self.plan.remaining()
+    }
+
+    /// Fire every spec due at or before `t` (advancing the inner plane
+    /// to each spec's instant first, never past `t`). A refused
+    /// injection (dead target, no pool) is dropped, not retried: the
+    /// plan is a schedule, not a guarantee.
+    fn fire_due(&mut self, t: f64) {
+        while self.plan.peek().is_some_and(|spec| spec.at_s <= t) {
+            let Some(spec) = self.plan.pop() else { break };
+            if spec.at_s > self.inner.now() {
+                self.inner.advance_to(spec.at_s);
+            }
+            let _ = self.inner.inject_fault(&spec.kind);
+        }
+    }
+}
+
+impl ControlPlane for ChaosPlane {
+    fn router_name(&self) -> &str {
+        self.inner.router_name()
+    }
+
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    fn advance_to(&mut self, t: f64) {
+        self.fire_due(t);
+        self.inner.advance_to(t);
+    }
+
+    fn drain(&mut self) {
+        // A terminal drain owes the plan its tail: fire everything left
+        // at its scheduled instant, then let the inner plane run dry.
+        self.fire_due(f64::INFINITY);
+        self.inner.drain();
+    }
+
+    fn submit(&mut self, job: Job) -> Result<usize, ControlError> {
+        self.inner.submit(job)
+    }
+
+    fn submit_batch(&mut self, jobs: Vec<Job>) -> Result<Vec<usize>, ControlError> {
+        self.inner.submit_batch(jobs)
+    }
+
+    fn inject_fault(&mut self, kind: &FaultKind) -> bool {
+        self.inner.inject_fault(kind)
+    }
+
+    fn record_gateway_shed(&mut self, n: u64) {
+        self.inner.record_gateway_shed(n);
+    }
+
+    fn purge_completed(&mut self, retention_s: f64) -> usize {
+        self.inner.purge_completed(retention_s)
+    }
+
+    fn node_snapshots(&self) -> Vec<NodeSnapshot<'_>> {
+        self.inner.node_snapshots()
+    }
+
+    fn health(&self) -> PlaneHealth {
+        self.inner.health()
+    }
+
+    fn telemetry_events(&self, n: usize) -> Vec<TraceEvent> {
+        self.inner.telemetry_events(n)
+    }
+
+    fn telemetry_stats(&self) -> Stats {
+        self.inner.telemetry_stats()
+    }
+
+    fn telemetry_capacity(&self) -> usize {
+        self.inner.telemetry_capacity()
+    }
+
+    fn finish(self: Box<Self>) -> FleetMetrics {
+        self.inner.finish()
+    }
+
+    fn node_views(&self) -> Vec<NodeView> {
+        // Delegate so a caching inner impl (SingleNode) keeps its cache.
+        self.inner.node_views()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_sorts_and_pops_in_time_order() {
+        let mut plan = FaultPlan::new(vec![
+            FaultSpec { at_s: 30.0, kind: FaultKind::KillPool },
+            FaultSpec { at_s: 10.0, kind: FaultKind::PanicNode { node: 1 } },
+            FaultSpec { at_s: 20.0, kind: FaultKind::DropTable { node: 0 } },
+        ]);
+        assert_eq!(plan.remaining(), 3);
+        assert_eq!(plan.pop().unwrap().at_s, 10.0);
+        assert_eq!(plan.pop().unwrap().at_s, 20.0);
+        assert_eq!(plan.pop().unwrap().at_s, 30.0);
+        assert!(plan.is_empty());
+        assert!(plan.pop().is_none());
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_in_bounds() {
+        let a = FaultPlan::seeded(42, 3, 100.0, 8);
+        let b = FaultPlan::seeded(42, 3, 100.0, 8);
+        assert_eq!(a.specs, b.specs);
+        assert_eq!(a.remaining(), 8);
+        for spec in &a.specs {
+            assert!(spec.at_s >= 0.0 && spec.at_s < 100.0);
+            match spec.kind {
+                FaultKind::PanicNode { node }
+                | FaultKind::StallNode { node, .. }
+                | FaultKind::DropTable { node } => assert!(node < 3),
+                FaultKind::KillPool => {}
+            }
+        }
+        let c = FaultPlan::seeded(43, 3, 100.0, 8);
+        assert_ne!(a.specs, c.specs, "different seeds should differ");
+    }
+
+    #[test]
+    fn parse_accepts_explicit_specs_and_seed_form() {
+        let plan = FaultPlan::parse("panic@10:1; kill@5 ; stall@20:0:50;droptable@30:1", 2).unwrap();
+        assert_eq!(plan.specs.len(), 4);
+        // Sorted by instant: kill@5 first.
+        assert_eq!(plan.specs[0], FaultSpec { at_s: 5.0, kind: FaultKind::KillPool });
+        assert_eq!(plan.specs[1], FaultSpec { at_s: 10.0, kind: FaultKind::PanicNode { node: 1 } });
+        assert_eq!(
+            plan.specs[2],
+            FaultSpec { at_s: 20.0, kind: FaultKind::StallNode { node: 0, millis: 50 } }
+        );
+        assert_eq!(plan.specs[3], FaultSpec { at_s: 30.0, kind: FaultKind::DropTable { node: 1 } });
+
+        let seeded = FaultPlan::parse("seed:7:3", 4).unwrap();
+        assert_eq!(seeded.remaining(), 3);
+        assert_eq!(seeded.specs, FaultPlan::seeded(7, 4, 3600.0, 3).specs);
+
+        assert!(FaultPlan::parse("panic@10:9", 2).is_err(), "node out of range");
+        assert!(FaultPlan::parse("panic@-1:0", 2).is_err(), "negative instant");
+        assert!(FaultPlan::parse("frobnicate@1", 2).is_err(), "unknown kind");
+        assert!(FaultPlan::parse("stall@1:0", 2).is_err(), "stall needs millis");
+        assert!(FaultPlan::parse("", 2).unwrap().is_empty(), "empty string is empty plan");
+    }
+}

@@ -47,18 +47,21 @@
 //! instants (every Poisson-generated trace) are routed bit-identically to
 //! the unbatched path; see `note_submitted` for the in-burst semantics.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 mod router;
 
 pub use router::{make_router, FragAware, LeastLoaded, RoundRobin, Router, ROUTER_NAMES};
 
 use crate::control::ControlError;
-use crate::metrics::FleetMetrics;
+use crate::metrics::{FleetMetrics, JobRecord};
 use crate::sim::Engine;
 use crate::telemetry::{EventKind, Stats, Telemetry, TraceEvent, TraceMode, FLEET_NODE};
 use crate::workload::Job;
 use crate::SystemConfig;
 use anyhow::Result;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 /// How [`FleetEngine`] fans node work across OS threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -96,6 +99,13 @@ pub struct FleetConfig {
     /// ([`crate::telemetry`]); Off by default. Purely observational —
     /// digests are bit-identical across modes.
     pub telemetry: TraceMode,
+    /// Wall-clock budget for one pooled epoch barrier
+    /// ([`WorkerPool::run_epoch`]): a worker that has not acked its shard
+    /// within this many seconds is treated as stalled and the fleet
+    /// degrades to sequential stepping instead of wedging the gateway
+    /// forever. Virtual time is unaffected, so digests are identical
+    /// whether or not the deadline ever fires.
+    pub epoch_deadline_s: f64,
 }
 
 impl Default for FleetConfig {
@@ -108,6 +118,7 @@ impl Default for FleetConfig {
             executor: FleetExecutor::PersistentPool,
             batch_arrivals: true,
             telemetry: TraceMode::Off,
+            epoch_deadline_s: 30.0,
         }
     }
 }
@@ -260,6 +271,44 @@ impl NodeView {
     }
 }
 
+/// Rejoin attempts a quarantined node gets before permanent eviction.
+pub const RESTART_BUDGET: u32 = 3;
+
+/// Virtual-time backoff before a quarantined node's first rejoin attempt;
+/// doubles on every subsequent quarantine (60 → 120 → 240 s), mirroring a
+/// real orchestrator's crash-loop backoff but on the deterministic
+/// simulation clock.
+pub const RESTART_BACKOFF_S: f64 = 60.0;
+
+/// Failure lifecycle of one node (DESIGN.md §8 state machine):
+/// `Healthy → Quarantined ⇄ Healthy` up to [`RESTART_BUDGET`] rejoins,
+/// then `→ Evicted` (terminal).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum NodeFate {
+    Healthy,
+    /// Panicked during stepping: sits out every epoch and is steered
+    /// around by routing until the virtual clock reaches `retry_at`, then
+    /// rejoins ([`FleetEngine::process_rejoins`]).
+    Quarantined { retry_at: f64 },
+    /// Retry budget exhausted — permanently out of stepping and routing;
+    /// its remaining jobs are reported via [`FleetEngine::evicted_jobs`].
+    Evicted,
+}
+
+/// One-shot faults armed on a node by the chaos plane ([`crate::fault`]).
+/// Always `None` on production runs — `apply_op`'s check is one branch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum NodeFault {
+    /// Panic on the next step. Deliberately left armed until a
+    /// `catch_unwind` turns the panic into quarantine: under a pool the
+    /// first firing kills a worker (exercising pool recovery), and the
+    /// degraded re-run fires it again to quarantine the node.
+    Panic,
+    /// Sleep this many wall-clock milliseconds on the next step (cleared
+    /// before sleeping) — trips the pool's epoch deadline when longer.
+    Stall(u64),
+}
+
 /// One datacenter node: engine + owned policy instance.
 pub struct FleetNode {
     pub id: usize,
@@ -267,11 +316,12 @@ pub struct FleetNode {
     policy: Box<dyn crate::sim::Policy + Send>,
     /// Jobs routed here (observability; completions live in the metrics).
     pub arrivals: usize,
-    /// Quarantined after panicking during degraded-mode stepping: the
-    /// node is skipped by every subsequent epoch and avoided by routing
-    /// ([`FleetEngine::failed_nodes`] reports the count). Never set in a
-    /// healthy fleet.
-    failed: bool,
+    /// Failure-lifecycle state; [`NodeFate::Healthy`] in a healthy fleet.
+    fate: NodeFate,
+    /// Successful rejoins so far (monotone; bounded by [`RESTART_BUDGET`]).
+    restarts: u32,
+    /// Armed chaos fault, if any ([`crate::fault`]).
+    fault: Option<NodeFault>,
 }
 
 impl FleetNode {
@@ -298,6 +348,11 @@ impl FleetNode {
     pub fn view(&self) -> NodeView {
         NodeView::of(self.id, &self.engine)
     }
+
+    /// Whether the node is out of service (quarantined or evicted).
+    fn is_failed(&self) -> bool {
+        !matches!(self.fate, NodeFate::Healthy)
+    }
 }
 
 /// The epoch command broadcast to pool workers (and applied inline by the
@@ -311,10 +366,19 @@ enum EpochOp {
 }
 
 fn apply_op(node: &mut FleetNode, op: EpochOp) {
-    // Quarantined nodes (degraded mode only) sit out every epoch; the
-    // check is shared by all executors.
-    if node.failed {
+    // Quarantined/evicted nodes sit out every epoch; the check is shared
+    // by all executors.
+    if node.is_failed() {
         return;
+    }
+    match node.fault {
+        // See [`NodeFault::Panic`] for why the fault stays armed here.
+        Some(NodeFault::Panic) => panic!("injected fault: node {} panics on step", node.id),
+        Some(NodeFault::Stall(ms)) => {
+            node.fault = None;
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        None => {}
     }
     match op {
         EpochOp::Advance(t) => node.advance_to(t),
@@ -334,6 +398,9 @@ struct NodeShard {
 // its worker between receiving the epoch command and sending the epoch ack
 // — a window during which `WorkerPool::run_epoch` holds the `&mut
 // [FleetNode]` borrow and blocks on the acks, so no other access exists.
+// When the epoch deadline trips before a straggler acks, that window is
+// extended until the pool is joined: `FleetEngine::recover_epoch` drops
+// (joins) the pool before any further access to the nodes.
 // `FleetNode` itself is `Send` (owned engine state + `Box<dyn Policy +
 // Send>`), which `_fleet_node_is_send` pins at compile time.
 unsafe impl Send for NodeShard {}
@@ -348,6 +415,10 @@ enum PoolCmd {
     /// wall-clock advance time in seconds (telemetry payload only — never
     /// fed back into scheduling).
     Epoch { shard: NodeShard, op: EpochOp, ack: Sender<f64> },
+    /// Chaos hook ([`FleetEngine::chaos_kill_pool`]): the worker exits
+    /// immediately without panicking, so the next epoch's dispatch finds a
+    /// closed channel — the same observable failure as a worker death.
+    Die,
     Shutdown,
 }
 
@@ -359,13 +430,19 @@ enum PoolCmd {
 struct WorkerPool {
     cmd_txs: Vec<Sender<PoolCmd>>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Wall-clock budget for one epoch barrier (see
+    /// [`FleetConfig::epoch_deadline_s`]).
+    deadline: Duration,
 }
 
-/// Why a pooled epoch failed. Both variants mean a worker panicked —
-/// either in an earlier epoch (its channel is closed) or during this one
-/// (it never acked its shard). The barrier has fully drained by the time
-/// either is reported, so no worker still holds a shard pointer and the
-/// caller may safely fall back to stepping the same nodes sequentially.
+/// Why a pooled epoch failed. `WorkerDead`/`EpochIncomplete` mean a worker
+/// died — either in an earlier epoch (its channel is closed) or during
+/// this one (it never acked its shard); the barrier has fully drained by
+/// the time either is reported, so no worker still holds a shard pointer.
+/// `EpochStalled` means a worker blew the wall-clock deadline and may
+/// *still* hold its shard pointer — the caller must drop (join) the pool
+/// before touching node memory again, which [`FleetEngine::recover_epoch`]
+/// does first thing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum PoolError {
     /// A worker from an earlier epoch is gone; its command channel is
@@ -373,6 +450,8 @@ enum PoolError {
     WorkerDead,
     /// A worker panicked mid-shard this epoch (acks came up short).
     EpochIncomplete,
+    /// A worker failed to ack its shard within the epoch deadline.
+    EpochStalled,
 }
 
 impl WorkerPool {
@@ -380,9 +459,12 @@ impl WorkerPool {
     /// fallible step; on failure the partially-built pool shuts down its
     /// already-spawned workers (via `Drop`) and the error propagates so
     /// [`FleetEngine::new`] can degrade to sequential stepping.
-    fn spawn(workers: usize) -> std::io::Result<WorkerPool> {
-        let mut pool =
-            WorkerPool { cmd_txs: Vec::with_capacity(workers), handles: Vec::with_capacity(workers) };
+    fn spawn(workers: usize, deadline: Duration) -> std::io::Result<WorkerPool> {
+        let mut pool = WorkerPool {
+            cmd_txs: Vec::with_capacity(workers),
+            handles: Vec::with_capacity(workers),
+            deadline,
+        };
         for w in 0..workers {
             let (tx, rx) = channel::<PoolCmd>();
             let handle = std::thread::Builder::new()
@@ -402,7 +484,7 @@ impl WorkerPool {
                                 }
                                 let _ = ack.send(t0.elapsed().as_secs_f64());
                             }
-                            PoolCmd::Shutdown => break,
+                            PoolCmd::Die | PoolCmd::Shutdown => break,
                         }
                     }
                 })?;
@@ -424,11 +506,14 @@ impl WorkerPool {
     /// it) comes back in the `SendError` and is dropped — and the barrier
     /// below still waits for every shard that *was* dispatched before any
     /// error is reported, so no worker can touch node memory after this
-    /// frame's `&mut [FleetNode]` borrow ends.
+    /// frame's `&mut [FleetNode]` borrow ends. The one exception is the
+    /// epoch deadline: on `EpochStalled` a straggler may still hold its
+    /// shard pointer, and the caller must join the pool before reusing
+    /// the nodes (see [`PoolError`]).
     /// Returns the slowest shard's wall-clock advance time in seconds
     /// (telemetry payload; 0.0 when nothing was dispatched), or a
-    /// [`PoolError`] when a worker died — the caller degrades instead of
-    /// panicking the gateway.
+    /// [`PoolError`] when a worker died or stalled — the caller degrades
+    /// instead of panicking the gateway.
     fn run_epoch(&self, nodes: &mut [FleetNode], op: EpochOp) -> Result<f64, PoolError> {
         let workers = self.cmd_txs.len().min(nodes.len());
         if workers == 0 {
@@ -453,12 +538,26 @@ impl WorkerPool {
         drop(ack_tx);
         // Barrier: blocks until every dispatched worker has sent its ack
         // (or unwound, dropping its ack sender) — i.e. until no worker
-        // holds a live shard pointer — before any panic below.
+        // holds a live shard pointer — but never longer than the epoch
+        // deadline: a wedged worker turns into `EpochStalled` instead of
+        // hanging the gateway's controller thread forever. On the stall
+        // path workers may still hold shard pointers; the caller joins the
+        // pool before touching node memory (see [`PoolError`]).
+        let hard_deadline = std::time::Instant::now() + self.deadline;
         let mut acked = 0usize;
         let mut max_shard_s = 0.0f64;
-        for shard_s in ack_rx.iter() {
-            acked += 1;
-            max_shard_s = max_shard_s.max(shard_s);
+        loop {
+            let remaining = hard_deadline.saturating_duration_since(std::time::Instant::now());
+            match ack_rx.recv_timeout(remaining) {
+                Ok(shard_s) => {
+                    acked += 1;
+                    max_shard_s = max_shard_s.max(shard_s);
+                }
+                // Every ack sender dropped: all dispatched shards are done
+                // (acked) or their worker unwound (short count below).
+                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Timeout) => return Err(PoolError::EpochStalled),
+            }
         }
         if dead_worker {
             return Err(PoolError::WorkerDead);
@@ -498,11 +597,24 @@ pub struct FleetEngine {
     executor: FleetExecutor,
     gpus_per_node: usize,
     /// Set when the worker pool was lost (spawn failure at construction
-    /// or a worker panic mid-epoch): the fleet keeps running with
+    /// or a worker panic/stall mid-epoch): the fleet keeps running with
     /// sequential stepping and per-node panic quarantine instead of
     /// taking the gateway down. Never set in a healthy run, so healthy
     /// digests are untouched.
     degraded: bool,
+    /// Set the first time any chaos hook arms a fault: sequential stepping
+    /// switches to the `catch_unwind`-guarded `degraded_epoch` so injected
+    /// panics quarantine a node instead of killing the process. Healthy
+    /// runs never arm it and step through the exact pre-chaos paths.
+    chaos_armed: bool,
+    /// Jobs pulled off quarantined/evicted nodes, waiting to be re-routed
+    /// with their wait history ([`Self::flush_orphans`]). Always empty on
+    /// a healthy fleet.
+    orphans: Vec<(Job, JobRecord)>,
+    /// Ids of jobs lost to permanent node evictions, ascending — the
+    /// "reported, never silently dropped" half of the no-jobs-lost
+    /// contract ([`Self::evicted_jobs`]).
+    evicted: Vec<u64>,
 }
 
 impl FleetEngine {
@@ -529,7 +641,15 @@ impl FleetEngine {
             let mut engine = Engine::new(node_cfg.clone());
             engine.st.telemetry = Telemetry::for_node(cfg.telemetry, id as u32);
             policy.init(&mut engine.st);
-            nodes.push(FleetNode { id, engine, policy, arrivals: 0, failed: false });
+            nodes.push(FleetNode {
+                id,
+                engine,
+                policy,
+                arrivals: 0,
+                fate: NodeFate::Healthy,
+                restarts: 0,
+                fault: None,
+            });
         }
         let threads = if cfg.threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())
@@ -541,8 +661,15 @@ impl FleetEngine {
         let workers = threads.min(cfg.nodes);
         let mut telemetry = Telemetry::for_node(cfg.telemetry, FLEET_NODE);
         let mut degraded = false;
+        let deadline = if cfg.epoch_deadline_s.is_finite() && cfg.epoch_deadline_s > 0.0 {
+            Duration::from_secs_f64(cfg.epoch_deadline_s)
+        } else {
+            // Effectively unbounded (584 years) without a separate code
+            // path for "no deadline".
+            Duration::from_secs(u64::MAX / 1_000_000_000)
+        };
         let pool = if cfg.executor == FleetExecutor::PersistentPool && workers > 1 {
-            match WorkerPool::spawn(workers) {
+            match WorkerPool::spawn(workers, deadline) {
                 Ok(p) => Some(p),
                 Err(_) => {
                     // Can't get threads? Run sequentially and say so.
@@ -562,6 +689,9 @@ impl FleetEngine {
             executor: cfg.executor,
             gpus_per_node: cfg.gpus_per_node,
             degraded,
+            chaos_armed: false,
+            orphans: Vec::new(),
+            evicted: Vec::new(),
         })
     }
 
@@ -571,9 +701,29 @@ impl FleetEngine {
         self.degraded
     }
 
-    /// Nodes quarantined after panicking during degraded-mode stepping.
+    /// Nodes currently out of service (quarantined or evicted).
     pub fn failed_nodes(&self) -> usize {
-        self.nodes.iter().filter(|n| n.failed).count()
+        self.nodes.iter().filter(|n| n.is_failed()).count()
+    }
+
+    /// Whether *every* node is out of service — the terminal state in
+    /// which routing returns [`ControlError::Unavailable`] and
+    /// [`crate::control::PlaneHealth`] reports unhealthy.
+    pub fn all_nodes_failed(&self) -> bool {
+        self.nodes.iter().all(FleetNode::is_failed)
+    }
+
+    /// Ids of jobs lost to permanent node evictions, ascending. Together
+    /// with the completed-job records this accounts for every submitted
+    /// job: completed, evicted, or still pending — never silently dropped.
+    pub fn evicted_jobs(&self) -> &[u64] {
+        &self.evicted
+    }
+
+    /// Whether quarantine/eviction left jobs awaiting re-routing
+    /// ([`Self::flush_orphans`]).
+    pub fn has_orphans(&self) -> bool {
+        !self.orphans.is_empty()
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -619,6 +769,15 @@ impl FleetEngine {
     }
 
     fn run_epoch(&mut self, op: EpochOp) {
+        // Rejoin pass: quarantined nodes whose virtual-time backoff has
+        // elapsed come back before the epoch runs, so they advance with
+        // everyone else. A drain lets every pending backoff elapse (it
+        // runs to completion), so quarantined nodes always rejoin for it.
+        let rejoin_horizon = match op {
+            EpochOp::Advance(t) => t,
+            EpochOp::Drain => f64::INFINITY,
+        };
+        self.process_rejoins(rejoin_horizon);
         if self.telemetry.is_off() {
             self.run_epoch_op(op);
             return;
@@ -648,8 +807,8 @@ impl FleetEngine {
 
     /// Execute the epoch on whichever executor is configured; returns
     /// `(workers used, slowest shard's wall seconds)` for telemetry. A
-    /// worker death is absorbed here: the pool is dropped, the fleet
-    /// flips to degraded sequential stepping, and the epoch re-runs.
+    /// worker death or stall is absorbed here: the pool is dropped, the
+    /// fleet flips to degraded sequential stepping, and the epoch re-runs.
     fn run_epoch_op(&mut self, op: EpochOp) -> (usize, f64) {
         if let Some(pool) = &self.pool {
             let workers = pool.cmd_txs.len().min(self.nodes.len());
@@ -657,6 +816,13 @@ impl FleetEngine {
                 Ok(max_shard_s) => return (workers, max_shard_s),
                 Err(_) => return self.recover_epoch(op),
             }
+        }
+        // Chaos-armed fleets step through the guarded path even before any
+        // failure: an injected panic must quarantine a node, not kill the
+        // process. (Step results are identical — the guard only changes
+        // what happens to a panic.)
+        if self.degraded || self.chaos_armed {
+            return self.degraded_epoch(op);
         }
         let threads = self.threads.min(self.nodes.len()).max(1);
         if self.executor == FleetExecutor::SpawnPerCall && threads > 1 {
@@ -675,9 +841,6 @@ impl FleetEngine {
             });
             return (threads, t0.elapsed().as_secs_f64());
         }
-        if self.degraded {
-            return self.degraded_epoch(op);
-        }
         let t0 = std::time::Instant::now();
         for node in &mut self.nodes {
             apply_op(node, op);
@@ -685,12 +848,13 @@ impl FleetEngine {
         (1, t0.elapsed().as_secs_f64())
     }
 
-    /// A pool worker died mid-epoch. Drop the pool, flag degraded mode,
-    /// count the failure, and re-run the whole epoch sequentially.
-    /// Re-applying the op to shards the dead pool already finished is
-    /// idempotent — `advance_to` past its target and `run_until_idle` on
-    /// an idle node are both no-ops — so the re-run is safe regardless of
-    /// how far the failed epoch got.
+    /// A pool worker died or stalled mid-epoch. Drop (join) the pool —
+    /// after which no worker can hold a shard pointer, making the stall
+    /// path safe — flag degraded mode, count the failure, and re-run the
+    /// whole epoch sequentially. Re-applying the op to shards the dead
+    /// pool already finished is idempotent — `advance_to` past its target
+    /// and `run_until_idle` on an idle node are both no-ops — so the
+    /// re-run is safe regardless of how far the failed epoch got.
     fn recover_epoch(&mut self, op: EpochOp) -> (usize, f64) {
         self.pool = None;
         self.degraded = true;
@@ -698,25 +862,80 @@ impl FleetEngine {
         self.degraded_epoch(op)
     }
 
-    /// Sequential epoch with per-node panic quarantine: a node whose
-    /// step panics is marked failed and skipped from then on (routing
-    /// steers around it via [`Self::live_node`]) instead of taking the
-    /// gateway down. Only reached in degraded mode — the healthy paths
-    /// deliberately propagate panics so bugs surface loudly in tests.
+    /// Sequential epoch with per-node panic quarantine: a node whose step
+    /// panics enters the restart/rejoin lifecycle ([`Self::quarantine`])
+    /// and is skipped and steered around until it rejoins — instead of
+    /// taking the gateway down. Only reached in degraded or chaos-armed
+    /// fleets — the healthy paths deliberately propagate panics so bugs
+    /// surface loudly in tests.
     fn degraded_epoch(&mut self, op: EpochOp) -> (usize, f64) {
+        // Quarantine instants derive from the epoch's virtual target, not
+        // from how far the panicking node got — deterministic across pool
+        // sizes and executors.
+        let failed_at = match op {
+            EpochOp::Advance(t) => t,
+            EpochOp::Drain => self.now(),
+        };
         let t0 = std::time::Instant::now();
-        for node in &mut self.nodes {
-            if node.failed {
+        for i in 0..self.nodes.len() {
+            if self.nodes[i].is_failed() {
                 continue;
             }
+            let node = &mut self.nodes[i];
             let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 apply_op(node, op);
             }));
             if step.is_err() {
-                node.failed = true;
+                self.quarantine(i, failed_at);
             }
         }
         (1, t0.elapsed().as_secs_f64())
+    }
+
+    /// Take a panicked node out of service: disarm its fault, extract its
+    /// still-queued jobs (they leave with their wait history and re-route
+    /// via [`Self::flush_orphans`]), and either schedule a rejoin after a
+    /// doubling virtual-time backoff or — once [`RESTART_BUDGET`] rejoins
+    /// are spent — evict it permanently.
+    fn quarantine(&mut self, i: usize, failed_at: f64) {
+        self.nodes[i].fault = None;
+        let restarts = self.nodes[i].restarts;
+        if restarts >= RESTART_BUDGET {
+            self.evict(i);
+            return;
+        }
+        let backoff = RESTART_BACKOFF_S * f64::from(1u32 << restarts);
+        self.nodes[i].fate = NodeFate::Quarantined { retry_at: failed_at + backoff };
+        let orphaned = self.nodes[i].engine.extract_queued();
+        self.orphans.extend(orphaned);
+    }
+
+    /// Permanently evict node `i`: every job it still tracks — resident
+    /// mid-run jobs included — is pulled out and reported in
+    /// [`Self::evicted_jobs`], so the fleet's accounting never silently
+    /// drops a job. Counted in `Stats::node_evictions`.
+    fn evict(&mut self, i: usize) {
+        self.nodes[i].fate = NodeFate::Evicted;
+        self.telemetry.count(|s| s.node_evictions += 1);
+        let mut lost = self.nodes[i].engine.extract_live();
+        lost.sort_by_key(|(job, _)| job.id);
+        self.evicted.extend(lost.iter().map(|(job, _)| job.id.0));
+    }
+
+    /// Rejoin pass: quarantined nodes whose `retry_at` has been reached
+    /// return to service and advance with the next epoch. Their engine
+    /// state was frozen — not rebuilt — at quarantine, so resident jobs
+    /// resume where they stopped; only queued jobs left (as orphans).
+    fn process_rejoins(&mut self, horizon: f64) {
+        for node in &mut self.nodes {
+            if let NodeFate::Quarantined { retry_at } = node.fate {
+                if retry_at <= horizon {
+                    node.fate = NodeFate::Healthy;
+                    node.restarts += 1;
+                    self.telemetry.count(|s| s.node_restarts += 1);
+                }
+            }
+        }
     }
 
     /// Validate a router's chosen node index. The [`Router::route`]
@@ -733,29 +952,47 @@ impl FleetEngine {
         node.min(self.nodes.len() - 1)
     }
 
-    /// Remap a routed node onto a live (non-quarantined) one. Healthy
-    /// fleets have no failed nodes, so this is a branch-and-return on the
-    /// hot path and digests are untouched; in degraded mode a job bound
-    /// for a quarantined node falls to the next live node (wrapping), so
-    /// the gateway keeps serving with whatever capacity remains.
-    fn live_node(&self, node: usize) -> usize {
-        if !self.nodes[node].failed {
-            return node;
+    /// Remap a routed node onto a live (non-failed) one, or `None` when
+    /// every node is out of service. Healthy fleets have no failed nodes,
+    /// so this is a branch-and-return on the hot path and digests are
+    /// untouched; in degraded mode a job bound for a failed node falls to
+    /// the next live node (wrapping), so the gateway keeps serving with
+    /// whatever capacity remains.
+    fn live_node(&self, node: usize) -> Option<usize> {
+        if !self.nodes[node].is_failed() {
+            return Some(node);
         }
         let n = self.nodes.len();
-        (1..n).map(|d| (node + d) % n).find(|&i| !self.nodes[i].failed).unwrap_or(node)
+        (1..n).map(|d| (node + d) % n).find(|&i| !self.nodes[i].is_failed())
+    }
+
+    /// The typed terminal state for an all-nodes-failed fleet — routing
+    /// surfaces this instead of silently submitting to a dead node
+    /// (regression-tested in `tests/fleet.rs`).
+    fn unavailable(&self) -> ControlError {
+        ControlError::Unavailable(format!(
+            "all {} fleet nodes failed (quarantined or evicted)",
+            self.nodes.len()
+        ))
     }
 
     /// Route `job` through `router` (observing fresh node views) and
-    /// submit it to the chosen node. Returns the node id.
-    pub fn route_and_submit(&mut self, router: &mut dyn Router, job: Job) -> usize {
+    /// submit it to the chosen node. Returns the node id, or
+    /// [`ControlError::Unavailable`] when every node has failed.
+    pub fn route_and_submit(
+        &mut self,
+        router: &mut dyn Router,
+        job: Job,
+    ) -> Result<usize, ControlError> {
         let views = self.views();
         let mut fallbacks = 0u64;
-        let node =
-            self.live_node(self.checked_node(router.route_traced(&job, &views, &mut fallbacks)));
+        let routed = self.checked_node(router.route_traced(&job, &views, &mut fallbacks));
+        let Some(node) = self.live_node(routed) else {
+            return Err(self.unavailable());
+        };
         self.record_routing(&job, node, &views, fallbacks);
         self.nodes[node].submit(job);
-        node
+        Ok(node)
     }
 
     /// Route and submit a burst of same-instant arrivals against one view
@@ -764,19 +1001,25 @@ impl FleetEngine {
     /// [`Router::on_submitted`]. A one-job burst behaves exactly like
     /// [`Self::route_and_submit`], so traces whose arrival instants are
     /// all distinct route bit-identically batched or not. Returns the
-    /// chosen node for each job, in submission order.
+    /// chosen node for each job, in submission order; an all-nodes-failed
+    /// fleet rejects the whole burst up front (no partial submission).
     pub fn route_and_submit_burst(
         &mut self,
         router: &mut dyn Router,
         jobs: impl IntoIterator<Item = Job>,
         views: &mut Vec<NodeView>,
-    ) -> Vec<usize> {
+    ) -> Result<Vec<usize>, ControlError> {
+        if self.all_nodes_failed() {
+            return Err(self.unavailable());
+        }
         self.views_into(views);
         let mut placed = Vec::new();
         for job in jobs {
             let mut fallbacks = 0u64;
-            let node =
-                self.live_node(self.checked_node(router.route_traced(&job, views, &mut fallbacks)));
+            let routed = self.checked_node(router.route_traced(&job, views, &mut fallbacks));
+            // Node fates cannot change mid-burst, so the up-front guard
+            // makes this remap infallible.
+            let node = self.live_node(routed).unwrap_or(routed);
             // Record against the pre-submit view so the `live_jobs`
             // payload matches the unbatched path bit-for-bit.
             self.record_routing(&job, node, views, fallbacks);
@@ -784,7 +1027,101 @@ impl FleetEngine {
             self.nodes[node].submit(job);
             placed.push(node);
         }
-        placed
+        Ok(placed)
+    }
+
+    /// Re-route jobs orphaned by quarantine/eviction through `router`,
+    /// transplanting each job's metrics record so its wait history
+    /// (original arrival + queue time accrued on the dead node, plus the
+    /// re-routing gap credited as queue wait) survives the move. Returns
+    /// how many were re-routed; an all-nodes-failed fleet returns
+    /// [`ControlError::Unavailable`] and keeps the orphans pending (a
+    /// node may yet rejoin). No-op on healthy fleets.
+    pub fn flush_orphans(
+        &mut self,
+        router: &mut dyn Router,
+        views: &mut Vec<NodeView>,
+    ) -> Result<usize, ControlError> {
+        if self.orphans.is_empty() {
+            return Ok(0);
+        }
+        if self.all_nodes_failed() {
+            return Err(self.unavailable());
+        }
+        let orphans = std::mem::take(&mut self.orphans);
+        let moved = orphans.len();
+        self.views_into(views);
+        for (job, mut rec) in orphans {
+            let mut fallbacks = 0u64;
+            let routed = self.checked_node(router.route_traced(&job, views, &mut fallbacks));
+            let node = self.live_node(routed).unwrap_or(routed);
+            self.record_routing(&job, node, views, fallbacks);
+            router.on_submitted(&job, node, views);
+            self.nodes[node].submit(job);
+            // The fresh record `submit` stamped starts at the node's
+            // current clock; replace it with the migrated record and
+            // credit the quarantine→re-route gap as queue wait so stage
+            // times still sum to JCT.
+            let now = self.nodes[node].engine.st.now;
+            rec.queue_s += (now - rec.arrival - rec.stage_sum()).max(0.0);
+            self.nodes[node].engine.st.metrics.restore(rec);
+        }
+        Ok(moved)
+    }
+
+    // ---------- chaos hooks (`crate::fault`) ----------
+    //
+    // Deterministic fault injection for the chaos plane. Each hook arms an
+    // existing production recovery path; none fires on its own, and a
+    // fleet that never arms one steps through exactly the pre-chaos code.
+
+    /// Kill one pool worker (it exits before the next epoch dispatch, so
+    /// the epoch barrier reports a dead worker and the fleet degrades —
+    /// the "worker-pool kill mid-epoch" fault). Returns whether a pool
+    /// existed to kill.
+    pub fn chaos_kill_pool(&mut self) -> bool {
+        self.chaos_armed = true;
+        match &self.pool {
+            Some(pool) => {
+                let _ = pool.cmd_txs[0].send(PoolCmd::Die);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Arm a panic on `node`'s next step (→ quarantine, restart/rejoin).
+    pub fn chaos_panic_node(&mut self, node: usize) -> bool {
+        self.chaos_armed = true;
+        if node >= self.nodes.len() || self.nodes[node].is_failed() {
+            return false;
+        }
+        self.nodes[node].fault = Some(NodeFault::Panic);
+        true
+    }
+
+    /// Arm a wall-clock stall on `node`'s next step (→ epoch-deadline
+    /// trip under a pool; merely slow otherwise — virtual time and
+    /// digests are unaffected either way).
+    pub fn chaos_stall_node(&mut self, node: usize, millis: u64) -> bool {
+        self.chaos_armed = true;
+        if node >= self.nodes.len() || self.nodes[node].is_failed() {
+            return false;
+        }
+        self.nodes[node].fault = Some(NodeFault::Stall(millis));
+        true
+    }
+
+    /// Drop one stored profiling table on `node`'s policy (→ the policy's
+    /// missing-table re-profile fallback; see
+    /// [`crate::sim::Policy::inject_table_fault`]). Doesn't arm guarded
+    /// stepping — no panic is involved.
+    pub fn chaos_drop_table(&mut self, node: usize) -> bool {
+        if node >= self.nodes.len() || self.nodes[node].is_failed() {
+            return false;
+        }
+        let n = &mut self.nodes[node];
+        n.policy.inject_table_fault(&mut n.engine.st)
     }
 
     /// Gateway-side routing telemetry: one `RouterDecision` event per job
@@ -900,33 +1237,46 @@ fn run_fleet_core(
 ) -> Result<(FleetMetrics, Vec<TraceEvent>, Stats)> {
     let mut fleet = FleetEngine::new(cfg, policy_name, seed)?;
     let mut arrivals: Vec<Job> = trace.to_vec();
-    arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap().then(a.id.cmp(&b.id)));
+    arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+    let mut views: Vec<NodeView> = Vec::with_capacity(fleet.num_nodes());
     if cfg.batch_arrivals {
-        let mut views: Vec<NodeView> = Vec::with_capacity(fleet.num_nodes());
         let mut burst: Vec<Job> = Vec::new();
         let mut it = arrivals.into_iter().peekable();
         while let Some(first) = it.next() {
             let epoch_t = first.arrival;
             fleet.advance_all_to(epoch_t);
+            // Jobs orphaned by a quarantine during the advance re-route
+            // before (and with the same view freshness as) new arrivals.
+            fleet.flush_orphans(router, &mut views)?;
             burst.push(first);
             while it.peek().is_some_and(|next| next.arrival == epoch_t) {
                 burst.extend(it.next());
             }
-            fleet.route_and_submit_burst(router, burst.drain(..), &mut views);
+            fleet.route_and_submit_burst(router, burst.drain(..), &mut views)?;
         }
     } else {
         for job in arrivals {
             fleet.advance_all_to(job.arrival);
-            fleet.route_and_submit(router, job);
+            fleet.flush_orphans(router, &mut views)?;
+            fleet.route_and_submit(router, job)?;
         }
     }
     fleet.drain();
+    // A drain can itself quarantine a node (armed chaos fault) and orphan
+    // its queued jobs; re-route and drain again until the fleet settles.
+    // Terminates: orphans only regenerate from panics, each of which
+    // consumes a one-shot fault or a bounded restart-budget step.
+    while fleet.has_orphans() {
+        fleet.flush_orphans(router, &mut views)?;
+        fleet.drain();
+    }
     let events = fleet.merged_events();
     let stats = fleet.merged_stats();
     Ok((fleet.finish(), events, stats))
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -1080,6 +1430,61 @@ mod tests {
         }
         let cfg = FleetConfig { nodes: 2, gpus_per_node: 1, threads: 1, ..Default::default() };
         let mut fleet = FleetEngine::new(&cfg, "miso", 0).unwrap();
-        fleet.route_and_submit(&mut Rogue, small_job(0));
+        let _ = fleet.route_and_submit(&mut Rogue, small_job(0));
+    }
+
+    #[test]
+    fn quarantine_extracts_orphans_and_rejoins_on_schedule() {
+        let cfg = FleetConfig { nodes: 2, gpus_per_node: 1, threads: 1, ..Default::default() };
+        let mut fleet = FleetEngine::new(&cfg, "miso", 5).unwrap();
+        // Queue more work on node 1 than a 1-GPU node can start at once
+        // (near-whole-GPU memory keeps jobs from co-profiling, so at most
+        // one is resident and the rest wait), then panic it: the
+        // still-queued jobs must leave as orphans.
+        for id in 0..4u64 {
+            let mut j = small_job(id);
+            j.requirements.min_memory_mb = 35_000.0;
+            fleet.nodes[1].submit(j);
+        }
+        assert!(fleet.chaos_panic_node(1));
+        fleet.advance_all_to(1.0);
+        assert_eq!(fleet.failed_nodes(), 1);
+        assert!(fleet.is_degraded());
+        assert!(fleet.has_orphans(), "queued jobs on the panicked node become orphans");
+        let mut views = Vec::new();
+        let mut router = RoundRobin::default();
+        let moved = fleet.flush_orphans(&mut router, &mut views).unwrap();
+        assert!(moved >= 1);
+        assert!(!fleet.has_orphans());
+        // Before the backoff elapses the node stays failed; after, it
+        // rejoins and the restart is counted.
+        fleet.advance_all_to(2.0);
+        assert_eq!(fleet.failed_nodes(), 1);
+        fleet.advance_all_to(1.0 + RESTART_BACKOFF_S + 1.0);
+        assert_eq!(fleet.failed_nodes(), 0, "node rejoins once retry_at is reached");
+        assert_eq!(fleet.merged_stats().node_restarts, 1);
+        fleet.drain();
+        assert_eq!(fleet.live_jobs(), 0);
+        assert!(fleet.evicted_jobs().is_empty());
+        let m = fleet.finish();
+        assert_eq!(m.total_jobs(), 4, "every job completes exactly once despite the move");
+    }
+
+    #[test]
+    fn all_nodes_failed_is_a_typed_error_not_a_loop() {
+        let cfg = FleetConfig { nodes: 2, gpus_per_node: 1, threads: 1, ..Default::default() };
+        let mut fleet = FleetEngine::new(&cfg, "miso", 9).unwrap();
+        assert!(fleet.chaos_panic_node(0));
+        assert!(fleet.chaos_panic_node(1));
+        fleet.advance_all_to(1.0);
+        assert!(fleet.all_nodes_failed());
+        let mut router = RoundRobin::default();
+        let err = fleet.route_and_submit(&mut router, small_job(0)).unwrap_err();
+        assert!(matches!(err, ControlError::Unavailable(_)), "got {err:?}");
+        let mut views = Vec::new();
+        let err = fleet
+            .route_and_submit_burst(&mut router, [small_job(1)], &mut views)
+            .unwrap_err();
+        assert!(matches!(err, ControlError::Unavailable(_)), "got {err:?}");
     }
 }

@@ -101,11 +101,11 @@ impl Router for LeastLoaded {
     }
 
     fn route(&mut self, _job: &Job, views: &[NodeView]) -> usize {
+        // `views` is non-empty per the trait contract; 0 is unreachable.
         views
             .iter()
             .min_by_key(|v| (v.live_jobs, v.resident_jobs, v.node))
-            .expect("non-empty views")
-            .node
+            .map_or(0, |v| v.node)
     }
 }
 
@@ -154,11 +154,11 @@ impl Router for FragAware {
 
         if need >= 4 {
             // Whole-GPU-class job: maximize preserved empty GPUs.
+            // (`views` is non-empty per the trait contract.)
             return views
                 .iter()
                 .min_by_key(|v| (Reverse(v.empty_gpus), v.live_jobs, v.node))
-                .expect("non-empty views")
-                .node;
+                .map_or(0, |v| v.node);
         }
 
         // Small job: shallowest fitting fragmented node below the depth cap.
@@ -204,16 +204,13 @@ impl Router for FragAware {
         {
             return v.node;
         }
-        // Saturated: plain least-loaded.
-        views
-            .iter()
-            .min_by_key(|v| (v.live_jobs, v.node))
-            .expect("non-empty views")
-            .node
+        // Saturated: plain least-loaded (`views` non-empty per contract).
+        views.iter().min_by_key(|v| (v.live_jobs, v.node)).map_or(0, |v| v.node)
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::workload::{ModelFamily, WorkloadSpec};

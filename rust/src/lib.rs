@@ -35,6 +35,7 @@
 pub mod config;
 pub mod control;
 pub mod experiments;
+pub mod fault;
 pub mod fleet;
 pub mod gpu;
 pub mod metrics;

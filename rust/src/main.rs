@@ -45,17 +45,19 @@ fn usage() -> ! {
                         M = off | counters | full — stats print unless off)\n\
            fleet       [--nodes N] [--gpus N] [--router R] [--policy P] [--jobs N]\n\
                        [--lambda S] [--seed S] [--threads T] [--skewed]\n\
-                       [--executor E] [--no-batch] [--telemetry M]\n\
+                       [--executor E] [--no-batch] [--telemetry M] [--chaos SPEC]\n\
                        (R = round-robin | least-loaded | frag-aware | all;\n\
                         E = pool | spawn — persistent worker pool vs\n\
-                        spawn-per-epoch baseline, identical results)\n\
+                        spawn-per-epoch baseline, identical results;\n\
+                        SPEC = seed:<u64>[:count] or e.g.\n\
+                        'panic@120:1;kill@300;stall@400:0:50;droptable@500:2')\n\
            trace       [--policy P] [--gpus N] [--jobs N] [--lambda S] [--seed S]\n\
                        [--nodes N] [--router R] [--trace-out FILE] [--stats-json]\n\
                        (full-telemetry run; writes a Chrome trace_event JSON\n\
                         loadable in Perfetto / chrome://tracing, default trace.json)\n\
            experiment  --id ID [--trials N] [--out FILE]\n\
            serve       [--port P] [--gpus N] [--time-scale X] [--nodes N] [--router R]\n\
-                       [--fleet-threads T] [--telemetry M]\n\
+                       [--fleet-threads T] [--telemetry M] [--chaos SPEC]\n\
            list"
     );
     std::process::exit(2);
@@ -123,6 +125,9 @@ fn run() -> Result<()> {
             // TRACE/STATS are protocol commands, so servers record by
             // default; `--telemetry off` opts out.
             let telemetry = telemetry_flag(&flags, TraceMode::Full)?;
+            if let Some(spec) = flags.get("chaos") {
+                return serve_chaos(&flags, port, gpus, time_scale, nodes, telemetry, spec);
+            }
             if nodes > 1 {
                 miso::server::serve_fleet(
                     port,
@@ -146,6 +151,54 @@ fn run() -> Result<()> {
             Ok(())
         }
         _ => usage(),
+    }
+}
+
+/// `miso serve --chaos SPEC`: build the gateway plane explicitly, wrap
+/// it in a [`miso::fault::ChaosPlane`], and serve it — the injected
+/// faults fire at their scheduled *virtual* instants as the gateway's
+/// scaled wall-clock advances, exercising degraded mode, quarantine /
+/// rejoin, and submit shedding on a live TCP port.
+fn serve_chaos(
+    flags: &Flags,
+    port: u16,
+    gpus: usize,
+    time_scale: f64,
+    nodes: usize,
+    telemetry: TraceMode,
+    spec: &str,
+) -> Result<()> {
+    use miso::control::{ControlPlane, FleetPlane, SingleNode};
+    use miso::fault::{ChaosPlane, FaultPlan};
+
+    // Mirror the gateway's internal policy/seed (`server::live`).
+    const GATEWAY_POLICY: &str = "miso";
+    const GATEWAY_SEED: u64 = 0x11FE;
+    let plan = FaultPlan::parse(spec, nodes)?;
+    let faults = plan.remaining();
+    let router = flags.get("router").unwrap_or("frag-aware").to_string();
+    let inner: Box<dyn ControlPlane> = if nodes > 1 {
+        let cfg = miso::fleet::FleetConfig {
+            nodes,
+            gpus_per_node: gpus,
+            threads: flags.num("fleet-threads", 0usize)?,
+            node_cfg: SystemConfig::testbed(),
+            telemetry,
+            ..Default::default()
+        };
+        Box::new(FleetPlane::new(&cfg, GATEWAY_POLICY, GATEWAY_SEED, &router)?)
+    } else {
+        let cfg = SystemConfig { num_gpus: gpus, ..SystemConfig::testbed() };
+        Box::new(SingleNode::new(cfg, GATEWAY_POLICY, GATEWAY_SEED, telemetry)?)
+    };
+    let plane = ChaosPlane::new(inner, plan);
+    let server = miso::server::start_plane(port, Box::new(plane), time_scale)?;
+    println!(
+        "MISO chaos gateway on {} — {nodes} node(s) × {gpus} A100s, {faults} scheduled fault(s), virtual time ×{time_scale}",
+        server.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 
@@ -208,7 +261,7 @@ fn simulate(flags: &Flags) -> Result<()> {
     // results are bit-identical to the pre-trait CLI.
     let mut plane = miso::control::SingleNode::with_policy(cfg, policy, telemetry)?;
     let t0 = std::time::Instant::now();
-    miso::control::replay(&mut plane, &trace);
+    miso::control::replay(&mut plane, &trace)?;
     let wall = t0.elapsed().as_secs_f64();
     let policy_display = plane.policy_name().to_string();
     let (m, tel) = plane.into_parts();
@@ -272,11 +325,22 @@ fn fleet(flags: &Flags) -> Result<()> {
         executor,
         batch_arrivals: !flags.flag("no-batch"),
         telemetry,
+        ..Default::default()
+    };
+
+    // `--chaos` wraps each run's plane in a ChaosPlane; the replay and
+    // the reporting below drive `dyn ControlPlane` either way.
+    let chaos: Option<miso::fault::FaultPlan> = match flags.get("chaos") {
+        Some(spec) => Some(miso::fault::FaultPlan::parse(spec, nodes)?),
+        None => None,
     };
 
     println!("fleet             : {nodes} nodes × {gpus} GPUs ({} total)", nodes * gpus);
     println!("policy            : {policy}");
     println!("trace             : {jobs} jobs, λ = {lambda:.2} s, seed {seed}");
+    if let Some(plan) = &chaos {
+        println!("chaos             : {} scheduled fault(s)", plan.remaining());
+    }
 
     let routers: Vec<&str> = match router_arg {
         "all" => ROUTER_NAMES.to_vec(),
@@ -288,14 +352,31 @@ fn fleet(flags: &Flags) -> Result<()> {
         // reproduces `run_fleet`'s routing epochs exactly, so the printed
         // digest is bit-identical to the pre-trait CLI (and independent
         // of `--threads`).
-        let mut plane = FleetPlane::new(&fleet_cfg, policy, seed ^ 0xF1EE7, name)?;
+        let inner = FleetPlane::new(&fleet_cfg, policy, seed ^ 0xF1EE7, name)?;
+        let mut plane: Box<dyn ControlPlane> = match &chaos {
+            Some(plan) => {
+                Box::new(miso::fault::ChaosPlane::new(Box::new(inner), plan.clone()))
+            }
+            None => Box::new(inner),
+        };
         let t0 = std::time::Instant::now();
-        replay(&mut plane, &trace);
+        replay(plane.as_mut(), &trace)?;
         let wall = t0.elapsed().as_secs_f64();
         let stats = plane.telemetry_stats();
-        let m = plane.into_metrics();
+        let health = plane.health();
+        let m = plane.finish();
         let (q, mps, ckpt, exec, idle) = m.breakdown_pct();
         println!("\nrouter {name}");
+        if chaos.is_some() {
+            println!(
+                "  chaos           : faults {} | restarts {} | evictions {} | degraded {} | failed nodes {}",
+                stats.faults_injected,
+                stats.node_restarts,
+                stats.node_evictions,
+                health.degraded,
+                health.failed_nodes
+            );
+        }
         println!("  avg JCT         : {:.1} s", m.avg_jct());
         println!("  p99 JCT         : {:.1} s", m.p99_jct());
         println!("  avg queue       : {:.1} s", m.avg_queue_s());
@@ -370,7 +451,7 @@ fn trace_cmd(flags: &Flags) -> Result<()> {
         let policy = make_policy(policy_name, seed ^ 0xD15C0)?;
         Box::new(SingleNode::with_policy(cfg, policy, TraceMode::Full)?)
     };
-    replay(plane.as_mut(), &trace);
+    replay(plane.as_mut(), &trace)?;
     let events = plane.telemetry_events(plane.telemetry_capacity());
     let stats = plane.telemetry_stats();
 

@@ -342,6 +342,20 @@ impl MetricsCollector {
         self.record(id).completion = t;
     }
 
+    /// Remove a job's record entirely (fleet orphan extraction: the job is
+    /// being re-routed to another node and its record — arrival + accrued
+    /// stage times — migrates with it so wait history is preserved and the
+    /// fleet roll-up never double-counts).
+    pub fn remove(&mut self, id: JobId) -> Option<JobRecord> {
+        self.records.remove(&id.0)
+    }
+
+    /// Install a migrated record, replacing whatever `on_arrival` stamped
+    /// for the same id (the receiving half of fleet orphan re-routing).
+    pub fn restore(&mut self, rec: JobRecord) {
+        self.records.insert(rec.id, rec);
+    }
+
     /// Record an STP sample at virtual time `t`. Samples at the *same*
     /// instant are coalesced to the latest value — the piecewise-constant
     /// integral in [`RunMetrics::avg_stp`] is unchanged (a zero-width

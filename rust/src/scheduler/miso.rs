@@ -270,6 +270,28 @@ impl Policy for MisoPolicy {
         self.drain(st);
     }
 
+    /// Chaos hook: drop the stored speedup table of the lowest-id job that
+    /// is still live, simulating a profiling-table lookup failure. The next
+    /// `repartition` touching that job finds no table and falls back to
+    /// re-profiling (`policy_reprofiles` counts it) — the production
+    /// recovery path this fault exists to exercise. Victim choice is
+    /// deterministic, so seeded fault plans replay bit-for-bit.
+    fn inject_table_fault(&mut self, st: &mut ClusterState) -> bool {
+        let victim = self
+            .tables
+            .keys()
+            .filter(|id| st.jobs.contains_key(*id))
+            .min()
+            .copied();
+        match victim {
+            Some(id) => {
+                self.tables.remove(&id);
+                true
+            }
+            None => false,
+        }
+    }
+
     fn on_completion(&mut self, st: &mut ClusterState, gpu: Option<usize>, id: JobId) {
         self.tables.remove(&id);
         // Repartition so no slice sits idle (Sec. 4.2), then try the queue.

@@ -73,6 +73,30 @@ use std::time::{Duration, Instant};
 /// serialization (they remain in the engine's metrics).
 pub const JOBS_RETENTION_S: f64 = 600.0;
 
+/// Gateway hardening knobs: per-connection read deadlines and the
+/// bounded per-tick submit queue. Defaults suit interactive use; tests
+/// shrink them to exercise the shedding and deadline paths quickly.
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayOpts {
+    /// Per-connection read deadline: a half-open or silent socket stops
+    /// pinning its handler thread after this long (the read errors out
+    /// and the handler returns). Protocol exchanges are request/reply,
+    /// so an honest client never waits this long between lines.
+    pub read_timeout: Duration,
+    /// Upper bound on SUBMITs queued within one controller tick. Beyond
+    /// it the gateway sheds: the client gets a typed `BUSY` error reply
+    /// immediately and the job is never created, so an abusive submitter
+    /// cannot grow the pending buffer (or starve the tick) unboundedly.
+    /// Shed submissions count into telemetry as `submits_shed`.
+    pub submit_queue_cap: usize,
+}
+
+impl Default for GatewayOpts {
+    fn default() -> GatewayOpts {
+        GatewayOpts { read_timeout: Duration::from_secs(30), submit_queue_cap: 1024 }
+    }
+}
+
 /// Scheduling policy both gateways run (the paper's MISO controller).
 const GATEWAY_POLICY: &str = "miso";
 /// Policy seed for gateway planes (per-node seeds derive via
@@ -253,9 +277,24 @@ pub fn start_plane(
     plane: Box<dyn ControlPlane>,
     time_scale: f64,
 ) -> Result<LiveServer, ServerError> {
+    start_plane_with(port, plane, time_scale, GatewayOpts::default())
+}
+
+/// [`start_plane`] with explicit hardening knobs ([`GatewayOpts`]).
+pub fn start_plane_with(
+    port: u16,
+    plane: Box<dyn ControlPlane>,
+    time_scale: f64,
+    opts: GatewayOpts,
+) -> Result<LiveServer, ServerError> {
     if time_scale <= 0.0 {
         return Err(ServerError::Control(ControlError::InvalidConfig(
             "time scale must be positive".to_string(),
+        )));
+    }
+    if opts.submit_queue_cap == 0 {
+        return Err(ServerError::Control(ControlError::InvalidConfig(
+            "submit queue capacity must be positive".to_string(),
         )));
     }
     let listener = TcpListener::bind(("127.0.0.1", port))?;
@@ -269,13 +308,13 @@ pub fn start_plane(
     let stop_c = stop.clone();
     let controller = std::thread::Builder::new()
         .name("miso-controller".to_string())
-        .spawn(move || controller_loop(plane, rx, stop_c, time_scale))?;
+        .spawn(move || controller_loop(plane, rx, stop_c, time_scale, opts))?;
 
     // --- listener thread: accepts connections, one handler thread each ---
     let stop_l = stop.clone();
     let listener_handle = match std::thread::Builder::new()
         .name("miso-listener".to_string())
-        .spawn(move || accept_loop(listener, tx, stop_l))
+        .spawn(move || accept_loop(listener, tx, stop_l, opts))
     {
         Ok(h) => h,
         Err(e) => {
@@ -292,13 +331,13 @@ pub fn start_plane(
 
 /// Accept connections until shutdown, one handler thread per connection
 /// (shared by the single-node and fleet gateways).
-fn accept_loop(listener: TcpListener, tx: Sender<Request>, stop: Arc<AtomicBool>) {
+fn accept_loop(listener: TcpListener, tx: Sender<Request>, stop: Arc<AtomicBool>, opts: GatewayOpts) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let tx = tx.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_connection(stream, tx);
+                    let _ = handle_connection(stream, tx, opts);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -367,6 +406,7 @@ fn controller_loop(
     rx: Receiver<Request>,
     stop: Arc<AtomicBool>,
     time_scale: f64,
+    opts: GatewayOpts,
 ) {
     let mut next_id: u64 = 0;
     let started = Instant::now();
@@ -401,6 +441,14 @@ fn controller_loop(
         while let Ok(req) = rx.try_recv() {
             match req {
                 Request::Submit { family, batch, work_s, reply } => {
+                    // Bounded per-tick queue: past the cap the submit is
+                    // shed with a typed BUSY reply — no job id is burned,
+                    // and the pending buffer cannot grow without limit.
+                    if pending_jobs.len() >= opts.submit_queue_cap {
+                        plane.record_gateway_shed(1);
+                        let _ = reply.send(err_json("BUSY"));
+                        continue;
+                    }
                     let spec = WorkloadSpec::new(family, batch.min(3), (0.0, 0.0));
                     pending_jobs.push(Job::new(next_id, spec, plane.now(), work_s.max(1.0)));
                     pending_replies.push((next_id, reply));
@@ -428,17 +476,29 @@ fn flush_submits(
     if jobs.is_empty() {
         return;
     }
-    let nodes = plane.submit_batch(std::mem::take(jobs));
-    debug_assert_eq!(nodes.len(), replies.len());
-    for ((id, reply), node) in replies.drain(..).zip(nodes) {
-        let _ = reply.send(
-            Value::obj([
-                ("ok", Value::Bool(true)),
-                ("job", Value::num(id as f64)),
-                ("node", Value::num(node as f64)),
-            ])
-            .to_string(),
-        );
+    match plane.submit_batch(std::mem::take(jobs)) {
+        Ok(nodes) => {
+            debug_assert_eq!(nodes.len(), replies.len());
+            for ((id, reply), node) in replies.drain(..).zip(nodes) {
+                let _ = reply.send(
+                    Value::obj([
+                        ("ok", Value::Bool(true)),
+                        ("job", Value::num(id as f64)),
+                        ("node", Value::num(node as f64)),
+                    ])
+                    .to_string(),
+                );
+            }
+        }
+        Err(e) => {
+            // An unavailable plane (every node failed) rejects the whole
+            // burst: each submitter gets the typed error instead of a
+            // silent drop, and the gateway keeps serving reads.
+            let msg = err_json(&e.to_string());
+            for (_, reply) in replies.drain(..) {
+                let _ = reply.send(msg.clone());
+            }
+        }
     }
 }
 
@@ -523,6 +583,7 @@ fn status_json(plane: &dyn ControlPlane) -> Value {
         ("router", Value::str(plane.router_name())),
         ("degraded", Value::Bool(health.degraded)),
         ("failed_nodes", Value::num(health.failed_nodes as f64)),
+        ("unhealthy", Value::Bool(health.unhealthy)),
         ("queued", Value::num(m.queued as f64)),
         ("live_jobs", Value::num(m.live as f64)),
         // Size of the in-memory job tables (live + retention-window
@@ -622,8 +683,12 @@ fn metrics_json(plane: &dyn ControlPlane) -> Value {
     ])
 }
 
-fn handle_connection(stream: TcpStream, tx: Sender<Request>) -> std::io::Result<()> {
+fn handle_connection(stream: TcpStream, tx: Sender<Request>, opts: GatewayOpts) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
+    // Read deadline: a half-open or silent peer errors the next read
+    // instead of parking this handler thread forever; the `line?` below
+    // then returns and the thread exits.
+    stream.set_read_timeout(Some(opts.read_timeout))?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {

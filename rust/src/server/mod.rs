@@ -13,6 +13,6 @@
 mod live;
 
 pub use live::{
-    serve, serve_fleet, start, start_fleet, start_fleet_with, start_plane, start_with, LiveServer,
-    ServerError, JOBS_RETENTION_S,
+    serve, serve_fleet, start, start_fleet, start_fleet_with, start_plane, start_plane_with,
+    start_with, GatewayOpts, LiveServer, ServerError, JOBS_RETENTION_S,
 };

@@ -936,6 +936,15 @@ pub trait Policy {
 
     /// One-time setup before any job arrives (e.g. OptSta pre-partitions).
     fn init(&mut self, _st: &mut ClusterState) {}
+
+    /// Chaos hook ([`crate::fault`]): deterministically corrupt one piece of
+    /// policy-internal profiling state (e.g. drop a stored speedup table) so
+    /// the policy's own recovery path — re-profiling on a missing table —
+    /// can be exercised. Returns whether anything was actually dropped.
+    /// Default: policies without profiling state have nothing to corrupt.
+    fn inject_table_fault(&mut self, _st: &mut ClusterState) -> bool {
+        false
+    }
 }
 
 /// Incremental simulation engine: the event loop of [`run`] factored out so
@@ -1213,6 +1222,57 @@ impl Engine {
     /// Consume the engine, returning the collected metrics.
     pub fn finish(self) -> RunMetrics {
         self.st.metrics.finish()
+    }
+
+    /// Rip every still-queued job out of this engine — queue entry, job
+    /// table row, and metrics record — returning `(job, record)` pairs in
+    /// FCFS order. The record has its queue wait settled up to `now`, so a
+    /// fleet can re-route the orphans to a live node after a failure with
+    /// their wait history intact ([`MetricsCollector::restore`] on the
+    /// receiving side). Counts of submitted/live jobs are rolled back as if
+    /// the jobs had never arrived here, keeping fleet roll-ups
+    /// double-count-free. Safe at any quiescent point for the same reason
+    /// as [`Self::purge_completed`]: the event index discards entries whose
+    /// job id is missing.
+    pub fn extract_queued(&mut self) -> Vec<(Job, crate::metrics::JobRecord)> {
+        let ids: Vec<JobId> = self.st.queue.iter().collect();
+        self.extract_ids(ids)
+    }
+
+    /// [`Self::extract_queued`] extended to *every* job not yet Done —
+    /// queued and resident alike (id order). Used when a node is evicted
+    /// permanently: the fleet reports the jobs instead of letting their
+    /// half-open records poison aggregate metrics. The engine's GPU and
+    /// event state is left as-is; an evicted node is never stepped again,
+    /// and observers only read counters.
+    pub fn extract_live(&mut self) -> Vec<(Job, crate::metrics::JobRecord)> {
+        let mut ids: Vec<JobId> = self
+            .st
+            .jobs
+            .iter()
+            .filter(|(_, js)| !matches!(js.state, JobState::Done))
+            .map(|(id, _)| *id)
+            .collect();
+        // The job table is a hash map — sort so extraction order (and with
+        // it every downstream re-route) is deterministic.
+        ids.sort_unstable();
+        self.extract_ids(ids)
+    }
+
+    fn extract_ids(&mut self, ids: Vec<JobId>) -> Vec<(Job, crate::metrics::JobRecord)> {
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            // Settle lazily-accrued stage time before the record migrates.
+            self.st.touch(id);
+            self.st.queue.remove(id);
+            let Some(js) = self.st.jobs.remove(&id) else { continue };
+            let Some(rec) = self.st.metrics.remove(id) else { continue };
+            self.st.active_jobs -= 1;
+            self.live -= 1;
+            self.submitted -= 1;
+            out.push((js.job, rec));
+        }
+        out
     }
 }
 

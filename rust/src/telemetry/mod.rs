@@ -375,6 +375,16 @@ pub struct Stats {
     pub plan_cache_misses: u64,
     /// Partition-plan cache entries dropped by generation sweeps.
     pub plan_cache_evictions: u64,
+    /// Chaos-plane faults actually applied ([`crate::fault`]); stays 0 on
+    /// production runs and under an empty [`crate::fault::FaultPlan`].
+    pub faults_injected: u64,
+    /// Quarantined nodes successfully restarted and rejoined the fleet.
+    pub node_restarts: u64,
+    /// Nodes permanently evicted after exhausting the restart budget.
+    pub node_evictions: u64,
+    /// Gateway submits shed with a `BUSY` reply by the bounded per-tick
+    /// submit queue ([`crate::server`]).
+    pub submits_shed: u64,
     pub jct_s: LogHistogram,
     pub queue_wait_s: LogHistogram,
     pub repartition_downtime_s: LogHistogram,
@@ -433,6 +443,10 @@ impl Stats {
         self.plan_cache_hits += other.plan_cache_hits;
         self.plan_cache_misses += other.plan_cache_misses;
         self.plan_cache_evictions += other.plan_cache_evictions;
+        self.faults_injected += other.faults_injected;
+        self.node_restarts += other.node_restarts;
+        self.node_evictions += other.node_evictions;
+        self.submits_shed += other.submits_shed;
         self.jct_s.merge(&other.jct_s);
         self.queue_wait_s.merge(&other.queue_wait_s);
         self.repartition_downtime_s.merge(&other.repartition_downtime_s);
@@ -457,6 +471,10 @@ impl Stats {
             ("plan_cache_hits", Value::num(self.plan_cache_hits as f64)),
             ("plan_cache_misses", Value::num(self.plan_cache_misses as f64)),
             ("plan_cache_evictions", Value::num(self.plan_cache_evictions as f64)),
+            ("faults_injected", Value::num(self.faults_injected as f64)),
+            ("node_restarts", Value::num(self.node_restarts as f64)),
+            ("node_evictions", Value::num(self.node_evictions as f64)),
+            ("submits_shed", Value::num(self.submits_shed as f64)),
             (
                 "histograms",
                 Value::obj([
@@ -473,7 +491,7 @@ impl Stats {
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         out.push_str("counters:\n");
-        let counters: [(&str, u64); 16] = [
+        let counters: [(&str, u64); 20] = [
             ("arrivals", self.arrivals),
             ("placements", self.placements),
             ("completions", self.completions),
@@ -490,6 +508,10 @@ impl Stats {
             ("plan cache hits", self.plan_cache_hits),
             ("plan cache misses", self.plan_cache_misses),
             ("plan cache evictions", self.plan_cache_evictions),
+            ("faults injected", self.faults_injected),
+            ("node restarts", self.node_restarts),
+            ("node evictions", self.node_evictions),
+            ("submits shed", self.submits_shed),
         ];
         for (name, v) in counters {
             out.push_str(&format!("  {name:<24} {v}\n"));

@@ -9,8 +9,11 @@
 //! detached controller.
 
 use miso::control::{replay, ControlError, ControlPlane, FleetPlane, SingleNode};
+use miso::fault::{ChaosPlane, FaultKind, FaultPlan, FaultSpec};
 use miso::fleet::FleetConfig;
-use miso::server::{start_fleet_with, start_with, LiveServer, ServerError};
+use miso::server::{
+    start_fleet_with, start_plane_with, start_with, GatewayOpts, LiveServer, ServerError,
+};
 use miso::telemetry::{TraceMode, DEFAULT_RING_CAP, FLEET_NODE};
 use miso::util::json::Value;
 use miso::workload::{Job, TraceConfig, TraceGenerator};
@@ -46,7 +49,7 @@ fn replay_matches_direct_single_node_run() {
     // `SingleNode::new("miso", 5)` builds the same `MisoPolicy::paper(5)`
     // through the fleet policy registry.
     let mut plane = SingleNode::new(cfg, "miso", 5, TraceMode::Off).unwrap();
-    replay(&mut plane, &trace);
+    replay(&mut plane, &trace).unwrap();
     let (m_plane, _tel) = plane.into_parts();
 
     assert_eq!(m_plane.records.len(), m_direct.records.len());
@@ -72,7 +75,7 @@ fn replay_matches_direct_fleet_run() {
     let m_direct = miso::fleet::run_fleet(&cfg, "miso", 99, router.as_mut(), &trace).unwrap();
 
     let mut plane = FleetPlane::new(&cfg, "miso", 99, "frag-aware").unwrap();
-    replay(&mut plane, &trace);
+    replay(&mut plane, &trace).unwrap();
     let m_plane = plane.into_metrics();
 
     assert_eq!(m_plane.total_jobs(), m_direct.total_jobs());
@@ -103,13 +106,13 @@ fn one_node_fleet_and_bare_engine_agree_through_the_trait() {
     };
     let mut fleet: Box<dyn ControlPlane> =
         Box::new(FleetPlane::new(&fcfg, "miso", seed, "round-robin").unwrap());
-    replay(fleet.as_mut(), &trace);
+    replay(fleet.as_mut(), &trace).unwrap();
 
     let scfg = SystemConfig { num_gpus: 4, ..SystemConfig::testbed() };
     let node_seed = miso::scheduler::node_seed(seed, 0);
     let mut single: Box<dyn ControlPlane> =
         Box::new(SingleNode::new(scfg, "miso", node_seed, TraceMode::Full).unwrap());
-    replay(single.as_mut(), &trace);
+    replay(single.as_mut(), &trace).unwrap();
 
     // Same shape-agnostic answers.
     assert_eq!(fleet.num_nodes(), 1);
@@ -150,9 +153,9 @@ fn drive_submits(plane: &mut dyn ControlPlane, trace: &[Job], batched: bool) {
     for job in jobs {
         plane.advance_to(job.arrival);
         if batched {
-            plane.submit_batch(vec![job]);
+            plane.submit_batch(vec![job]).unwrap();
         } else {
-            plane.submit(job);
+            plane.submit(job).unwrap();
         }
     }
     plane.drain();
@@ -353,4 +356,176 @@ fn protocol_abuse_survives_fleet_gateway() {
     let server = start_fleet_with(0, 2, 1, 60.0, "least-loaded", 1, TraceMode::Full).unwrap();
     // Two node rings plus the gateway's own.
     abuse_gateway(server, 3 * DEFAULT_RING_CAP);
+}
+
+// ---------------------------------------------------------------------------
+// Gateway hardening: read deadlines, bounded submit queue, chaos e2e
+// ---------------------------------------------------------------------------
+
+#[test]
+fn half_open_socket_is_dropped_at_the_read_deadline() {
+    use std::io::Read;
+
+    // A tiny read deadline: a client that sends a partial line and then
+    // goes silent must not pin its handler thread forever — the server
+    // drops the connection at the deadline and keeps serving others.
+    let cfg = SystemConfig { num_gpus: 1, ..SystemConfig::testbed() };
+    let plane = SingleNode::new(cfg, "miso", 1, TraceMode::Off).unwrap();
+    let opts = GatewayOpts { read_timeout: Duration::from_millis(200), ..Default::default() };
+    let server = start_plane_with(0, Box::new(plane), 60.0, opts).unwrap();
+    let addr = server.addr();
+
+    let mut half_open = TcpStream::connect(addr).unwrap();
+    half_open.write_all(b"STAT").unwrap(); // no newline — never a full request
+    half_open.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 8];
+    // The handler's read deadline fires, the handler returns, and the OS
+    // closes the socket — observed here as EOF (or a reset).
+    let n = half_open.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server kept a half-open connection past the read deadline");
+
+    // The gateway still answers honest clients afterwards.
+    let resp = send_lines(addr, &["STATUS"]);
+    let status = miso::util::json::parse(&resp[0]).unwrap();
+    assert_eq!(status.req_f64("nodes").unwrap(), 1.0);
+    assert_eq!(status.get("unhealthy"), Some(&Value::Bool(false)));
+    server.shutdown();
+}
+
+#[test]
+fn submit_burst_past_queue_cap_sheds_with_busy() {
+    use std::sync::{Arc, Barrier};
+
+    // Cap the per-tick submit queue at 1, then fire many submits at the
+    // same instant from parallel connections: within each controller
+    // tick only one is accepted, the overflow gets a typed BUSY reply,
+    // and — because shedding happens before a job id is assigned — the
+    // accepted jobs still receive dense consecutive ids (their placement
+    // stream is exactly what it would have been without the abuse).
+    let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+    let plane = SingleNode::new(cfg, "miso", 2, TraceMode::Full).unwrap();
+    let opts = GatewayOpts { submit_queue_cap: 1, ..Default::default() };
+    let server = start_plane_with(0, Box::new(plane), 60.0, opts).unwrap();
+    let addr = server.addr();
+
+    const CLIENTS: usize = 32;
+    let mut accepted_ids: Vec<u64> = Vec::new();
+    let mut busy = 0usize;
+    // A couple of rounds in case the scheduler spreads the first volley
+    // across ticks; one simultaneous volley is virtually always enough.
+    for _round in 0..3 {
+        let barrier = Arc::new(Barrier::new(CLIENTS));
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    barrier.wait();
+                    writeln!(stream, "SUBMIT ResNet50 0 30").unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    resp
+                })
+            })
+            .collect();
+        for w in workers {
+            let resp = w.join().unwrap();
+            let v = miso::util::json::parse(&resp).unwrap();
+            if v.get("ok") == Some(&Value::Bool(true)) {
+                accepted_ids.push(v.req_f64("job").unwrap() as u64);
+            } else {
+                assert!(resp.contains("BUSY"), "shed reply must be typed BUSY: {resp}");
+                busy += 1;
+            }
+        }
+        if busy > 0 {
+            break;
+        }
+    }
+    assert!(busy > 0, "no submit was shed across {CLIENTS}-client volleys");
+    assert!(!accepted_ids.is_empty(), "the cap must still admit work");
+
+    // Shed submissions never became jobs: accepted ids are dense from 0.
+    accepted_ids.sort_unstable();
+    let expect: Vec<u64> = (0..accepted_ids.len() as u64).collect();
+    assert_eq!(accepted_ids, expect, "shedding burned job ids / perturbed accepted submits");
+
+    // And the shed count is surfaced through STATS.
+    let resp = send_lines(addr, &["STATS"]);
+    let stats = miso::util::json::parse(&resp[0]).unwrap();
+    assert_eq!(
+        stats.req_f64("submits_shed").unwrap() as usize,
+        busy,
+        "every BUSY must count into submits_shed: {stats}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn fleet_gateway_survives_pool_death_and_reports_degraded() {
+    // ROADMAP PR-7 closure, end to end over TCP: a fleet gateway whose
+    // worker pool is killed mid-run must keep answering STATUS, report
+    // degraded: true with pool_failures >= 1 in STATS, and keep
+    // completing work on the sequential fallback path.
+    let fcfg = FleetConfig {
+        nodes: 2,
+        gpus_per_node: 1,
+        threads: 2, // a real pool, so there is something to kill
+        node_cfg: SystemConfig::testbed(),
+        telemetry: TraceMode::Full,
+        ..Default::default()
+    };
+    let plane = FleetPlane::new(&fcfg, "miso", 0x11FE, "round-robin").unwrap();
+    // Kill the pool one virtual second in — the gateway's scaled clock
+    // crosses that almost immediately at 240x.
+    let plan = FaultPlan::new(vec![FaultSpec { at_s: 1.0, kind: FaultKind::KillPool }]);
+    let chaos = ChaosPlane::new(Box::new(plane), plan);
+    let server = start_plane_with(0, Box::new(chaos), 240.0, GatewayOpts::default()).unwrap();
+    let addr = server.addr();
+
+    let resp = send_lines(addr, &["SUBMIT ResNet50 0 30", "SUBMIT ResNet50 0 30"]);
+    for r in &resp {
+        let v = miso::util::json::parse(r).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "{r}");
+    }
+
+    // Poll until the injected kill has fired and the fleet degraded.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let resp = send_lines(addr, &["STATUS", "STATS"]);
+        let status = miso::util::json::parse(&resp[0]).unwrap();
+        let stats = miso::util::json::parse(&resp[1]).unwrap();
+        if status.get("degraded") == Some(&Value::Bool(true))
+            && stats.req_f64("pool_failures").unwrap() >= 1.0
+        {
+            assert!(stats.req_f64("faults_injected").unwrap() >= 1.0, "{stats}");
+            // Degraded, not dead: no node failed, the plane stays healthy.
+            assert_eq!(status.req_f64("failed_nodes").unwrap(), 0.0, "{status}");
+            assert_eq!(status.get("unhealthy"), Some(&Value::Bool(false)), "{status}");
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "gateway never reported the pool death: {status} {stats}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // The degraded gateway keeps finishing work.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let resp = send_lines(addr, &["METRICS"]);
+        let m = miso::util::json::parse(&resp[0]).unwrap();
+        if m.req_f64("completed").unwrap() >= 2.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "degraded fleet stopped completing jobs: {m}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.shutdown();
 }

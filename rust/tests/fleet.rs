@@ -204,7 +204,7 @@ fn round_robin_spreads_arrivals_evenly() {
     jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
     for job in jobs {
         fleet.advance_all_to(job.arrival);
-        fleet.route_and_submit(&mut router, job);
+        fleet.route_and_submit(&mut router, job).unwrap();
     }
     assert_eq!(fleet.arrivals_per_node(), vec![10, 10, 10, 10]);
     fleet.drain();

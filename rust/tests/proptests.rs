@@ -4,6 +4,9 @@
 //! a small in-repo harness: deterministic seeded random generation with a
 //! per-case seed printed on failure (re-run with the seed to reproduce).
 
+use miso::control::{replay, ControlPlane, FleetPlane};
+use miso::fault::{ChaosPlane, FaultPlan};
+use miso::fleet::{make_router, FleetConfig, FleetEngine};
 use miso::gpu::GpuMode;
 use miso::mig::{MigConfig, SliceKind, ALL_CONFIGS};
 use miso::optimizer::{
@@ -825,6 +828,206 @@ fn prop_plan_cache_eviction_never_changes_digests() {
     // Across the cases the cap-2 cache must actually have overflowed —
     // otherwise this test exercises nothing.
     assert!(total_evictions.get() > 0, "cap-2 runs never evicted; overflow not exercised");
+}
+
+// ---------------------------------------------------------------- chaos plane
+
+/// A short fleet-shaped trace for the chaos pins: few enough jobs to run
+/// all five policies repeatedly, spread out enough that faults land
+/// between arrivals.
+fn chaos_trace(rng: &mut Rng) -> Vec<Job> {
+    TraceGenerator::new(TraceConfig {
+        num_jobs: 24 + rng.below(16),
+        mean_interarrival_s: 30.0 + rng.f64() * 60.0,
+        max_duration_s: 900.0,
+        min_duration_s: 60.0,
+        seed: rng.next_u64(),
+        ..Default::default()
+    })
+    .generate()
+}
+
+#[test]
+fn prop_chaos_plane_with_empty_plan_is_transparent() {
+    // Acceptance pin (DESIGN.md §8): wrapping any plane in a ChaosPlane
+    // with an *empty* fault plan must be a pure pass-through — metrics
+    // digests AND full telemetry fingerprint streams bit-identical to the
+    // unwrapped plane across all five policies, fleet and single-node
+    // shapes alike. Chaos that never fires costs nothing and changes
+    // nothing.
+    use miso::telemetry::TraceMode;
+    for_all("chaos-empty-plan-parity", 3, |rng| {
+        let trace = chaos_trace(rng);
+        let cfg = FleetConfig {
+            nodes: 2,
+            gpus_per_node: 1 + rng.below(2),
+            threads: 1,
+            telemetry: TraceMode::Full,
+            ..Default::default()
+        };
+        let seed = rng.next_u64();
+        for policy in ["miso", "oracle", "miso-migprof", "nopart", "mps-only"] {
+            let mut plain: Box<dyn ControlPlane> =
+                Box::new(FleetPlane::new(&cfg, policy, seed, "round-robin").unwrap());
+            replay(plain.as_mut(), &trace).unwrap();
+            let plain_events: Vec<String> =
+                plain.telemetry_events(usize::MAX).iter().map(|e| e.fingerprint()).collect();
+            let plain_digest = plain.finish().digest();
+
+            let inner = FleetPlane::new(&cfg, policy, seed, "round-robin").unwrap();
+            let mut chaos: Box<dyn ControlPlane> =
+                Box::new(ChaosPlane::new(Box::new(inner), FaultPlan::empty()));
+            replay(chaos.as_mut(), &trace).unwrap();
+            let chaos_events: Vec<String> =
+                chaos.telemetry_events(usize::MAX).iter().map(|e| e.fingerprint()).collect();
+            assert_eq!(chaos_events, plain_events, "{policy}: empty plan perturbed the traces");
+            assert_eq!(
+                chaos.finish().digest(),
+                plain_digest,
+                "{policy}: empty plan changed the run"
+            );
+        }
+        // Single-node shape: the serve-path wrapping must be equally inert.
+        let node_cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+        let mut plain: Box<dyn ControlPlane> = Box::new(
+            miso::control::SingleNode::new(node_cfg.clone(), "miso", seed, TraceMode::Full)
+                .unwrap(),
+        );
+        replay(plain.as_mut(), &trace).unwrap();
+        let plain_events: Vec<String> =
+            plain.telemetry_events(usize::MAX).iter().map(|e| e.fingerprint()).collect();
+        let plain_digest = plain.finish().digest();
+        let inner =
+            miso::control::SingleNode::new(node_cfg, "miso", seed, TraceMode::Full).unwrap();
+        let mut chaos: Box<dyn ControlPlane> =
+            Box::new(ChaosPlane::new(Box::new(inner), FaultPlan::empty()));
+        replay(chaos.as_mut(), &trace).unwrap();
+        let chaos_events: Vec<String> =
+            chaos.telemetry_events(usize::MAX).iter().map(|e| e.fingerprint()).collect();
+        assert_eq!(chaos_events, plain_events, "single-node: empty plan perturbed the traces");
+        assert_eq!(chaos.finish().digest(), plain_digest, "single-node: empty plan changed the run");
+    });
+}
+
+#[test]
+fn prop_seeded_chaos_runs_bit_identical_across_pool_sizes() {
+    // Acceptance pin: a *non-empty* seeded fault plan replayed twice, and
+    // across worker-pool sizes 1/2/8, must produce bit-identical metrics
+    // digests. Fault instants live in virtual time and recovery re-runs
+    // epochs sequentially, so injected chaos is as deterministic as the
+    // healthy path (CI named step `chaos-determinism`).
+    for_all("chaos-seeded-determinism", 3, |rng| {
+        let trace = chaos_trace(rng);
+        let horizon = trace.iter().map(|j| j.arrival).fold(1.0f64, f64::max);
+        let nodes = 3;
+        let plan = FaultPlan::seeded(rng.next_u64(), nodes, horizon, 4);
+        assert_eq!(plan.remaining(), 4);
+        let seed = rng.next_u64();
+        let run = |threads: usize| -> (bool, u64) {
+            let cfg = FleetConfig {
+                nodes,
+                gpus_per_node: 1,
+                threads,
+                ..Default::default()
+            };
+            let inner = FleetPlane::new(&cfg, "miso", seed, "round-robin").unwrap();
+            let mut plane: Box<dyn ControlPlane> =
+                Box::new(ChaosPlane::new(Box::new(inner), plan.clone()));
+            // A plan can legally strand the whole fleet (every node down at
+            // once) — then replay aborts with Unavailable; the abort itself
+            // must be reproducible, so compare (outcome, digest) pairs.
+            let ok = replay(plane.as_mut(), &trace).is_ok();
+            (ok, plane.finish().digest())
+        };
+        let base = run(1);
+        assert_eq!(run(1), base, "same plan + same pool diverged across runs");
+        assert_eq!(run(2), base, "pool size 2 diverged from pool size 1");
+        assert_eq!(run(8), base, "pool size 8 diverged from pool size 1");
+    });
+}
+
+#[test]
+fn prop_panic_restart_rejoin_never_loses_jobs() {
+    // Acceptance pin: after injected node panics — quarantine, backoff,
+    // rejoin, and (budget exhausted) permanent eviction — the fleet
+    // converges with every submitted job either completed or reported in
+    // `evicted_jobs`; nothing is silently dropped, and transplanted
+    // records still satisfy the stage-sum invariant.
+    use miso::telemetry::TraceMode;
+    let total_restarts = std::cell::Cell::new(0u64);
+    for_all("chaos-restart-no-loss", 6, |rng| {
+        let trace = chaos_trace(rng);
+        let nodes = 2 + rng.below(2);
+        let cfg = FleetConfig {
+            nodes,
+            gpus_per_node: 1,
+            threads: 1,
+            telemetry: TraceMode::Counters,
+            ..Default::default()
+        };
+        let mut fleet = FleetEngine::new(&cfg, "miso", rng.next_u64()).unwrap();
+        let mut router = make_router("round-robin").unwrap();
+        let mut views = Vec::new();
+        let mut arrivals = trace.clone();
+        arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        // Panic node 0 repeatedly — never the last node, so the fleet
+        // always keeps capacity — with enough attempts to exercise rejoin
+        // and, in some cases, budget-exhausted eviction.
+        let attempts: Vec<usize> =
+            (0..2 + rng.below(5)).map(|_| rng.below(arrivals.len())).collect();
+        let mut submitted = 0u64;
+        for (i, job) in arrivals.into_iter().enumerate() {
+            fleet.advance_all_to(job.arrival);
+            let _ = fleet.flush_orphans(router.as_mut(), &mut views);
+            if attempts.contains(&i) {
+                let _ = fleet.chaos_panic_node(0);
+            }
+            match fleet.route_and_submit(router.as_mut(), job) {
+                Ok(_) => submitted += 1,
+                Err(e) => panic!("fleet with a healthy node refused a submit: {e}"),
+            }
+        }
+        // Converge: a drain's rejoin pass runs *before* its epoch, so a
+        // node quarantined during one drain (frozen residents and all)
+        // needs a follow-up drain to rejoin and finish. Orphans always
+        // find a live node (node `nodes-1` is never faulted).
+        fleet.drain();
+        let mut rounds = 0;
+        while fleet.live_jobs() > 0 || fleet.has_orphans() {
+            rounds += 1;
+            assert!(rounds <= 16, "fleet failed to converge after {rounds} extra drains");
+            fleet.flush_orphans(router.as_mut(), &mut views).unwrap();
+            fleet.drain();
+        }
+        // One final drain so a node quarantined on the last epoch still
+        // performs its (counted) rejoin before we read the stats.
+        fleet.drain();
+        assert!(!fleet.all_nodes_failed(), "the never-faulted node cannot fail");
+        let stats = fleet.merged_stats();
+        assert!(stats.node_restarts + stats.node_evictions > 0, "no fault ever landed");
+        total_restarts.set(total_restarts.get() + stats.node_restarts);
+        let evicted = fleet.evicted_jobs().len() as u64;
+        let m = fleet.finish();
+        let completed = m.total_jobs() as u64;
+        assert_eq!(
+            completed + evicted,
+            submitted,
+            "jobs lost: {completed} completed + {evicted} evicted != {submitted} submitted"
+        );
+        for r in m.records() {
+            assert!(r.completion >= r.arrival, "job {} never completed", r.id);
+            assert!(
+                (r.stage_sum() - r.jct()).abs() < 1e-3,
+                "job {}: stages {} != jct {} after transplant",
+                r.id,
+                r.stage_sum(),
+                r.jct()
+            );
+        }
+    });
+    // Across the cases at least one quarantined node must actually have
+    // rejoined — otherwise the recovery path was never exercised.
+    assert!(total_restarts.get() > 0, "no case exercised a rejoin");
 }
 
 // ---------------------------------------------------------------- predictor
