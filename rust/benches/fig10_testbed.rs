@@ -22,7 +22,8 @@ fn main() {
 
     section("Fig. 10 regeneration (includes OptSta's 18-config offline search)");
     let t0 = std::time::Instant::now();
-    let results = run_headline_policies(&trace, &cfg, 42);
+    let results =
+        run_headline_policies(&trace, &cfg, 42).expect("testbed trace admits a static partition");
     println!("regenerated in {:.2} s\n", t0.elapsed().as_secs_f64());
 
     let base = results[0].1.avg_jct();

@@ -21,7 +21,8 @@ fn main() {
     section("single-trial cost at cluster scale (40 GPUs, 1000 jobs)");
     bench("NoPart cluster trial", || run(&mut NoPartPolicy::new(), &trace, cfg.clone()));
     bench("OptSta cluster trial", || {
-        run(&mut OptStaPolicy::abacus(), &trace, ideal.clone())
+        let mut p = OptStaPolicy::abacus().expect("(4g,2g,1g) is one of the 18 configs");
+        run(&mut p, &trace, ideal.clone())
     });
     bench("MISO cluster trial", || run(&mut MisoPolicy::paper(42), &trace, cfg.clone()));
     bench("Oracle cluster trial", || {

@@ -17,12 +17,13 @@ mod harness;
 use harness::{bench, section};
 use miso::mig::MigConfig;
 use miso::optimizer::{
-    objective_tolerance, optimize, optimize_bruteforce, optimize_cached, optimize_over, PlanCache,
-    SpeedupTable,
+    find_best_static_naive, objective_tolerance, optimize, optimize_bruteforce, optimize_cached,
+    optimize_over, PlanCache, SpeedupTable, StaticSearch,
 };
 use miso::util::json::Value;
 use miso::util::Rng;
-use miso::workload::TraceGenerator;
+use miso::workload::{TraceConfig, TraceGenerator};
+use miso::SystemConfig;
 
 fn tables(rng: &mut Rng, m: usize) -> Vec<SpeedupTable> {
     (0..m)
@@ -158,6 +159,82 @@ fn main() {
         ("uncached_p50_s", Value::num(uncached_p50)),
         ("speedup", Value::num(speedup)),
         ("hit_rate", Value::num(hit_rate)),
+    ]));
+
+    section("offline static search: naive 18x scan vs pruned+bounded+parallel");
+    // OptSta's offline search (the ISSUE-10 tentpole): one calibration
+    // trace, searched four ways. Memo capacity 0 on the timed searchers so
+    // every iteration re-runs the scan instead of replaying the memo; the
+    // memo layer is timed separately as the warm replay.
+    let strace = TraceGenerator::new(TraceConfig {
+        num_jobs: 48,
+        mean_interarrival_s: 20.0,
+        max_duration_s: 600.0,
+        min_duration_s: 30.0,
+        seed: 0x0CA7,
+        ..Default::default()
+    })
+    .generate();
+    let scfg = SystemConfig {
+        num_gpus: 4,
+        mig_reconfig_s: 0.0,
+        checkpoint_s: 0.0,
+        ..SystemConfig::testbed()
+    };
+
+    // Correctness gate before timing means anything: every layer combination
+    // must reproduce the naive scan's answer bit for bit.
+    let (naive_cfg, naive_m) =
+        find_best_static_naive(&strace, &scfg).expect("trace admits a static partition");
+    for (label, mut s) in [
+        ("pruned serial", StaticSearch::new(0).with_threads(1).with_bound(false)),
+        ("pruned+bounded serial", StaticSearch::new(0).with_threads(1)),
+        ("pruned+bounded+parallel", StaticSearch::new(0)),
+        ("memoized", StaticSearch::new(8)),
+    ] {
+        let (c, m) = s.find_best(&strace, &scfg).expect("trace admits a static partition");
+        assert_eq!(c, naive_cfg, "{label}: winner diverged from the naive scan");
+        assert_eq!(m.digest(), naive_m.digest(), "{label}: metrics diverged from the naive scan");
+    }
+
+    let naive_p50 = bench("naive 18x serial scan", || {
+        find_best_static_naive(&strace, &scfg).map(|(_, m)| m.avg_jct())
+    });
+    let pruned_p50 = bench("pruned serial (no bound)", || {
+        StaticSearch::new(0)
+            .with_threads(1)
+            .with_bound(false)
+            .find_best(&strace, &scfg)
+            .map(|(_, m)| m.avg_jct())
+    });
+    let full_p50 = bench("pruned + bounded + parallel", || {
+        StaticSearch::new(0).find_best(&strace, &scfg).map(|(_, m)| m.avg_jct())
+    });
+    let mut warm_search = StaticSearch::new(8);
+    warm_search.find_best(&strace, &scfg).expect("trace admits a static partition");
+    let memo_p50 = bench("trace-digest memo replay", || {
+        warm_search.find_best(&strace, &scfg).map(|(_, m)| m.avg_jct())
+    });
+    let search_speedup = naive_p50 / full_p50.max(1e-12);
+    println!(
+        "=> offline search speedup {search_speedup:.1}x (pruned-only {:.1}x, memo replay {:.0}x)",
+        naive_p50 / pruned_p50.max(1e-12),
+        naive_p50 / memo_p50.max(1e-12)
+    );
+    assert!(
+        search_speedup >= 2.0,
+        "pruned+bounded+parallel search must be ≥2x the naive 18-config sweep \
+         (naive {naive_p50}s vs {full_p50}s)"
+    );
+    assert!(warm_search.counters.hits > 0, "warm searcher never hit its memo");
+    records.push(Value::obj([
+        ("kind", Value::str("optsta-search")),
+        ("jobs", Value::num(strace.len() as f64)),
+        ("naive_p50_s", Value::num(naive_p50)),
+        ("pruned_p50_s", Value::num(pruned_p50)),
+        ("full_p50_s", Value::num(full_p50)),
+        ("memo_p50_s", Value::num(memo_p50)),
+        ("speedup", Value::num(search_speedup)),
     ]));
 
     // Perf-trajectory record: repo root if we can see it, else cwd.

@@ -37,7 +37,8 @@ fn main() {
     let cfg = SystemConfig::testbed();
     bench("NoPart", || run(&mut NoPartPolicy::new(), &trace, cfg.clone()));
     bench("OptSta (abacus static)", || {
-        run(&mut OptStaPolicy::abacus(), &trace, cfg.clone())
+        let mut p = OptStaPolicy::abacus().expect("(4g,2g,1g) is one of the 18 configs");
+        run(&mut p, &trace, cfg.clone())
     });
     bench("MPS-only", || run(&mut MpsOnlyPolicy::new(), &trace, cfg.clone()));
     bench("MISO", || run(&mut MisoPolicy::paper(7), &trace, cfg.clone()));

@@ -23,13 +23,18 @@ fn zero_overhead(cfg: &SystemConfig) -> SystemConfig {
 
 /// Run the four headline policies on one trace. Returns
 /// `(name, metrics)` in presentation order: NoPart, OptSta, MISO, Oracle.
-pub fn run_headline_policies(trace: &[Job], cfg: &SystemConfig, seed: u64) -> Vec<(&'static str, RunMetrics)> {
+/// Errors if the trace admits no static partition (OptSta undefined).
+pub fn run_headline_policies(
+    trace: &[Job],
+    cfg: &SystemConfig,
+    seed: u64,
+) -> Result<Vec<(&'static str, RunMetrics)>> {
     let nopart = sim::run(&mut NoPartPolicy::new(), trace, cfg.clone());
-    let (static_cfg, optsta) = find_best_static(trace, &zero_overhead(cfg));
+    let (static_cfg, optsta) = find_best_static(trace, &zero_overhead(cfg))?;
     eprintln!("  [optsta] best static partition: {static_cfg}");
     let miso = sim::run(&mut MisoPolicy::paper(seed), trace, cfg.clone());
     let oracle = sim::run(&mut MisoPolicy::oracle(), trace, zero_overhead(cfg));
-    vec![("NoPart", nopart), ("OptSta", optsta), ("MISO", miso), ("Oracle", oracle)]
+    Ok(vec![("NoPart", nopart), ("OptSta", optsta), ("MISO", miso), ("Oracle", oracle)])
 }
 
 fn print_fig10_table(results: &[(&'static str, RunMetrics)]) {
@@ -69,7 +74,7 @@ pub fn fig10() -> Result<Value> {
     println!("== Fig. 10: testbed comparison (8 GPUs, 100 jobs, λ=60 s) ==\n");
     let cfg = SystemConfig::testbed();
     let trace = TraceGenerator::new(TraceConfig::testbed(42)).generate();
-    let results = run_headline_policies(&trace, &cfg, 42);
+    let results = run_headline_policies(&trace, &cfg, 42)?;
     print_fig10_table(&results);
 
     let jct = |i: usize| results[i].1.avg_jct();
@@ -94,7 +99,7 @@ pub fn fig11() -> Result<Value> {
     println!("== Fig. 11: CDF of relative JCT per job ==\n");
     let cfg = SystemConfig::testbed();
     let trace = TraceGenerator::new(TraceConfig::testbed(42)).generate();
-    let results = run_headline_policies(&trace, &cfg, 42);
+    let results = run_headline_policies(&trace, &cfg, 42)?;
 
     println!(
         "{:<8} {:>10} {:>10} {:>12} {:>10}",
@@ -163,7 +168,7 @@ pub fn fig12() -> Result<Value> {
     println!("== Fig. 12: job lifecycle breakdown ==\n");
     let cfg = SystemConfig::testbed();
     let trace = TraceGenerator::new(TraceConfig::testbed(42)).generate();
-    let mut results = run_headline_policies(&trace, &cfg, 42);
+    let mut results = run_headline_policies(&trace, &cfg, 42)?;
 
     // The ablation: profile each job's MIG speedups *sequentially in MIG
     // mode* instead of concurrently in MPS (Sec. 4.1's costly alternative).
@@ -228,7 +233,7 @@ pub fn fig13() -> Result<Value> {
     let mut base: Option<(f64, f64)> = None; // (jct, makespan) of 1-job NoPart
     for n in 1..=10usize {
         let trace = TraceGenerator::generate_mix(100 + n as u64, n, work);
-        let results = run_headline_policies(&trace, &cfg, n as u64);
+        let results = run_headline_policies(&trace, &cfg, n as u64)?;
         let (b_jct, b_mk) = *base.get_or_insert_with(|| {
             (results[0].1.avg_jct(), results[0].1.makespan())
         });
@@ -321,7 +326,7 @@ pub fn fig16(trials: usize) -> Result<Value> {
     // OptSta's single static partition is chosen offline once (the paper's
     // "best static partition on average"), on a calibration trace.
     let calib = TraceGenerator::new(TraceConfig::cluster(0xCA11B)).generate();
-    let (static_cfg, _) = find_best_static(&calib[..300], &zero_overhead(&SystemConfig { num_gpus: 12, ..cfg.clone() }));
+    let (static_cfg, _) = find_best_static(&calib[..300], &zero_overhead(&SystemConfig { num_gpus: 12, ..cfg.clone() }))?;
     println!("offline best static partition: {static_cfg}\n");
 
     let mut jct = vec![Vec::new(); 3]; // OptSta, MISO, Oracle (normalized to NoPart)

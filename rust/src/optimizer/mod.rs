@@ -16,12 +16,21 @@
 //! Hungarian-style optimal matching — for which we use an exact O(m·2^m)
 //! bitmask DP (m ≤ 7 ⇒ ≤ 896 states), still well within the paper's 0.5 ms
 //! budget.
+//!
+//! The *offline* counterpart — OptSta's best-static-partition search over
+//! whole-trace simulations — lives in [`search`] (pruned + branch-and-bound
+//! + parallel + memoized, digest-pinned to the naive 18× scan).
 
 mod cache;
+pub mod search;
 
 pub use cache::{
     objective_tolerance, optimize_cached, pruned_config_indices, PlanCache,
     DEFAULT_PLAN_CACHE_CAP, QUANT_EPS, QUANT_SCALE,
+};
+pub use search::{
+    find_best_static_naive, search_counters, SearchCounters, SearchError, StaticSearch,
+    DEFAULT_SEARCH_MEMO_CAP,
 };
 
 use crate::mig::{enumerate_configs, MigConfig, SliceKind, ALL_CONFIGS};

@@ -26,6 +26,9 @@ pub use miso::{MisoPolicy, ProfilingMode};
 pub use mpsonly::MpsOnlyPolicy;
 pub use nopart::NoPartPolicy;
 pub use optsta::{find_best_static, OptStaPolicy};
+// Callers matching on `find_best_static` errors shouldn't need to know the
+// search implementation lives under `optimizer`.
+pub use crate::optimizer::SearchError;
 
 use crate::sim::Policy;
 

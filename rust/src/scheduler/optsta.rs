@@ -11,6 +11,7 @@ use crate::config::SystemConfig;
 use crate::gpu::GpuMode;
 use crate::metrics::RunMetrics;
 use crate::mig::MigConfig;
+use crate::optimizer::SearchError;
 use crate::perfmodel::mig_speed;
 use crate::sim::{ClusterState, Policy};
 use crate::workload::{Job, JobId};
@@ -25,14 +26,15 @@ impl OptStaPolicy {
     }
 
     /// The deployed-in-practice default from Abacus: (4g, 2g, 1g).
-    pub fn abacus() -> OptStaPolicy {
-        OptStaPolicy::new(
-            crate::mig::ALL_CONFIGS
-                .iter()
-                .find(|c| c.gpc_multiset() == vec![4, 2, 1])
-                .unwrap()
-                .clone(),
-        )
+    /// `None` if the enumeration ever lost that configuration — a
+    /// structural invariant (`mig::configs` tests pin it), surfaced as a
+    /// typed absence instead of a hidden panic.
+    pub fn abacus() -> Option<OptStaPolicy> {
+        crate::mig::ALL_CONFIGS
+            .iter()
+            .find(|c| c.gpc_multiset() == vec![4, 2, 1])
+            .cloned()
+            .map(OptStaPolicy::new)
     }
 
     fn drain(&mut self, st: &mut ClusterState) {
@@ -61,22 +63,35 @@ impl OptStaPolicy {
             let GpuMode::Mig { config, assignment } = &st.gpus[gpu].gpu.mode else {
                 return;
             };
-            // Iterate residents in slice order, not HashMap order: with a
+            // Iterate residents and free targets in (kind, slice-index)
+            // order, not raw offset order. Two reasons. Determinism: with a
             // strict '>' tie-break, equal-gain candidates (identical specs
-            // on same-kind slices) must resolve deterministically or runs
-            // diverge bit-for-bit (determinism pins, fleet digests).
-            let mut residents: Vec<(usize, JobId)> =
-                assignment.iter().map(|(&s, &j)| (s, j)).collect();
+            // on same-kind slices) must resolve the same way every run
+            // (determinism pins, fleet digests). Multiset-canonicality: raw
+            // offsets are layout-specific — two configs sharing a GPC
+            // multiset interleave their kinds differently along the memory
+            // slots — while (gpcs, index) keys make every tie resolve by
+            // kind first and by within-kind rank second, so the whole run
+            // is a pure function of the slice-kind multiset. That is the
+            // invariant the offline search's representative-per-multiset
+            // pruning rests on (optimizer::search; DESIGN.md §Perf
+            // "Offline static search").
+            let mut residents: Vec<(u8, usize, JobId)> = assignment
+                .iter()
+                .map(|(&s, &j)| (config.slices[s].kind.gpcs(), s, j))
+                .collect();
             residents.sort_unstable();
+            let mut targets: Vec<(u8, usize)> = (0..config.len())
+                .filter(|ti| !assignment.contains_key(ti))
+                .map(|ti| (config.slices[ti].kind.gpcs(), ti))
+                .collect();
+            targets.sort_unstable();
             let mut best_move: Option<(JobId, usize, f64)> = None;
-            for &(si, id) in &residents {
+            for &(_, si, id) in &residents {
                 let cur_kind = config.slices[si].kind;
                 let spec = st.jobs[&id].job.spec;
                 let cur = mig_speed(&spec, cur_kind);
-                for ti in 0..config.len() {
-                    if assignment.contains_key(&ti) {
-                        continue;
-                    }
+                for &(_, ti) in &targets {
                     let k = config.slices[ti].kind;
                     if !st.jobs[&id].job.fits(k) || spec.mem_mb > f64::from(k.memory_mb()) {
                         continue;
@@ -128,30 +143,19 @@ impl Policy for OptStaPolicy {
 
 /// Offline exhaustive search for the best static partition (lowest average
 /// JCT) over the 18 configurations — the "Opt" in OptSta. Returns the
-/// winning config and its metrics.
-pub fn find_best_static(trace: &[Job], cfg: &SystemConfig) -> (MigConfig, RunMetrics) {
-    let mut best: Option<(MigConfig, RunMetrics)> = None;
-    for config in crate::mig::ALL_CONFIGS.iter() {
-        // A static config is only admissible if every job in the trace fits
-        // its largest slice — otherwise the FCFS queue wedges forever.
-        let max_slice = config
-            .slices
-            .iter()
-            .map(|p| p.kind)
-            .max_by_key(|k| k.gpcs())
-            .unwrap();
-        let hosts_all = trace.iter().all(|j| {
-            j.fits(max_slice) && j.spec.mem_mb <= f64::from(max_slice.memory_mb())
-        });
-        if !hosts_all {
-            continue;
-        }
-        let mut policy = OptStaPolicy::new(config.clone());
-        let metrics = crate::sim::run(&mut policy, trace, cfg.clone());
-        let jct = metrics.avg_jct();
-        if best.as_ref().map_or(true, |(_, m)| jct < m.avg_jct()) {
-            best = Some((config.clone(), metrics));
-        }
-    }
-    best.expect("at least one config")
+/// winning config and its metrics, or [`SearchError::NoAdmissibleConfig`]
+/// when some job in the trace fits no configuration's largest slice (a
+/// static partition would wedge its FCFS queue forever).
+///
+/// Answer-preserving fast path: delegates to the offline search subsystem
+/// ([`crate::optimizer::StaticSearch`]) — multiset-pruned candidates,
+/// branch-and-bound bounded runs, parallel fan-out, and a process-wide
+/// trace-digest memo — which is digest-pinned against the literal 18×
+/// serial scan ([`crate::optimizer::find_best_static_naive`], the in-tree
+/// parity oracle).
+pub fn find_best_static(
+    trace: &[Job],
+    cfg: &SystemConfig,
+) -> Result<(MigConfig, RunMetrics), SearchError> {
+    crate::optimizer::search::find_best_static(trace, cfg)
 }

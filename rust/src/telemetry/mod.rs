@@ -385,6 +385,14 @@ pub struct Stats {
     /// Gateway submits shed with a `BUSY` reply by the bounded per-tick
     /// submit queue ([`crate::server`]).
     pub submits_shed: u64,
+    /// Offline static-search memo hits ([`crate::optimizer::StaticSearch`]).
+    pub optsta_search_hits: u64,
+    /// Offline static-search memo misses (full pruned parallel scans).
+    pub optsta_search_misses: u64,
+    /// Candidate simulations killed early by the summed-JCT lower bound.
+    pub optsta_search_aborts: u64,
+    /// Candidate configs skipped by multiset pruning in the offline search.
+    pub optsta_search_pruned: u64,
     pub jct_s: LogHistogram,
     pub queue_wait_s: LogHistogram,
     pub repartition_downtime_s: LogHistogram,
@@ -447,6 +455,10 @@ impl Stats {
         self.node_restarts += other.node_restarts;
         self.node_evictions += other.node_evictions;
         self.submits_shed += other.submits_shed;
+        self.optsta_search_hits += other.optsta_search_hits;
+        self.optsta_search_misses += other.optsta_search_misses;
+        self.optsta_search_aborts += other.optsta_search_aborts;
+        self.optsta_search_pruned += other.optsta_search_pruned;
         self.jct_s.merge(&other.jct_s);
         self.queue_wait_s.merge(&other.queue_wait_s);
         self.repartition_downtime_s.merge(&other.repartition_downtime_s);
@@ -475,6 +487,10 @@ impl Stats {
             ("node_restarts", Value::num(self.node_restarts as f64)),
             ("node_evictions", Value::num(self.node_evictions as f64)),
             ("submits_shed", Value::num(self.submits_shed as f64)),
+            ("optsta_search_hits", Value::num(self.optsta_search_hits as f64)),
+            ("optsta_search_misses", Value::num(self.optsta_search_misses as f64)),
+            ("optsta_search_aborts", Value::num(self.optsta_search_aborts as f64)),
+            ("optsta_search_pruned", Value::num(self.optsta_search_pruned as f64)),
             (
                 "histograms",
                 Value::obj([
@@ -491,7 +507,7 @@ impl Stats {
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         out.push_str("counters:\n");
-        let counters: [(&str, u64); 20] = [
+        let counters: [(&str, u64); 24] = [
             ("arrivals", self.arrivals),
             ("placements", self.placements),
             ("completions", self.completions),
@@ -512,6 +528,10 @@ impl Stats {
             ("node restarts", self.node_restarts),
             ("node evictions", self.node_evictions),
             ("submits shed", self.submits_shed),
+            ("optsta search hits", self.optsta_search_hits),
+            ("optsta search misses", self.optsta_search_misses),
+            ("optsta search aborts", self.optsta_search_aborts),
+            ("optsta search pruned", self.optsta_search_pruned),
         ];
         for (name, v) in counters {
             out.push_str(&format!("  {name:<24} {v}\n"));

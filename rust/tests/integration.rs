@@ -63,7 +63,8 @@ fn nopart_runs_and_conserves() {
 #[test]
 fn optsta_runs_and_conserves() {
     let trace = small_trace(2);
-    let m = run(&mut OptStaPolicy::abacus(), &trace, testbed());
+    let mut abacus = OptStaPolicy::abacus().expect("(4g,2g,1g) is one of the 18 configs");
+    let m = run(&mut abacus, &trace, testbed());
     check_conservation(&m, trace.len());
 }
 
@@ -104,7 +105,8 @@ fn paper_ordering_holds_on_congested_trace() {
     let cfg = testbed();
 
     let nopart = run(&mut NoPartPolicy::new(), &trace, cfg.clone());
-    let (_, optsta) = miso::scheduler::find_best_static(&trace, &cfg);
+    let (_, optsta) =
+        miso::scheduler::find_best_static(&trace, &cfg).expect("trace admits a static partition");
     let miso_m = run(&mut MisoPolicy::paper(11), &trace, cfg.clone());
     let oracle = run(&mut MisoPolicy::oracle(), &trace, zero_overhead());
 
@@ -247,14 +249,33 @@ fn phased_multi_instance_trace_conserves_across_policies() {
     })
     .generate();
     let cfg = SystemConfig { num_gpus: 2, ..SystemConfig::testbed() };
+    let mut abacus = OptStaPolicy::abacus().expect("(4g,2g,1g) is one of the 18 configs");
     for policy in [
         &mut MisoPolicy::paper(1) as &mut dyn Policy,
         &mut MisoPolicy::oracle(),
         &mut MpsOnlyPolicy::new(),
-        &mut OptStaPolicy::abacus(),
+        &mut abacus,
         &mut NoPartPolicy::new(),
     ] {
         let m = run(policy, &trace, cfg.clone());
         check_conservation(&m, trace.len());
     }
+}
+
+#[test]
+fn find_best_static_rejects_all_inadmissible_trace_with_typed_error() {
+    // Regression: this used to panic on `best.expect("at least one config")`.
+    // A job whose footprint exceeds even the full 7g.40gb slice admits no
+    // static partition; callers get a typed error instead.
+    let mut spec = miso::workload::WorkloadSpec::mlp();
+    spec.mem_mb = 80_000.0;
+    let trace = vec![miso::workload::Job::new(0, spec, 0.0, 100.0)];
+    assert_eq!(
+        miso::scheduler::find_best_static(&trace, &testbed()).err(),
+        Some(miso::scheduler::SearchError::NoAdmissibleConfig)
+    );
+    assert_eq!(
+        miso::optimizer::find_best_static_naive(&trace, &testbed()).err(),
+        Some(miso::scheduler::SearchError::NoAdmissibleConfig)
+    );
 }

@@ -10,7 +10,8 @@ use miso::fleet::{make_router, FleetConfig, FleetEngine};
 use miso::gpu::GpuMode;
 use miso::mig::{MigConfig, SliceKind, ALL_CONFIGS};
 use miso::optimizer::{
-    objective_tolerance, optimize, optimize_bruteforce, optimize_cached, PlanCache, SpeedupTable,
+    find_best_static_naive, objective_tolerance, optimize, optimize_bruteforce, optimize_cached,
+    PlanCache, SearchError, SpeedupTable, StaticSearch,
 };
 use miso::perfmodel::{mig_speed, mps_speeds, MpsLevel};
 use miso::predictor::features::profile_mps_matrix;
@@ -241,7 +242,7 @@ fn prop_simulation_conserves_under_any_policy() {
         };
         let policies: Vec<Box<dyn Policy>> = vec![
             Box::new(NoPartPolicy::new()),
-            Box::new(OptStaPolicy::abacus()),
+            Box::new(abacus_policy()),
             Box::new(MisoPolicy::paper(rng.next_u64())),
             Box::new(MisoPolicy::oracle()),
             Box::new(MpsOnlyPolicy::new()),
@@ -330,10 +331,14 @@ fn adversarial_trace(rng: &mut Rng) -> Vec<Job> {
     trace
 }
 
+fn abacus_policy() -> OptStaPolicy {
+    OptStaPolicy::abacus().expect("(4g,2g,1g) is one of the 18 configs")
+}
+
 fn all_policies(seed: u64) -> Vec<Box<dyn Policy>> {
     vec![
         Box::new(NoPartPolicy::new()),
-        Box::new(OptStaPolicy::abacus()),
+        Box::new(abacus_policy()),
         Box::new(MisoPolicy::paper(seed)),
         Box::new(MisoPolicy::oracle()),
         Box::new(MpsOnlyPolicy::new()),
@@ -669,7 +674,7 @@ fn prop_zero_work_jobs_complete_even_when_never_placed() {
 fn all_policies_with_caches(seed: u64, make_cache: impl Fn() -> PlanCache) -> Vec<Box<dyn Policy>> {
     vec![
         Box::new(NoPartPolicy::new()),
-        Box::new(OptStaPolicy::abacus()),
+        Box::new(abacus_policy()),
         Box::new(MisoPolicy::paper(seed).with_plan_cache(make_cache())),
         Box::new(MisoPolicy::oracle().with_plan_cache(make_cache())),
         Box::new(MpsOnlyPolicy::new()),
@@ -1078,4 +1083,121 @@ fn prop_noisy_predictor_error_scales_with_sigma() {
     let low = mae_at(0.01);
     let high = mae_at(0.10);
     assert!(high > 3.0 * low, "noise must scale: {low} vs {high}");
+}
+
+// ---------------------------------------------------------- offline search
+
+/// Adversarial trace for the offline static-partition search: the
+/// generator's mix plus zero-work jobs, phase changes, and memory-bound
+/// jobs that gate which configs are admissible — occasionally one no
+/// config can host at all (the typed-error path).
+fn search_trace(rng: &mut Rng) -> Vec<Job> {
+    let mut trace = TraceGenerator::new(TraceConfig {
+        num_jobs: 8 + rng.below(8),
+        mean_interarrival_s: 5.0 + rng.f64() * 40.0,
+        max_duration_s: 600.0,
+        min_duration_s: 30.0,
+        phase_change_prob: 0.4,
+        seed: rng.next_u64(),
+        ..Default::default()
+    })
+    .generate();
+    for (i, j) in trace.iter_mut().enumerate() {
+        if i % 5 == 0 {
+            j.work = 0.0;
+            j.phase = None;
+        }
+        if i % 4 == 1 {
+            // Memory-bound: admissible only on configs with a ≥20 GB slice.
+            j.spec.mem_mb = 15_000.0;
+            j.requirements.min_memory_mb = 16_500.0;
+        }
+    }
+    if rng.bool(0.15) {
+        // All-inadmissible: one job overflowing even the 7g.40gb slice.
+        let k = rng.below(trace.len());
+        trace[k].spec.mem_mb = 80_000.0;
+    }
+    trace
+}
+
+#[test]
+fn prop_static_search_parity_with_naive_scan() {
+    // The tentpole acceptance property (run by CI as `optsta-search-parity`):
+    // pruned + branch-and-bound + parallel + memoized search returns the
+    // identical (MigConfig, RunMetrics) — digest-equal — to the naive 18×
+    // serial scan, at any thread count and any memo capacity (including
+    // 0 = disabled), with repeat calls replaying from the memo bit-for-bit,
+    // and Err parity on all-inadmissible traces.
+    for_all("optsta-search-parity", 5, |rng| {
+        let trace = search_trace(rng);
+        let cfg = SystemConfig {
+            num_gpus: 1 + rng.below(3),
+            mig_reconfig_s: 0.0,
+            checkpoint_s: 0.0,
+            ..SystemConfig::testbed()
+        };
+        let naive = find_best_static_naive(&trace, &cfg);
+        for threads in [1usize, 2, 8] {
+            for cap in [0usize, 2, 64] {
+                let mut s = StaticSearch::new(cap).with_threads(threads);
+                for pass in 0..2 {
+                    match (&naive, s.find_best(&trace, &cfg)) {
+                        (Ok((nc, nm)), Ok((c, m))) => {
+                            assert_eq!(*nc, c, "config: threads={threads} cap={cap} pass={pass}");
+                            assert_eq!(
+                                nm.digest(),
+                                m.digest(),
+                                "metrics: threads={threads} cap={cap} pass={pass}"
+                            );
+                        }
+                        (Err(e), Err(f)) => {
+                            assert_eq!(*e, f);
+                            assert_eq!(*e, SearchError::NoAdmissibleConfig);
+                        }
+                        (a, b) => panic!(
+                            "admissibility parity broke: naive ok={} search ok={} (threads={threads} cap={cap} pass={pass})",
+                            a.is_ok(),
+                            b.is_ok()
+                        ),
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_static_search_memo_eviction_never_changes_results() {
+    // Eviction neutrality: cycling more distinct (trace, config) keys than
+    // a tiny memo holds must return exactly what a memo-less searcher
+    // returns, every round — the memo can drop entries, never corrupt them.
+    for_all("optsta-search-memo-eviction", 3, |rng| {
+        let cfg = SystemConfig {
+            num_gpus: 2,
+            mig_reconfig_s: 0.0,
+            checkpoint_s: 0.0,
+            ..SystemConfig::testbed()
+        };
+        let traces: Vec<Vec<Job>> = (0..4).map(|_| search_trace(rng)).collect();
+        let mut tiny = StaticSearch::new(2).with_threads(2);
+        let mut off = StaticSearch::new(0).with_threads(2);
+        for round in 0..2 {
+            for (ti, trace) in traces.iter().enumerate() {
+                match (tiny.find_best(trace, &cfg), off.find_best(trace, &cfg)) {
+                    (Ok((c1, m1)), Ok((c2, m2))) => {
+                        assert_eq!(c1, c2, "round={round} trace={ti}");
+                        assert_eq!(m1.digest(), m2.digest(), "round={round} trace={ti}");
+                    }
+                    (Err(a), Err(b)) => assert_eq!(a, b, "round={round} trace={ti}"),
+                    (a, b) => panic!(
+                        "eviction broke admissibility parity: tiny ok={} off ok={} (round={round} trace={ti})",
+                        a.is_ok(),
+                        b.is_ok()
+                    ),
+                }
+            }
+        }
+        assert!(tiny.len() <= 2, "capacity-2 memo must stay bounded");
+    });
 }
